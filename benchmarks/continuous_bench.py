@@ -1,0 +1,74 @@
+"""Fig. 5 reproduction: continuous-query performance.
+
+(a) vary the materialized-view memory budget at fixed workload;
+(b) vary the number of registered queries at fixed budget.
+Engines: ARCADE (no reuse), ARCADE+F (full-result cache), ARCADE+S (ours).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks import tracy
+from repro.core import query as q
+from repro.core.continuous import ContinuousEngine
+
+MODES = {"arcade": "none", "arcade_f": "fcache", "arcade_s": "views"}
+
+
+def _make_queries(data: tracy.TracyData, n: int) -> List[q.SyncQuery]:
+    out = []
+    for i in range(n):
+        if i % 2 == 0:
+            out.append(q.SyncQuery(q.HybridQuery(
+                ranks=[q.VectorRank("embedding", data.query_vec(), 1.0)],
+                k=10), interval_s=1.0))
+        else:
+            out.append(q.SyncQuery(q.HybridQuery(
+                filters=[q.GeoWithin("coordinate", data.rect(12))]),
+                interval_s=1.0))
+    return out
+
+
+def run_continuous(n_rows: int = 5000, n_queries: int = 12,
+                   budget_mb: float = 4.0, ticks: int = 4,
+                   mode: str = "views", seed: int = 0) -> Dict[str, float]:
+    cfg = tracy.TracyConfig(n_rows=n_rows, seed=seed, dim=64)
+    store, data = tracy.build_store(cfg)
+    eng = ContinuousEngine(store, mode=mode,
+                           view_budget_bytes=budget_mb * 2**20)
+    for decl in _make_queries(data, n_queries):
+        eng.register(decl)
+    t0 = time.perf_counter()
+    for t in range(ticks):
+        eng.advance(float(t))
+        pks, batch = data.batch(64)       # interleaved ingest
+        store.put(pks, batch)
+    dt = time.perf_counter() - t0
+    ex = eng.metrics["executions"] or 1
+    return {"avg_exec_ms": dt / ex * 1e3,
+            "view_hits": eng.metrics["view_hits"],
+            "cache_hits": eng.metrics["cache_hits"]}
+
+
+def bench(scale: float = 1.0) -> List[str]:
+    rows = []
+    n_rows = int(5000 * scale)
+    # (a) budget sweep
+    for budget in (0.25, 1.0, 4.0):
+        for name, mode in MODES.items():
+            r = run_continuous(n_rows=n_rows, budget_mb=budget, mode=mode)
+            rows.append(f"fig5a_budget{budget}MB_{name},"
+                        f"{r['avg_exec_ms'] * 1e3:.0f},"
+                        f"view_hits={r['view_hits']};"
+                        f"cache_hits={r['cache_hits']}")
+    # (b) #queries sweep at fixed budget
+    for nq in (4, 12, 24):
+        for name, mode in MODES.items():
+            r = run_continuous(n_rows=n_rows, n_queries=nq, budget_mb=1.0,
+                               mode=mode)
+            rows.append(f"fig5b_q{nq}_{name},{r['avg_exec_ms'] * 1e3:.0f},"
+                        f"view_hits={r['view_hits']}")
+    return rows

@@ -1,0 +1,59 @@
+"""Fig. 4 reproduction: dynamic workloads with interleaved writes+queries.
+
+Write-heavy (1:9 read:write) and read-heavy (9:1) scenarios over the
+TRACY workload; hybrid-search, hybrid-NN and mixed query streams; ARCADE
+vs in-system baseline strategies. Metric: total wall time (lower is
+better), plus block-read counters.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks import baselines as bl
+from benchmarks import tracy
+from repro.core import query as q
+
+
+def run_dynamic(n_rows: int = 6000, n_ops: int = 100, read_frac: float = 0.9,
+                workload: str = "mixed", engine: str = "arcade",
+                seed: int = 0) -> Dict[str, float]:
+    cfg = tracy.TracyConfig(n_rows=n_rows, seed=seed, dim=64)
+    store, data = tracy.build_store(cfg)
+    search_t, nn_t = tracy.make_templates(data)
+    templates = {"search": search_t, "nn": nn_t,
+                 "mixed": search_t + nn_t}[workload]
+    ex = bl.EXECUTORS[engine](store)
+    rng = np.random.default_rng(seed + 1)
+
+    t0 = time.perf_counter()
+    blocks = 0.0
+    reads = writes = 0
+    for i in range(n_ops):
+        if rng.random() < read_frac:
+            tmpl = templates[rng.integers(0, len(templates))]
+            _, st = ex.execute(tmpl())
+            blocks += st.blocks_read
+            reads += 1
+        else:
+            pks, batch = data.batch(64)
+            store.put(pks, batch)
+            writes += 1
+    dt = time.perf_counter() - t0
+    return {"wall_s": dt, "blocks": blocks, "reads": reads,
+            "writes": writes, "us_per_op": dt / n_ops * 1e6}
+
+
+def bench(scale: float = 1.0) -> List[str]:
+    rows = []
+    n_rows = int(6000 * scale)
+    n_ops = max(20, int(60 * scale))
+    for scenario, rf in (("write_heavy", 0.1), ("read_heavy", 0.9)):
+        for engine in ("arcade", "single_index", "segment_full_load"):
+            r = run_dynamic(n_rows=n_rows, n_ops=n_ops, read_frac=rf,
+                            engine=engine)
+            rows.append(f"fig4_{scenario}_{engine},{r['us_per_op']:.0f},"
+                        f"blocks={r['blocks']:.0f}")
+    return rows

@@ -1,0 +1,52 @@
+"""Table 1 reproduction: average hybrid-query latency, ARCADE vs the
+baseline strategies (each implementing one competitor's design point)."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks import baselines as bl
+from benchmarks import tracy
+
+
+def run_latency(n_rows: int = 6000, n_queries: int = 30,
+                kind: str = "search", engine: str = "arcade",
+                seed: int = 0) -> Dict[str, float]:
+    cfg = tracy.TracyConfig(n_rows=n_rows, seed=seed, dim=64)
+    store, data = tracy.build_store(cfg)
+    search_t, nn_t = tracy.make_templates(data)
+    templates = search_t if kind == "search" else nn_t
+    ex = bl.EXECUTORS[engine](store)
+    rng = np.random.default_rng(seed + 2)
+
+    # warm
+    ex.execute(templates[0]())
+    lat = []
+    blocks = 0.0
+    for i in range(n_queries):
+        tmpl = templates[rng.integers(0, len(templates))]
+        query = tmpl()
+        t0 = time.perf_counter()
+        _, st = ex.execute(query)
+        lat.append(time.perf_counter() - t0)
+        blocks += st.blocks_read
+    return {"avg_ms": float(np.mean(lat) * 1e3),
+            "p95_ms": float(np.percentile(lat, 95) * 1e3),
+            "blocks_per_q": blocks / n_queries}
+
+
+def bench(scale: float = 1.0) -> List[str]:
+    rows = []
+    n_rows = int(6000 * scale)
+    nq = max(10, int(25 * scale))
+    for kind in ("search", "nn"):
+        for engine in ("arcade", "single_index", "segment_full_load",
+                       "full_scan"):
+            r = run_latency(n_rows=n_rows, n_queries=nq, kind=kind,
+                            engine=engine)
+            rows.append(
+                f"tab1_{kind}_{engine},{r['avg_ms'] * 1e3:.0f},"
+                f"p95_ms={r['p95_ms']:.1f};blocks={r['blocks_per_q']:.0f}")
+    return rows

@@ -1,0 +1,49 @@
+"""Ingestion-throughput study (paper §1: global in-memory vector index
+"caused the ingestion throughput to drop by as much as 75x").
+
+ARCADE's background per-segment index build vs a synchronous global
+in-memory IVF on the write path.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks import baselines as bl
+from benchmarks import tracy
+from repro.core.lsm import LSMConfig, LSMStore
+
+
+def run_ingestion(n_rows: int = 8000, batch: int = 256, mode: str = "arcade",
+                  seed: int = 0) -> Dict[str, float]:
+    cfg = tracy.TracyConfig(n_rows=0, seed=seed, dim=64)
+    data = tracy.TracyData(cfg)
+    store = LSMStore(tracy.tweet_schema(64), LSMConfig(flush_rows=2048))
+    writer = bl.GlobalIndexWriter(store, dim=64, rebuild_every=1024) \
+        if mode == "global_index" else None
+    t0 = time.perf_counter()
+    done = 0
+    while done < n_rows:
+        pks, b = data.batch(batch)
+        if writer is not None:
+            writer.put(pks, b)
+        else:
+            store.put(pks, b)
+        done += batch
+    dt = time.perf_counter() - t0
+    return {"rows_per_s": n_rows / dt, "wall_s": dt}
+
+
+def bench(scale: float = 1.0) -> List[str]:
+    n = int(8000 * scale)
+    rows = []
+    a = run_ingestion(n_rows=n, mode="arcade")
+    g = run_ingestion(n_rows=n, mode="global_index")
+    rows.append(f"ingest_arcade,{1e6 / a['rows_per_s']:.1f},"
+                f"rows_per_s={a['rows_per_s']:.0f}")
+    rows.append(f"ingest_global_index,{1e6 / g['rows_per_s']:.1f},"
+                f"rows_per_s={g['rows_per_s']:.0f};"
+                f"slowdown={a['rows_per_s'] / g['rows_per_s']:.1f}x")
+    return rows

@@ -1,0 +1,62 @@
+"""PQ-IVF study (paper §2.1: VECTOR_INDEX_TYPE 'pqivf'): recall/latency/
+memory trade-off of product quantization vs plain IVF on the TRACY
+embedding workload. ADC runs through the one-hot-matmul kernel semantics
+(kernels/pq_adc.py) with exact re-ranking."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks import tracy
+from repro.core.types import IndexKind
+from repro.kernels import ops as kops
+
+
+def run_pq(n_rows: int = 6000, n_queries: int = 25, k: int = 10,
+           seed: int = 0):
+    out = {}
+    for kind, name in ((IndexKind.IVF, "ivf"), (IndexKind.PQIVF, "pqivf")):
+        cfg = tracy.TracyConfig(n_rows=n_rows, seed=seed, dim=64)
+        store, data = tracy.build_store(cfg, vector_index=kind)
+        # exact ground truth over all segments
+        vecs = np.concatenate([s.columns["embedding"]
+                               for s in store.segments])
+        pks = np.concatenate([s.pk for s in store.segments])
+        rng = np.random.default_rng(seed + 5)
+        lat, recall, idx_bytes = [], [], 0
+        for seg in store.segments:
+            idx = seg.indexes["embedding"]
+            idx_bytes += idx.post_vecs.nbytes + idx.centroids.nbytes
+            if idx.codes is not None:
+                idx_bytes += idx.codes.nbytes + idx.codebooks.nbytes
+        for _ in range(n_queries):
+            qv = data.query_vec()
+            d = np.sqrt(((vecs - qv) ** 2).sum(1))
+            truth = set(pks[np.argsort(d)[:k]].tolist())
+            t0 = time.perf_counter()
+            got = []
+            for seg in store.segments:
+                dd, rows, _ = seg.indexes["embedding"].search(qv, k)
+                got += [(float(x), int(seg.pk[r]))
+                        for x, r in zip(dd, rows)]
+            got.sort()
+            lat.append(time.perf_counter() - t0)
+            recall.append(len(set(p for _, p in got[:k]) & truth) / k)
+        out[name] = {
+            "avg_ms": float(np.mean(lat) * 1e3),
+            "recall": float(np.mean(recall)),
+            "index_mb": idx_bytes / 2**20,
+        }
+    return out
+
+
+def bench(scale: float = 1.0) -> List[str]:
+    r = run_pq(n_rows=int(6000 * scale))
+    rows = []
+    for name, v in r.items():
+        rows.append(f"pq_{name},{v['avg_ms'] * 1e3:.0f},"
+                    f"recall@10={v['recall']:.2f};"
+                    f"index_mb={v['index_mb']:.1f}")
+    return rows

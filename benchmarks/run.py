@@ -1,0 +1,45 @@
+"""Benchmark harness — one section per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (assignment contract).
+
+  fig4_*   — dynamic workloads, write/read-heavy (paper Fig. 4)
+  tab1_*   — hybrid query latency vs baseline strategies (paper Table 1)
+  fig5a/b_* — continuous queries: budget / #queries sweeps (paper Fig. 5)
+  ingest_* — ingestion throughput vs global in-memory index (paper §1)
+
+``--scale`` shrinks/grows the workload (CPU container default 1.0).
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig4,tab1,fig5,ingest")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (continuous_bench, dynamic_workload,
+                            hybrid_latency, ingestion, pq_study)
+    sections = [
+        ("tab1", hybrid_latency.bench),
+        ("fig4", dynamic_workload.bench),
+        ("fig5", continuous_bench.bench),
+        ("ingest", ingestion.bench),
+        ("pq", pq_study.bench),
+    ]
+    print("name,us_per_call,derived")
+    for name, fn in sections:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        for row in fn(scale=args.scale):
+            print(row, flush=True)
+        print(f"# section {name} took {time.time() - t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

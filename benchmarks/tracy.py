@@ -1,0 +1,175 @@
+"""TRACY-like benchmark workload (paper §7.1): Tweet hybRid And Continuous
+querY. Synthetic stand-ins for the Tweet/POI/City tables (33M/7M/186K in
+the paper; CPU-scaled here) with 128-d embeddings, geo coordinates and
+text, plus the paper's 11 parameterized hybrid query templates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Tuple
+
+import numpy as np
+
+from repro.core import query as q
+from repro.core.lsm import LSMConfig, LSMStore
+from repro.core.types import Column, ColumnType, IndexKind, Schema
+
+TOPICS = ["sports", "music", "food", "travel", "tech", "finance",
+          "weather", "movies", "health", "politics"]
+
+
+def tweet_schema(dim: int = 128, vector_index: IndexKind = IndexKind.IVF
+                 ) -> Schema:
+    return Schema([
+        Column("embedding", ColumnType.VECTOR, dim=dim, index=vector_index),
+        Column("coordinate", ColumnType.SPATIAL, index=IndexKind.ZORDER),
+        Column("content", ColumnType.TEXT, index=IndexKind.INVERTED),
+        Column("time", ColumnType.SCALAR, index=IndexKind.BTREE),
+        Column("likes", ColumnType.SCALAR, index=IndexKind.BTREE),
+    ])
+
+
+@dataclasses.dataclass
+class TracyConfig:
+    n_rows: int = 8000           # pre-loaded tweets (paper: 8M)
+    dim: int = 128
+    seed: int = 0
+    flush_rows: int = 2048
+    # topic centers give embeddings cluster structure (semantic search)
+    n_topics: int = 10
+
+
+class TracyData:
+    def __init__(self, cfg: TracyConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        self.rng = rng
+        self.topic_centers = rng.normal(
+            size=(cfg.n_topics, cfg.dim)).astype(np.float32)
+        self._next_pk = 0
+
+    def batch(self, n: int) -> Tuple[List[int], Dict[str, np.ndarray]]:
+        rng = self.rng
+        cfg = self.cfg
+        topics = rng.integers(0, cfg.n_topics, n)
+        emb = (self.topic_centers[topics]
+               + 0.4 * rng.normal(size=(n, cfg.dim))).astype(np.float32)
+        pts = rng.uniform(0, 100, (n, 2)).astype(np.float32)
+        words = [f"{TOPICS[t]} {TOPICS[rng.integers(0, cfg.n_topics)]} "
+                 f"w{rng.integers(0, 50)}" for t in topics]
+        batch = {
+            "embedding": emb,
+            "coordinate": pts,
+            "content": np.asarray(words, object),
+            "time": rng.uniform(0, 1000, n),
+            "likes": rng.zipf(2.0, n).astype(np.float64),
+        }
+        pks = list(range(self._next_pk, self._next_pk + n))
+        self._next_pk += n
+        return pks, batch
+
+    def query_vec(self) -> np.ndarray:
+        t = self.rng.integers(0, self.cfg.n_topics)
+        v = self.topic_centers[t] + 0.2 * self.rng.normal(size=self.cfg.dim)
+        return v.astype(np.float32)
+
+    def rect(self, side: float = 10.0) -> Tuple[float, float, float, float]:
+        x, y = self.rng.uniform(0, 100 - side, 2)
+        return (float(x), float(y), float(x + side), float(y + side))
+
+
+def build_store(cfg: TracyConfig,
+                vector_index: IndexKind = IndexKind.IVF
+                ) -> Tuple[LSMStore, TracyData]:
+    data = TracyData(cfg)
+    store = LSMStore(tweet_schema(cfg.dim, vector_index),
+                     LSMConfig(flush_rows=cfg.flush_rows))
+    done = 0
+    while done < cfg.n_rows:
+        n = min(2048, cfg.n_rows - done)
+        pks, batch = data.batch(n)
+        store.put(pks, batch)
+        done += n
+    store.flush()
+    return store, data
+
+
+# ---------------------------------------------------------------------------
+# the 11 hybrid query templates (paper: "11 parameterized hybrid query
+# templates ... varying combinations of filter predicates and ranking
+# conditions over embedding, spatial and text attributes")
+# ---------------------------------------------------------------------------
+
+def make_templates(data: TracyData):
+    d = data
+
+    def t1():   # vector range + text (Type 1 example in §2.2)
+        return q.HybridQuery(filters=[
+            q.VectorRange("embedding", d.query_vec(), 8.0),
+            q.TextContains("content", TOPICS[d.rng.integers(0, 10)])])
+
+    def t2():   # scalar range + spatial region
+        lo = float(d.rng.uniform(0, 900))
+        return q.HybridQuery(filters=[
+            q.Range("time", lo, lo + 50),
+            q.GeoWithin("coordinate", d.rect(15))])
+
+    def t3():   # triple-modality filter
+        lo = float(d.rng.uniform(0, 900))
+        return q.HybridQuery(filters=[
+            q.Range("time", lo, lo + 100),
+            q.TextContains("content", TOPICS[d.rng.integers(0, 10)]),
+            q.GeoWithin("coordinate", d.rect(25))])
+
+    def t4():   # highly selective scalar
+        lo = float(d.rng.uniform(0, 990))
+        return q.HybridQuery(filters=[q.Range("time", lo, lo + 2)])
+
+    def t5():   # popularity + region
+        return q.HybridQuery(filters=[
+            q.Range("likes", 5, 1e9),
+            q.GeoWithin("coordinate", d.rect(20))])
+
+    def t6():   # pure vector NN
+        return q.HybridQuery(ranks=[
+            q.VectorRank("embedding", d.query_vec(), 1.0)], k=10)
+
+    def t7():   # vector + spatial joint ranking (Type 2 example in §2.2)
+        x, y = d.rng.uniform(10, 90, 2)
+        return q.HybridQuery(ranks=[
+            q.VectorRank("embedding", d.query_vec(), 0.5),
+            q.SpatialRank("coordinate", (float(x), float(y)), 0.2)], k=10)
+
+    def t8():   # vector NN with time filter
+        lo = float(d.rng.uniform(0, 800))
+        return q.HybridQuery(
+            filters=[q.Range("time", lo, lo + 200)],
+            ranks=[q.VectorRank("embedding", d.query_vec(), 1.0)], k=10)
+
+    def t9():   # vector + text relevance joint ranking
+        return q.HybridQuery(ranks=[
+            q.VectorRank("embedding", d.query_vec(), 1.0),
+            q.TextRank("content", (TOPICS[d.rng.integers(0, 10)],), 0.5)],
+            k=10)
+
+    def t10():  # spatial NN with text filter
+        x, y = d.rng.uniform(10, 90, 2)
+        return q.HybridQuery(
+            filters=[q.TextContains("content",
+                                    TOPICS[d.rng.integers(0, 10)])],
+            ranks=[q.SpatialRank("coordinate", (float(x), float(y)), 1.0)],
+            k=10)
+
+    def t11():  # 3-way joint ranking with filter
+        x, y = d.rng.uniform(10, 90, 2)
+        lo = float(d.rng.uniform(0, 800))
+        return q.HybridQuery(
+            filters=[q.Range("time", lo, lo + 400)],
+            ranks=[q.VectorRank("embedding", d.query_vec(), 0.6),
+                   q.SpatialRank("coordinate", (float(x), float(y)), 0.2),
+                   q.TextRank("content",
+                              (TOPICS[d.rng.integers(0, 10)],), 0.3)], k=10)
+
+    search = [t1, t2, t3, t4, t5]
+    nn = [t6, t7, t8, t9, t10, t11]
+    return search, nn

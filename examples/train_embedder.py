@@ -1,0 +1,70 @@
+"""Train the arcade-embedder LM trunk for a few hundred steps on the
+synthetic Markov stream, with fault-tolerant checkpointing (kill it
+mid-run and restart: it resumes from the latest step and the data cursor).
+
+  PYTHONPATH=src python examples/train_embedder.py --steps 200
+  (use --preset full to train the full 6L/512d config)
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.train import checkpoint as ckpt
+from repro.train import data as data_lib
+from repro.train import optimizer as opt_lib
+from repro.train import train_step as ts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--preset", choices=["reduced", "full"],
+                    default="reduced")
+    ap.add_argument("--ckpt-dir", default="/tmp/arcade_embedder_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = get_config("arcade-embedder", reduced=(args.preset == "reduced"))
+    opt_cfg = opt_lib.OptConfig(lr=3e-3, warmup_steps=20,
+                                decay_steps=args.steps)
+    dcfg = data_lib.DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                               global_batch=args.batch, seed=0)
+    ds = data_lib.SyntheticLM(dcfg)
+
+    state, _ = ts.make_train_state(jax.random.PRNGKey(0), cfg, opt_cfg)
+    start = 0
+    latest = ckpt.latest_step(args.ckpt_dir)
+    if latest is not None:
+        like = ts.train_state_shapes(cfg, opt_cfg)
+        state, extra = ckpt.restore(args.ckpt_dir, like)
+        ds.load_state_dict(extra["data"])
+        start = latest
+        print(f"restored checkpoint at step {start} (elastic restart)")
+
+    step_fn = jax.jit(lambda s, b: ts.train_step(s, b, cfg, opt_cfg))
+    t0 = time.perf_counter()
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch_at(step).items()}
+        state, metrics = step_fn(state, batch)
+        if step % 20 == 0 or step == args.steps - 1:
+            dt = time.perf_counter() - t0
+            print(f"step {step:4d} loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.2f} "
+                  f"({dt:.1f}s)", flush=True)
+        if (step + 1) % args.ckpt_every == 0:
+            ds.step = step + 1
+            ckpt.save(args.ckpt_dir, step + 1, state,
+                      extra={"data": ds.state_dict()})
+    print("done; final checkpoint:",
+          ckpt.save(args.ckpt_dir, args.steps, state,
+                    extra={"data": {"step": args.steps}}))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Config registry: ``get_config(arch_id)`` / ``list_archs()``."""
+from __future__ import annotations
+
+from repro.configs.base import (MLAConfig, ModelConfig, MoEConfig, SHAPES,
+                                ShapeConfig, SSMConfig, XLSTMConfig,
+                                cell_supported, get_shape)
+
+from repro.configs import (arcade_embedder, deepseek_moe_16b,
+                           deepseek_v3_671b, llama32_vision_90b,
+                           phi3_medium_14b, qwen3_4b, seamless_m4t_medium,
+                           smollm_135m, xlstm_125m, yi_34b, zamba2_7b)
+
+_REGISTRY = {
+    "yi-34b": yi_34b,
+    "phi3-medium-14b": phi3_medium_14b,
+    "smollm-135m": smollm_135m,
+    "qwen3-4b": qwen3_4b,
+    "xlstm-125m": xlstm_125m,
+    "zamba2-7b": zamba2_7b,
+    "deepseek-v3-671b": deepseek_v3_671b,
+    "deepseek-moe-16b": deepseek_moe_16b,
+    "seamless-m4t-medium": seamless_m4t_medium,
+    "llama-3.2-vision-90b": llama32_vision_90b,
+    "arcade-embedder": arcade_embedder,
+}
+
+ASSIGNED_ARCHS = tuple(k for k in _REGISTRY if k != "arcade-embedder")
+
+
+def list_archs():
+    return list(_REGISTRY)
+
+
+def get_config(name: str, reduced: bool = False) -> ModelConfig:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {list(_REGISTRY)}")
+    mod = _REGISTRY[name]
+    return mod.REDUCED if reduced else mod.FULL

@@ -1,0 +1,22 @@
+"""arcade-embedder — the paper-native config: a small dense encoder that
+produces the 128-d text embeddings used by the TRACY benchmark (paper §7.1
+generates 128-dim embeddings from Tweet content / POI descriptions).
+
+Mean-pooled causal LM trunk + 128-d projection head; this is the model that
+examples/serve_hybrid.py serves to embed queries and ingested rows.
+"""
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    name="arcade-embedder", family="dense",
+    num_layers=6, d_model=512, num_heads=8, num_kv_heads=8,
+    d_ff=1408, vocab_size=32000, head_dim=64,
+)
+
+REDUCED = FULL.replace(
+    name="arcade-embedder-reduced",
+    num_layers=2, d_model=64, num_heads=2, num_kv_heads=2,
+    d_ff=128, vocab_size=256, head_dim=32,
+)
+
+EMBED_DIM = 128

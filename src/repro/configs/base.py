@@ -1,0 +1,162 @@
+"""Model configuration dataclasses for the architecture zoo.
+
+Every assigned architecture is expressed as a ``ModelConfig``. One config
+file per arch lives in this package; ``repro.configs.get_config(name)``
+returns the full-size config and ``get_config(name, reduced=True)`` a
+CPU-smoke-test-sized config of the same family.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0          # routed experts
+    num_shared_experts: int = 0
+    top_k: int = 0
+    expert_d_ff: int = 0          # per-expert FFN width
+    first_dense_layers: int = 0   # leading dense layers before MoE starts
+    dense_d_ff: int = 0           # FFN width of the leading dense layers
+    capacity_factor: float = 1.25
+    group_size: int = 1024        # tokens per dispatch group
+    aux_loss_weight: float = 1e-2
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 64             # SSM state size per head
+    d_conv: int = 4               # short conv width
+    expand: int = 2               # d_inner = expand * d_model
+    head_dim: int = 64            # mamba2 head dim
+    chunk_size: int = 128         # SSD chunk length
+    attn_every: int = 0           # hybrid: one (shared) attention layer every N
+    shared_attn: bool = False     # share the attention block weights
+
+
+@dataclass(frozen=True)
+class XLSTMConfig:
+    # alternating (mLSTM, sLSTM) super-blocks
+    mlstm_proj_factor: float = 2.0
+    slstm_proj_factor: float = 4.0 / 3.0
+    chunk_size: int = 64
+
+
+@dataclass(frozen=True)
+class EncDecConfig:
+    encoder_layers: int = 12
+    # modality frontend is a STUB: input_specs() provides precomputed
+    # frame/patch embeddings of shape (batch, frontend_len, d_model)
+    frontend_len_ratio: float = 0.25   # encoder frames = seq_len * ratio
+
+
+@dataclass(frozen=True)
+class VisionConfig:
+    cross_attn_every: int = 5     # one cross-attn image layer every N layers
+    num_image_tokens: int = 2048  # stubbed patch-embedding length
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | ssm | hybrid | moe | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0             # 0 -> d_model // num_heads
+    attn_type: str = "gqa"        # gqa | mla | none
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    mtp_depth: int = 0            # multi-token-prediction extra depth (train only)
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    encdec: Optional[EncDecConfig] = None
+    vision: Optional[VisionConfig] = None
+    # True when sequence mixing is sub-quadratic (eligible for long_500k)
+    subquadratic: bool = False
+    # preferred optimizer at production scale ("adamw" | "adafactor")
+    optimizer: str = "adamw"
+    remat: str = "none"           # none | full | dots (activation checkpointing)
+    # ghost-head padding: pad (q, kv) head counts to a TP-divisible layout
+    # with structurally-zero weights + an output mask — mathematically the
+    # identical function, but attention stays head-sharded on the model
+    # axis (EXPERIMENTS.md §Perf A2). 0 = off; else the TP width target.
+    pad_heads_to_tp: int = 0
+    # KV-cache storage dtype for decode: "bf16" | "int8" (per-head-per-
+    # position scales; halves cache bytes — EXPERIMENTS.md §Perf C3)
+    kv_cache_dtype: str = "bf16"
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One (input-shape) cell of the assignment."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # train | prefill | decode
+
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4096, 256, "train"),
+    ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32768, 128, "decode"),
+    ShapeConfig("long_500k", 524288, 1, "decode"),
+)
+
+
+def get_shape(name: str) -> ShapeConfig:
+    for s in SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(f"unknown shape {name!r}; have {[s.name for s in SHAPES]}")
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether an (arch x shape) cell runs, and why not if skipped."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "long_500k skipped: pure full-attention arch (see DESIGN.md)"
+    return True, ""
+
+
+def ghost_head_layout(num_heads: int, num_kv_heads: int, tp: int
+                      ) -> Tuple[int, int, int]:
+    """Smallest padded layout (q', kv', rep') with q' = kv' * rep'
+    divisible by ``tp``, kv' >= kv, rep' >= rep. Real q head (g, r) maps
+    to real kv group g (g < kv, r < rep); pad positions carry zero
+    weights and are masked out of the block output."""
+    rep = num_heads // num_kv_heads
+    best = None
+    for kvp in range(num_kv_heads, 4 * num_kv_heads + tp + 1):
+        for repp in range(rep, 4 * rep + tp + 1):
+            q = kvp * repp
+            if q % tp == 0 and q >= num_heads:
+                if best is None or q < best[0] or \
+                        (q == best[0] and kvp < best[1]):
+                    best = (q, kvp, repp)
+    assert best is not None
+    return best[0], best[1], best[2]

@@ -1,0 +1,25 @@
+"""deepseek-moe-16b — fine-grained MoE, 2 shared + 64 routed top-6.
+[arXiv:2401.06066; hf]
+
+First layer is dense (d_ff=10944); experts are 1408-wide.
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+FULL = ModelConfig(
+    name="deepseek-moe-16b", family="moe",
+    num_layers=28, d_model=2048, num_heads=16, num_kv_heads=16,
+    d_ff=1408, vocab_size=102400, head_dim=128,
+    remat="full",
+    moe=MoEConfig(num_experts=64, num_shared_experts=2, top_k=6,
+                  expert_d_ff=1408, first_dense_layers=1, dense_d_ff=10944,
+                  capacity_factor=1.25, group_size=1024),
+)
+
+REDUCED = FULL.replace(
+    name="deepseek-moe-16b-reduced",
+    num_layers=4, d_model=128, num_heads=4, num_kv_heads=4,
+    d_ff=64, vocab_size=512, head_dim=32, remat="none",
+    moe=MoEConfig(num_experts=8, num_shared_experts=2, top_k=2,
+                  expert_d_ff=64, first_dense_layers=1, dense_d_ff=256,
+                  capacity_factor=2.0, group_size=64),
+)

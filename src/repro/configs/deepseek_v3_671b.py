@@ -1,0 +1,31 @@
+"""deepseek-v3-671b — MLA + fine-grained MoE (1 shared + 256 routed top-8) + MTP.
+[arXiv:2412.19437; hf]
+
+d_ff=2048 is the per-expert width; the first 3 layers are dense with
+d_ff=18432 (the published config). Adafactor by default: Adam m/v for 671B
+params exceed the 256-chip v5e HBM envelope (EXPERIMENTS.md §Dry-run).
+"""
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+
+FULL = ModelConfig(
+    name="deepseek-v3-671b", family="moe",
+    num_layers=61, d_model=7168, num_heads=128, num_kv_heads=128,
+    d_ff=2048, vocab_size=129280,
+    attn_type="mla", optimizer="adafactor", remat="full", mtp_depth=1,
+    mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512,
+                  qk_nope_head_dim=128, qk_rope_head_dim=64, v_head_dim=128),
+    moe=MoEConfig(num_experts=256, num_shared_experts=1, top_k=8,
+                  expert_d_ff=2048, first_dense_layers=3, dense_d_ff=18432,
+                  capacity_factor=1.25, group_size=1024),
+)
+
+REDUCED = FULL.replace(
+    name="deepseek-v3-671b-reduced",
+    num_layers=4, d_model=128, num_heads=4, num_kv_heads=4,
+    d_ff=64, vocab_size=512, remat="none", mtp_depth=1,
+    mla=MLAConfig(q_lora_rank=64, kv_lora_rank=32,
+                  qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16),
+    moe=MoEConfig(num_experts=8, num_shared_experts=1, top_k=2,
+                  expert_d_ff=64, first_dense_layers=1, dense_d_ff=256,
+                  capacity_factor=2.0, group_size=64),
+)

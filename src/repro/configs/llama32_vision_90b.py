@@ -1,0 +1,23 @@
+"""llama-3.2-vision-90b — dense GQA with cross-attn image layers every 5th
+layer. [hf:meta-llama/Llama-3.2-11B-Vision; unverified]
+
+The vision tower is a STUB per the assignment: input_specs() supplies
+precomputed patch embeddings (batch, num_image_tokens, d_model). 100 layers
+= 20 super-blocks of (4 self-attn + 1 cross-attn) lowered as a scan.
+"""
+from repro.configs.base import ModelConfig, VisionConfig
+
+FULL = ModelConfig(
+    name="llama-3.2-vision-90b", family="vlm",
+    num_layers=100, d_model=8192, num_heads=64, num_kv_heads=8,
+    d_ff=28672, vocab_size=128256, head_dim=128,
+    rope_theta=500_000.0, remat="full",
+    vision=VisionConfig(cross_attn_every=5, num_image_tokens=2048),
+)
+
+REDUCED = FULL.replace(
+    name="llama-3.2-vision-90b-reduced",
+    num_layers=5, d_model=128, num_heads=8, num_kv_heads=2,
+    d_ff=256, vocab_size=512, head_dim=16, remat="none",
+    vision=VisionConfig(cross_attn_every=5, num_image_tokens=16),
+)

@@ -1,0 +1,15 @@
+"""phi3-medium-14b — dense RoPE SwiGLU GQA. [arXiv:2404.14219; unverified]"""
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    name="phi3-medium-14b", family="dense",
+    num_layers=40, d_model=5120, num_heads=40, num_kv_heads=10,
+    d_ff=17920, vocab_size=100352, head_dim=128,
+    rope_theta=10000.0, remat="full",
+)
+
+REDUCED = FULL.replace(
+    name="phi3-medium-14b-reduced",
+    num_layers=4, d_model=128, num_heads=8, num_kv_heads=2,
+    d_ff=256, vocab_size=512, head_dim=16, remat="none",
+)

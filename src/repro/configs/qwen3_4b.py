@@ -1,0 +1,15 @@
+"""qwen3-4b — GQA with q/k RMSNorm, decoupled head_dim. [hf:Qwen/Qwen3-8B; hf]"""
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    name="qwen3-4b", family="dense",
+    num_layers=36, d_model=2560, num_heads=32, num_kv_heads=8,
+    d_ff=9728, vocab_size=151936, head_dim=128,
+    qk_norm=True, rope_theta=1_000_000.0, remat="full",
+)
+
+REDUCED = FULL.replace(
+    name="qwen3-4b-reduced",
+    num_layers=4, d_model=128, num_heads=4, num_kv_heads=2,
+    d_ff=256, vocab_size=512, head_dim=32, remat="none",
+)

@@ -1,0 +1,23 @@
+"""seamless-m4t-medium — encoder-decoder multimodal backbone.
+[arXiv:2308.11596; hf]
+
+The audio frontend is a STUB per the assignment: input_specs() supplies
+precomputed frame embeddings (batch, frames, d_model) for the encoder;
+the decoder is a standard transformer with cross-attention. Decode shapes
+lower the decoder serve_step against a cached encoder memory.
+"""
+from repro.configs.base import EncDecConfig, ModelConfig
+
+FULL = ModelConfig(
+    name="seamless-m4t-medium", family="audio",
+    num_layers=12, d_model=1024, num_heads=16, num_kv_heads=16,
+    d_ff=4096, vocab_size=256206, head_dim=64, remat="full",
+    encdec=EncDecConfig(encoder_layers=12, frontend_len_ratio=0.25),
+)
+
+REDUCED = FULL.replace(
+    name="seamless-m4t-medium-reduced",
+    num_layers=2, d_model=128, num_heads=4, num_kv_heads=4,
+    d_ff=256, vocab_size=512, head_dim=32,
+    encdec=EncDecConfig(encoder_layers=2, frontend_len_ratio=0.25),
+)

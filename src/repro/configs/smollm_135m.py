@@ -1,0 +1,15 @@
+"""smollm-135m — small llama-arch GQA. [hf:HuggingFaceTB/SmolLM-135M; hf]"""
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    name="smollm-135m", family="dense",
+    num_layers=30, d_model=576, num_heads=9, num_kv_heads=3,
+    d_ff=1536, vocab_size=49152, head_dim=64, remat="full",
+    tie_embeddings=True,
+)
+
+REDUCED = FULL.replace(
+    name="smollm-135m-reduced",
+    num_layers=4, d_model=96, num_heads=3, num_kv_heads=1,
+    d_ff=192, vocab_size=512, head_dim=32,
+)

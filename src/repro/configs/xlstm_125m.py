@@ -1,0 +1,21 @@
+"""xlstm-125m — alternating sLSTM + mLSTM blocks. [arXiv:2405.04517; unverified]
+
+Attention-free: sequence mixing is recurrent (sub-quadratic), so the
+long_500k cell RUNS for this arch. d_ff=0 per assignment — the xLSTM blocks
+carry their own up/down projections (proj factors in XLSTMConfig).
+"""
+from repro.configs.base import ModelConfig, XLSTMConfig
+
+FULL = ModelConfig(
+    name="xlstm-125m", family="ssm",
+    num_layers=12, d_model=768, num_heads=4, num_kv_heads=4,
+    d_ff=0, vocab_size=50304,
+    attn_type="none", subquadratic=True, remat="full",
+    xlstm=XLSTMConfig(),
+)
+
+REDUCED = FULL.replace(
+    name="xlstm-125m-reduced",
+    num_layers=4, d_model=64, num_heads=2, num_kv_heads=2, vocab_size=512,
+    xlstm=XLSTMConfig(chunk_size=16),
+)

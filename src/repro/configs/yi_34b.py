@@ -1,0 +1,15 @@
+"""yi-34b — llama-architecture dense GQA transformer. [arXiv:2403.04652; hf]"""
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    name="yi-34b", family="dense",
+    num_layers=60, d_model=7168, num_heads=56, num_kv_heads=8,
+    d_ff=20480, vocab_size=64000, head_dim=128,
+    rope_theta=5_000_000.0, remat="full",
+)
+
+REDUCED = FULL.replace(
+    name="yi-34b-reduced",
+    num_layers=4, d_model=128, num_heads=8, num_kv_heads=2,
+    d_ff=256, vocab_size=512, head_dim=16, remat="none",
+)

@@ -1,0 +1,25 @@
+"""zamba2-7b — Mamba2 backbone + shared attention blocks. [arXiv:2411.15242; unverified]
+
+81 layers = 13 super-blocks of (5 mamba2 + 1 shared-weight attention) + 3
+trailing mamba2 layers. Mamba2 state is O(1) in seq len, so long_500k RUNS;
+the shared attention layers keep a (sharded) full KV cache at 500k — see
+DESIGN.md §5. The attention block weights are shared across applications
+(Zamba2's signature trick).
+"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+FULL = ModelConfig(
+    name="zamba2-7b", family="hybrid",
+    num_layers=81, d_model=3584, num_heads=32, num_kv_heads=32,
+    d_ff=14336, vocab_size=32000, head_dim=112,
+    subquadratic=True, remat="full",
+    ssm=SSMConfig(d_state=64, attn_every=6, shared_attn=True),
+)
+
+REDUCED = FULL.replace(
+    name="zamba2-7b-reduced",
+    num_layers=9, d_model=128, num_heads=4, num_kv_heads=4,
+    d_ff=256, vocab_size=512, head_dim=32, remat="none",
+    ssm=SSMConfig(d_state=16, attn_every=3, shared_attn=True, chunk_size=16,
+                  head_dim=16),
+)

@@ -1,0 +1,170 @@
+"""Continuous query processing: SYNC (fixed interval) and ASYNC
+(data-change-triggered) execution over the incremental-view framework
+(paper §2.2 Types 3-4, §6).
+
+The scheduler runs on a virtual clock (test-friendly; the serving driver
+maps it to wall time). Three engines, matching the paper's §7.5 setups:
+
+  * "none"   — ARCADE   : re-execute from base tables every time;
+  * "fcache" — ARCADE+F : full-result cache, invalidated when a delta
+                hits the query's predicate region (prior-work baseline);
+  * "views"  — ARCADE+S : incremental materialized views + rewriting
+                (the paper's contribution).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import query as q
+from repro.core.executor import Executor
+from repro.core.views import rewrite as rw_lib
+from repro.core.views.maintenance import ViewMaintainer
+from repro.core.views.selection import build_candidates, knapsack_select
+
+
+@dataclasses.dataclass
+class Registered:
+    decl: object                   # SyncQuery | AsyncQuery
+    next_due: float = 0.0
+    dirty: bool = True
+    rewrite: Optional[rw_lib.Rewrite] = None
+    runs: int = 0
+    view_hits: int = 0
+    last_result: Optional[List] = None
+
+
+class _FullResultCache:
+    """ARCADE+F baseline: cache complete results per query; a delta that
+    may affect the query invalidates its entry."""
+
+    def __init__(self):
+        self.entries: Dict[int, List] = {}
+
+    def invalidate_on_delta(self, registered, batch, deleted) -> None:
+        from repro.core.executor import eval_predicate_rows
+        for rid, res in list(self.entries.items()):
+            reg = registered.get(rid)
+            if reg is None:
+                continue
+            query = reg.decl.query
+            if deleted or batch is None:
+                self.entries.pop(rid, None)
+                continue
+            affected = not query.filters
+            for pred in query.filters:
+                try:
+                    if eval_predicate_rows(batch, pred).any():
+                        affected = True
+                        break
+                except Exception:
+                    affected = True
+                    break
+            if affected or query.is_nn:
+                self.entries.pop(rid, None)
+
+
+class ContinuousEngine:
+    def __init__(self, store, mode: str = "views",
+                 view_budget_bytes: float = 64 * 2**20):
+        assert mode in ("none", "fcache", "views")
+        self.store = store
+        self.mode = mode
+        self.executor = Executor(store)
+        self.registered: Dict[int, Registered] = {}
+        self._next_id = 0
+        self.view_budget = view_budget_bytes
+        self.maintainer = ViewMaintainer(store) if mode == "views" else None
+        self.fcache = _FullResultCache() if mode == "fcache" else None
+        self.metrics = {"executions": 0, "view_hits": 0, "cache_hits": 0,
+                        "exec_time_s": 0.0}
+        if mode == "fcache":
+            store.on_delta(self._fcache_delta)
+        store.on_delta(self._mark_async_dirty)
+
+    # --------------------------------------------------------- registration
+    def register(self, decl) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        reg = Registered(decl=decl)
+        if isinstance(decl, q.SyncQuery):
+            reg.next_due = 0.0
+        self.registered[rid] = reg
+        if self.mode == "views":
+            self._reselect_views()
+            # static rewrite at registration time (paper §6)
+            reg.rewrite = rw_lib.match(self.maintainer.views, decl.query)
+        return rid
+
+    def _reselect_views(self) -> None:
+        queries = [r.decl.query for r in self.registered.values()]
+        cands = build_candidates(self.store, queries)
+        chosen = knapsack_select(cands, self.view_budget)
+        self.maintainer.install([c.view for c in chosen])
+        # re-bind static rewrites for all registered queries
+        for reg in self.registered.values():
+            reg.rewrite = rw_lib.match(self.maintainer.views,
+                                       reg.decl.query)
+
+    # --------------------------------------------------------------- deltas
+    def _fcache_delta(self, pks, batch, deleted) -> None:
+        if self.fcache is not None:
+            self.fcache.invalidate_on_delta(self.registered, batch, deleted)
+
+    def _mark_async_dirty(self, pks, batch, deleted) -> None:
+        for reg in self.registered.values():
+            if isinstance(reg.decl, q.AsyncQuery):
+                reg.dirty = True
+
+    # ------------------------------------------------------------ execution
+    def _run_one(self, rid: int, reg: Registered) -> List:
+        t0 = _time.perf_counter()
+        query = reg.decl.query
+        if self.mode == "fcache" and rid in self.fcache.entries:
+            self.metrics["cache_hits"] += 1
+            res = self.fcache.entries[rid]
+        elif self.mode == "views" and reg.rewrite is not None \
+                and reg.rewrite.any:
+            res, st, used = rw_lib.execute_with_views(
+                self.executor, query, reg.rewrite)
+            if used:
+                reg.view_hits += 1
+                self.metrics["view_hits"] += 1
+        else:
+            res, _ = self.executor.execute(query)
+        if self.mode == "fcache":
+            self.fcache.entries[rid] = res
+        reg.runs += 1
+        reg.last_result = res
+        self.metrics["executions"] += 1
+        self.metrics["exec_time_s"] += _time.perf_counter() - t0
+        return res
+
+    def advance(self, now: float) -> Dict[int, List]:
+        """Run everything due at virtual time ``now``; returns results."""
+        out: Dict[int, List] = {}
+        for rid, reg in self.registered.items():
+            if isinstance(reg.decl, q.SyncQuery):
+                if now >= reg.next_due:
+                    out[rid] = self._run_one(rid, reg)
+                    reg.next_due = now + reg.decl.interval_s
+            else:   # ASYNC: only when data changed
+                if reg.dirty:
+                    out[rid] = self._run_one(rid, reg)
+                    reg.dirty = False
+        return out
+
+    def snapshot_query(self, query: q.HybridQuery) -> Tuple[List, bool]:
+        """One-shot query; in views mode, dynamic runtime matching."""
+        if self.mode == "views":
+            rw = rw_lib.match(self.maintainer.views, query)
+            res, st, used = rw_lib.execute_with_views(self.executor, query,
+                                                      rw)
+            if used:
+                self.metrics["view_hits"] += 1
+            return res, used
+        res, _ = self.executor.execute(query)
+        return res, False

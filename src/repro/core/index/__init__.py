@@ -1,0 +1,27 @@
+"""Unified secondary index framework (paper §4)."""
+from __future__ import annotations
+
+from repro.core.index.base import (ExactSortedAccess, MergedSortedAccess,
+                                   SecondaryIndex, SortedAccess)
+from repro.core.index.global_index import GlobalIndex, GlobalIndexSet
+from repro.core.index.ivf import IVFIndex
+from repro.core.index.scalar import ScalarIndex
+from repro.core.index.spatial import ZOrderIndex
+from repro.core.index.text import InvertedTextIndex
+from repro.core.types import Column, IndexKind
+
+
+def default_index_factory(column: Column):
+    """Map a column's declared index kind to its implementation."""
+    k = column.index
+    if k == IndexKind.BTREE:
+        return ScalarIndex()
+    if k == IndexKind.IVF:
+        return IVFIndex()
+    if k == IndexKind.PQIVF:
+        return IVFIndex(use_pq=True)
+    if k == IndexKind.ZORDER:
+        return ZOrderIndex()
+    if k == IndexKind.INVERTED:
+        return InvertedTextIndex()
+    return None

@@ -1,0 +1,101 @@
+"""Per-segment inverted text index ("Text IVF" — paper §4: "implemented in
+a similar manner by replacing centroids with the corpus terms").
+
+Level 1: term dictionary (term -> posting range); level 2: posting blocks
+of (row, tf) pairs. contains() gives a bitmap; the BM25-ish iterator gives
+sorted access for NRA text-relevance ranking (distance = 1 / (1 + score)
+so smaller = more relevant, matching the ascending-distance contract).
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.index.base import ExactSortedAccess, SecondaryIndex
+from repro.core.types import BLOCK_ROWS
+
+_TOKEN_RE = re.compile(r"[a-z0-9]+")
+
+
+def tokenize(text: str) -> List[str]:
+    return _TOKEN_RE.findall(str(text).lower())
+
+
+class InvertedTextIndex(SecondaryIndex):
+    kind = "inverted"
+
+    def __init__(self, k1: float = 1.2, b: float = 0.75):
+        self.k1 = k1
+        self.b = b
+        self.postings: Dict[str, Tuple[np.ndarray, np.ndarray]] = {}
+        self.doc_len: Optional[np.ndarray] = None
+        self.avg_len = 1.0
+        self.n_docs = 0
+
+    def build(self, segment, column) -> None:
+        texts = segment.columns[column.name]
+        self.n_docs = len(texts)
+        lens = np.zeros(self.n_docs, np.float32)
+        acc: Dict[str, Dict[int, int]] = {}
+        for i, t in enumerate(texts):
+            toks = tokenize(t)
+            lens[i] = len(toks)
+            for tok in toks:
+                acc.setdefault(tok, {})
+                acc[tok][i] = acc[tok].get(i, 0) + 1
+        self.doc_len = lens
+        self.avg_len = float(lens.mean()) if self.n_docs else 1.0
+        for term, hits in acc.items():
+            rows = np.fromiter(hits.keys(), np.int64, len(hits))
+            tfs = np.fromiter(hits.values(), np.float32, len(hits))
+            order = np.argsort(rows)
+            self.postings[term] = (rows[order], tfs[order])
+
+    # ------------------------------------------------------------- access
+    def bitmap(self, segment, predicate) -> np.ndarray:
+        mask = np.zeros(segment.n_rows, bool)
+        entry = self.postings.get(predicate.term.lower())
+        if entry is not None:
+            mask[entry[0]] = True
+        return mask
+
+    def _bm25(self, terms) -> Tuple[np.ndarray, np.ndarray]:
+        scores: Dict[int, float] = {}
+        for term in terms:
+            entry = self.postings.get(term.lower())
+            if entry is None:
+                continue
+            rows, tfs = entry
+            df = len(rows)
+            idf = math.log(1 + (self.n_docs - df + 0.5) / (df + 0.5))
+            dl = self.doc_len[rows]
+            tf_norm = tfs * (self.k1 + 1) / (
+                tfs + self.k1 * (1 - self.b + self.b * dl / self.avg_len))
+            for r, s in zip(rows, idf * tf_norm):
+                scores[int(r)] = scores.get(int(r), 0.0) + float(s)
+        if not scores:
+            return np.zeros((0,), np.float32), np.zeros((0,), np.int64)
+        rows = np.fromiter(scores.keys(), np.int64, len(scores))
+        vals = np.fromiter(scores.values(), np.float32, len(scores))
+        return vals, rows
+
+    def iterator(self, segment, query) -> ExactSortedAccess:
+        terms = query if isinstance(query, (list, tuple)) else [query]
+        scores, rows = self._bm25(terms)
+        dist = 1.0 / (1.0 + scores)          # ascending = most relevant
+        return ExactSortedAccess(dist, rows)
+
+    # ---------------------------------------------------------- optimizer
+    def selectivity(self, segment, predicate) -> float:
+        if segment.n_rows == 0:
+            return 0.0
+        entry = self.postings.get(predicate.term.lower())
+        return (len(entry[0]) / segment.n_rows) if entry is not None else 0.0
+
+    def probe_cost_blocks(self, segment, predicate) -> float:
+        entry = self.postings.get(predicate.term.lower())
+        n = len(entry[0]) if entry is not None else 0
+        return 1.0 + n / BLOCK_ROWS           # dictionary + posting blocks

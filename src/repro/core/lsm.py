@@ -1,0 +1,192 @@
+"""Partitioned LSM store: memtable + immutable segments + size-tiered
+compaction, with the unified secondary index framework built at flush /
+compaction time (paper §3-§4).
+
+Write path:  put/delete -> memtable (O(1)); at ``flush_rows`` the memtable
+becomes a level-0 Segment and all declared secondary indexes are built
+*with* the segment (never on the ingest critical path — the paper's
+central ingestion claim vs global in-memory vector indexes).
+
+Read path:   point gets via memtable -> zone-map-pruned segments (newest
+seqno wins); query execution lives in core.executor / core.nra driven by
+the optimizer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import memtable as mt
+from repro.core import segment as seg_lib
+from repro.core.types import Column, ColumnType, IndexKind, Schema
+
+
+@dataclasses.dataclass
+class LSMConfig:
+    flush_rows: int = 4096
+    fanout: int = 4               # size-tiered: merge when a tier has this many
+    max_levels: int = 6
+    build_indexes: bool = True
+
+
+class LSMStore:
+    def __init__(self, schema: Schema, cfg: Optional[LSMConfig] = None,
+                 index_factory: Optional[Callable[[Column], Any]] = None):
+        from repro.core.index import (GlobalIndexSet,
+                                      default_index_factory)  # lazy: no cycle
+        self.schema = schema
+        self.cfg = cfg or LSMConfig()
+        self.memtable = mt.MemTable(schema)
+        self.segments: List[seg_lib.Segment] = []
+        self._seqno = 0
+        self._index_factory = index_factory or default_index_factory
+        self.global_index = GlobalIndexSet(schema)
+        # fast path: when every pk was written once and nothing deleted,
+        # visibility resolution is the identity (skipped in NRA/executor)
+        self.unique_pks = True
+        self._seen_max_pk = -1
+        self.metrics = {"flushes": 0, "compactions": 0, "puts": 0,
+                        "deletes": 0, "flush_s": 0.0, "compact_s": 0.0,
+                        "index_build_s": 0.0}
+        self._on_delta: List[Callable] = []   # continuous-query hooks
+
+    # ------------------------------------------------------------------ write
+    def put(self, pks: Sequence[int], batch: Dict[str, Any]) -> None:
+        lo = min(pks) if len(pks) else 0
+        if lo <= self._seen_max_pk:
+            self.unique_pks = False
+        if len(pks):
+            self._seen_max_pk = max(self._seen_max_pk, max(pks))
+        self._seqno = self.memtable.put_batch(pks, batch, self._seqno)
+        self.metrics["puts"] += len(pks)
+        self._notify_delta(pks, batch, deleted=False)
+        self._maybe_flush()
+
+    def delete(self, pks: Sequence[int]) -> None:
+        self.unique_pks = False
+        self._seqno = self.memtable.put_batch(pks, {}, self._seqno,
+                                              tombstone=True)
+        self.metrics["deletes"] += len(pks)
+        self._notify_delta(pks, None, deleted=True)
+        self._maybe_flush()
+
+    def on_delta(self, fn: Callable) -> None:
+        """Register a hook called with (pks, batch|None, deleted) on writes
+        — drives incremental view maintenance and ASYNC queries."""
+        self._on_delta.append(fn)
+
+    def _notify_delta(self, pks, batch, deleted: bool) -> None:
+        for fn in self._on_delta:
+            fn(pks, batch, deleted)
+
+    def _maybe_flush(self) -> None:
+        if len(self.memtable) >= self.cfg.flush_rows:
+            self.flush()
+
+    def flush(self) -> Optional[seg_lib.Segment]:
+        if not len(self.memtable):
+            return None
+        t0 = time.perf_counter()
+        pk, seqno, tomb, cols = self.memtable.scan_arrays()
+        seg = seg_lib.Segment(self.schema, pk, seqno, tomb, cols, level=0)
+        self._build_indexes(seg)
+        self.segments.append(seg)
+        self.global_index.on_new_segment(seg)
+        self.memtable = mt.MemTable(self.schema)
+        self.metrics["flushes"] += 1
+        self.metrics["flush_s"] += time.perf_counter() - t0
+        self._maybe_compact()
+        return seg
+
+    def _build_indexes(self, seg: seg_lib.Segment) -> None:
+        """Per-segment index construction at SST-build time (paper §4)."""
+        if not self.cfg.build_indexes:
+            return
+        t0 = time.perf_counter()
+        for col in self.schema.indexed_columns:
+            idx = self._index_factory(col)
+            if idx is not None:
+                idx.build(seg, col)
+                seg.indexes[col.name] = idx
+        self.metrics["index_build_s"] += time.perf_counter() - t0
+
+    def _maybe_compact(self) -> None:
+        """Size-tiered compaction: when ``fanout`` segments accumulate at a
+        level, merge them into one segment at level+1 (rebuilding the
+        per-segment indexes for the merged run)."""
+        for level in range(self.cfg.max_levels):
+            tier = [s for s in self.segments if s.level == level]
+            if len(tier) < self.cfg.fanout:
+                continue
+            t0 = time.perf_counter()
+            bottom = level + 1 >= self.cfg.max_levels or not any(
+                s.level > level for s in self.segments)
+            merged = seg_lib.merge_segments(self.schema, tier, level + 1,
+                                            drop_tombstones=bottom)
+            self._build_indexes(merged)
+            self.segments = [s for s in self.segments if s not in tier]
+            self.segments.append(merged)
+            for s in tier:
+                self.global_index.on_drop_segment(s.seg_id)
+            self.global_index.on_new_segment(merged)
+            self.metrics["compactions"] += 1
+            self.metrics["compact_s"] += time.perf_counter() - t0
+
+    # ------------------------------------------------------------------- read
+    def get(self, key: int) -> Optional[Dict[str, Any]]:
+        row = self.memtable.get(key)
+        best = row
+        if best is None:
+            # newest-first: segments are appended in time order
+            for seg in reversed(self.segments):
+                if not seg.may_contain(key):
+                    continue
+                i = seg.get(key)
+                if i is not None:
+                    r = seg.row(i)
+                    if best is None or r["_seqno"] > best["_seqno"]:
+                        best = r
+        if best is None or best["_tombstone"]:
+            return None
+        return best
+
+    @property
+    def n_rows(self) -> int:
+        return sum(s.n_rows for s in self.segments) + len(self.memtable)
+
+    def all_segments(self) -> List[seg_lib.Segment]:
+        return list(self.segments)
+
+    def memtable_arrays(self):
+        return self.memtable.scan_arrays()
+
+    # visible-version resolution across segments (newest seqno per pk wins)
+    def resolve_visible(self, per_segment_rows: Dict[int, np.ndarray]
+                        ) -> Dict[int, np.ndarray]:
+        """Given {seg_id: row_indices}, drop rows shadowed by newer versions
+        of the same pk elsewhere (or by memtable / tombstones)."""
+        seg_by_id = {s.seg_id: s for s in self.segments}
+        best: Dict[int, tuple] = {}
+        for sid, rows in per_segment_rows.items():
+            seg = seg_by_id[sid]
+            for i in np.asarray(rows):
+                key = int(seg.pk[i])
+                sq = int(seg.seqno[i])
+                cur = best.get(key)
+                if cur is None or sq > cur[0]:
+                    best[key] = (sq, sid, int(i), bool(seg.tombstone[i]))
+        # memtable shadows everything it contains
+        for key in list(best.keys()):
+            m = self.memtable.get(key)
+            if m is not None:
+                del best[key]
+        out: Dict[int, List[int]] = {}
+        for key, (sq, sid, i, tomb) in best.items():
+            if tomb:
+                continue
+            out.setdefault(sid, []).append(i)
+        return {sid: np.asarray(sorted(rows), np.int64)
+                for sid, rows in out.items()}

@@ -1,0 +1,102 @@
+"""Write buffer (memtable) — host-side append store, the skip-list analog.
+
+Writes are O(1) appends with a monotonically increasing seqno; the LSM
+store flushes the memtable to an immutable Segment (and builds its
+per-segment indexes) once ``flush_rows`` is reached. Reads over the
+memtable are brute-force — it is small and RAM-resident by construction,
+exactly like RocksDB's write buffer.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.types import ColumnType, Schema, validate_batch
+
+
+class MemTable:
+    def __init__(self, schema: Schema):
+        self.schema = schema
+        self._pk: List[int] = []
+        self._seqno: List[int] = []
+        self._tomb: List[bool] = []
+        self._cols: Dict[str, List[Any]] = {c.name: [] for c in schema.columns}
+        # newest row index per key for O(1) point reads
+        self._latest: Dict[int, int] = {}
+
+    def __len__(self) -> int:
+        return len(self._pk)
+
+    @property
+    def approx_bytes(self) -> int:
+        n = len(self._pk)
+        per_row = 16
+        for c in self.schema.columns:
+            if c.ctype == ColumnType.VECTOR:
+                per_row += 4 * c.dim
+            elif c.ctype == ColumnType.SPATIAL:
+                per_row += 8
+            else:
+                per_row += 24
+        return n * per_row
+
+    def put_batch(self, pks, batch: Dict[str, Any], seqno_start: int,
+                  tombstone: bool = False) -> int:
+        """Append rows; returns the next unused seqno."""
+        n = validate_batch(self.schema, batch) if not tombstone else len(pks)
+        seq = seqno_start
+        for i in range(len(pks)):
+            self._latest[int(pks[i])] = len(self._pk)
+            self._pk.append(int(pks[i]))
+            self._seqno.append(seq)
+            self._tomb.append(tombstone)
+            for c in self.schema.columns:
+                if tombstone:
+                    self._cols[c.name].append(_null_for(c))
+                else:
+                    self._cols[c.name].append(batch[c.name][i])
+            seq += 1
+        return seq
+
+    def get(self, key: int) -> Optional[Dict[str, Any]]:
+        i = self._latest.get(int(key))
+        if i is None:
+            return None
+        row = {"_pk": self._pk[i], "_seqno": self._seqno[i],
+               "_tombstone": self._tomb[i]}
+        for name, vals in self._cols.items():
+            row[name] = vals[i]
+        return row
+
+    def scan_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                   Dict[str, np.ndarray]]:
+        """Materialize as columnar arrays (for flush or brute-force read)."""
+        pk = np.asarray(self._pk, np.int64)
+        seqno = np.asarray(self._seqno, np.int64)
+        tomb = np.asarray(self._tomb, bool)
+        cols = {}
+        for c in self.schema.columns:
+            vals = self._cols[c.name]
+            if c.ctype == ColumnType.VECTOR:
+                cols[c.name] = np.asarray(vals, np.float32).reshape(
+                    len(vals), c.dim) if vals else np.zeros((0, c.dim),
+                                                            np.float32)
+            elif c.ctype == ColumnType.SPATIAL:
+                cols[c.name] = np.asarray(vals, np.float32).reshape(
+                    len(vals), 2) if vals else np.zeros((0, 2), np.float32)
+            elif c.ctype == ColumnType.SCALAR:
+                cols[c.name] = np.asarray(vals, np.float64)
+            else:
+                cols[c.name] = np.asarray(vals, object)
+        return pk, seqno, tomb, cols
+
+
+def _null_for(c):
+    if c.ctype == ColumnType.VECTOR:
+        return np.zeros((c.dim,), np.float32)
+    if c.ctype == ColumnType.SPATIAL:
+        return np.zeros((2,), np.float32)
+    if c.ctype == ColumnType.SCALAR:
+        return 0.0
+    return ""

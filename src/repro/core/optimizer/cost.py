@@ -1,0 +1,94 @@
+"""Cost model for hybrid query plans (paper §5: "a robust cost model that
+accounts for index access cost within the LSM layout, expected candidate
+set size, and residual predicate evaluation overhead").
+
+Units: 1.0 = one block read (HBM->VMEM tile fetch). Kernel compute per
+block is folded into per-block constants (distance scans cost more per
+block than bitmap filters — MXU vs VPU work).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from repro.core import query as q
+from repro.core.types import BLOCK_ROWS
+
+# per-block kernel cost multipliers (relative to a plain block read)
+C_FILTER_BLOCK = 1.2       # bitmap_filter kernel over one block
+C_VECTOR_BLOCK = 3.0       # ivf_scan distance kernel over one block
+C_ROW_RESIDUAL = 1.0 / BLOCK_ROWS   # fetch+eval one row's residual preds
+C_MERGE = 0.5              # per-segment top-k merge overhead
+
+
+@dataclasses.dataclass
+class PlanCost:
+    blocks: float            # estimated block-read units
+    candidates: float        # expected candidate rows materialized
+
+    @property
+    def total(self) -> float:
+        return self.blocks + self.candidates * C_ROW_RESIDUAL
+
+
+def full_scan_cost(catalog, filters: List) -> PlanCost:
+    nb = catalog.total_blocks
+    per_block = C_FILTER_BLOCK * max(1, len(filters))
+    for f in filters:
+        if isinstance(f, q.VectorRange):
+            per_block += C_VECTOR_BLOCK
+    return PlanCost(blocks=nb * per_block, candidates=0.0)
+
+
+def intersect_cost(catalog, indexed: List, residual: List) -> PlanCost:
+    probe = sum(catalog.index_probe_blocks(p) for p in indexed)
+    sel = 1.0
+    for p in indexed:
+        sel *= catalog.selectivity(p)
+    cand = sel * catalog.total_rows
+    res_cost = cand * C_ROW_RESIDUAL * max(1, len(residual))
+    return PlanCost(blocks=probe + res_cost, candidates=cand)
+
+
+def prefilter_nn_cost(catalog, filters: List, ranks: List,
+                      filter_cost: PlanCost) -> PlanCost:
+    sel = 1.0
+    for p in filters:
+        sel *= catalog.selectivity(p)
+    passing = sel * catalog.total_rows
+    # exact rank scan over passing rows (gathered into blocks)
+    rank_blocks = (passing / BLOCK_ROWS) * C_VECTOR_BLOCK * max(1, len(ranks))
+    return PlanCost(blocks=filter_cost.blocks + rank_blocks,
+                    candidates=passing)
+
+
+def postfilter_nn_cost(catalog, vector_rank, filters: List, k: int
+                       ) -> PlanCost:
+    sel = 1.0
+    for p in filters:
+        sel *= catalog.selectivity(p)
+    sel = max(sel, 1e-6)
+    inflation = min(catalog.total_rows, k / sel) / max(k, 1)
+    probe = catalog.index_probe_blocks(
+        q.VectorRange(vector_rank.col, vector_rank.q, float("inf")))
+    probe *= max(1.0, inflation / 4.0)      # deeper probes for low sel
+    cand = min(catalog.total_rows, k * inflation)
+    return PlanCost(blocks=probe * C_VECTOR_BLOCK,
+                    candidates=cand * max(1, len(filters)))
+
+
+def nra_cost(catalog, ranks: List, filters: List, k: int) -> PlanCost:
+    """NRA touches an estimated depth per modality before bounds close;
+    heuristic depth grows with modality count and k."""
+    n = max(catalog.total_rows, 1)
+    ell = len(ranks)
+    depth_frac = min(1.0, (k * 8.0 * ell) / n)
+    blocks = 0.0
+    for r in ranks:
+        per_modality = (n * depth_frac) / BLOCK_ROWS
+        mult = C_VECTOR_BLOCK if isinstance(r, q.VectorRank) else C_FILTER_BLOCK
+        blocks += per_modality * mult + C_MERGE * len(catalog.store.segments)
+    cand = n * depth_frac * ell
+    if filters:
+        cand *= 1.2
+    return PlanCost(blocks=blocks, candidates=cand)

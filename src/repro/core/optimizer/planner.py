@@ -1,0 +1,108 @@
+"""Cost-based plan enumeration for hybrid queries (paper §5).
+
+Hybrid search (Type 1): enumerate every subset of index-supported
+predicates as the probe set (bitmap intersection), remaining predicates as
+residuals; compare against a full scan; pick min cost. This is exactly the
+"optimal combination of index access paths" claim — single-index
+pre-filter and post-filter plans are special cases of the enumeration.
+
+Hybrid NN (Type 2): candidate plans are NRA (Algorithm 1 over unified
+sorted iterators), pre-filtered exact scan, post-filtered vector index
+probe (single vector rank only), and full-scan ranking.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import List, Optional
+
+from repro.core import query as q
+from repro.core.optimizer import cost as cost_lib
+from repro.core.optimizer.stats import Catalog
+
+
+@dataclasses.dataclass
+class Plan:
+    kind: str                      # full_scan | index_intersect |
+    #                                prefilter_nn | postfilter_nn | nra |
+    #                                full_scan_nn
+    indexed: List = dataclasses.field(default_factory=list)
+    residual: List = dataclasses.field(default_factory=list)
+    ranks: List = dataclasses.field(default_factory=list)
+    k: int = 0
+    cost: float = 0.0
+    note: str = ""
+
+    def describe(self) -> str:
+        ix = ",".join(type(p).__name__ + ":" + getattr(p, "col", "?")
+                      for p in self.indexed)
+        rs = ",".join(type(p).__name__ + ":" + getattr(p, "col", "?")
+                      for p in self.residual)
+        return (f"{self.kind}(indexed=[{ix}] residual=[{rs}] "
+                f"ranks={len(self.ranks)} cost={self.cost:.1f})")
+
+
+def _index_supported(catalog: Catalog, p) -> bool:
+    col = getattr(p, "col", None)
+    return col is not None and catalog.has_index(col)
+
+
+def plan_hybrid_search(catalog: Catalog, query: q.HybridQuery) -> Plan:
+    filters = list(query.filters)
+    supported = [p for p in filters if _index_supported(catalog, p)]
+    best = Plan(kind="full_scan", residual=filters,
+                cost=cost_lib.full_scan_cost(catalog, filters).total,
+                note="fallback")
+    # every non-empty subset of supported predicates as the probe set
+    for r in range(1, len(supported) + 1):
+        for subset in itertools.combinations(supported, r):
+            residual = [p for p in filters if p not in subset]
+            c = cost_lib.intersect_cost(catalog, list(subset), residual)
+            if c.total < best.cost:
+                best = Plan(kind="index_intersect", indexed=list(subset),
+                            residual=residual, cost=c.total)
+    return best
+
+
+def plan_hybrid_nn(catalog: Catalog, query: q.HybridQuery) -> Plan:
+    filters = list(query.filters)
+    ranks = list(query.ranks)
+    k = query.k
+    candidates: List[Plan] = []
+
+    # full-scan ranking (always valid)
+    fc = cost_lib.full_scan_cost(catalog, filters + ranks)
+    candidates.append(Plan(kind="full_scan_nn", residual=filters,
+                           ranks=ranks, k=k, cost=fc.total))
+
+    # NRA over sorted iterators — needs an index per rank modality
+    if ranks and all(_index_supported(catalog, r) for r in ranks):
+        nc = cost_lib.nra_cost(catalog, ranks, filters, k)
+        candidates.append(Plan(kind="nra", residual=filters, ranks=ranks,
+                               k=k, cost=nc.total))
+
+    # pre-filter: best filter sub-plan, then exact ranking of survivors
+    if filters:
+        fplan = plan_hybrid_search(
+            catalog, q.HybridQuery(filters=filters, k=k))
+        fcost = cost_lib.PlanCost(blocks=fplan.cost, candidates=0)
+        pc = cost_lib.prefilter_nn_cost(catalog, filters, ranks, fcost)
+        candidates.append(Plan(kind="prefilter_nn", indexed=fplan.indexed,
+                               residual=fplan.residual, ranks=ranks, k=k,
+                               cost=pc.total))
+
+    # post-filter: single vector rank via IVF probe, filters applied after
+    vec_ranks = [r for r in ranks if isinstance(r, q.VectorRank)]
+    if len(ranks) == 1 and len(vec_ranks) == 1 and \
+            _index_supported(catalog, vec_ranks[0]):
+        oc = cost_lib.postfilter_nn_cost(catalog, vec_ranks[0], filters, k)
+        candidates.append(Plan(kind="postfilter_nn", residual=filters,
+                               ranks=ranks, k=k, cost=oc.total))
+
+    return min(candidates, key=lambda p: p.cost)
+
+
+def plan(catalog: Catalog, query: q.HybridQuery) -> Plan:
+    if query.is_nn:
+        return plan_hybrid_nn(catalog, query)
+    return plan_hybrid_search(catalog, query)

@@ -1,0 +1,120 @@
+"""Typed query AST mirroring the paper's four query types (§2.2).
+
+Filter predicates (hybrid search):
+  Range(col, lo, hi)          — relational range / equality
+  GeoWithin(col, rect)        — ST_Contains(col, @region)
+  TextContains(col, term)     — content LIKE '%kw%' via inverted index
+  VectorRange(col, q, thresh) — L2_Distance(col, q) < thresh
+
+Rank terms (hybrid NN, weighted sum — Algorithm 1's  s(o) = Σ λ_j d_j(o)):
+  VectorRank(col, q, weight)
+  SpatialRank(col, point, weight)
+  TextRank(col, terms, weight)
+
+HybridQuery(filters, ranks, k): ranks empty => Type-1 hybrid search;
+ranks non-empty => Type-2 hybrid NN. Continuous wrappers (Type 3/4) live
+in core.continuous.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# filter predicates
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Range:
+    col: str
+    lo: float
+    hi: float                      # inclusive bounds
+
+
+@dataclasses.dataclass(frozen=True)
+class GeoWithin:
+    col: str
+    rect: Tuple[float, float, float, float]   # (xmin, ymin, xmax, ymax)
+
+
+@dataclasses.dataclass(frozen=True)
+class TextContains:
+    col: str
+    term: str
+
+
+class VectorRange:
+    """L2 distance below a threshold (frozen-by-convention)."""
+
+    def __init__(self, col: str, q, thresh: float):
+        self.col = col
+        self.q = np.asarray(q, np.float32)
+        self.thresh = float(thresh)
+
+    def __repr__(self):
+        return f"VectorRange({self.col}, dim={self.q.shape}, <{self.thresh})"
+
+
+Predicate = object   # Range | GeoWithin | TextContains | VectorRange
+
+
+# ---------------------------------------------------------------------------
+# rank terms
+# ---------------------------------------------------------------------------
+
+class VectorRank:
+    def __init__(self, col: str, q, weight: float = 1.0):
+        self.col = col
+        self.q = np.asarray(q, np.float32)
+        self.weight = float(weight)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpatialRank:
+    col: str
+    point: Tuple[float, float]
+    weight: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class TextRank:
+    col: str
+    terms: Tuple[str, ...]
+    weight: float = 1.0
+
+
+RankTerm = object    # VectorRank | SpatialRank | TextRank
+
+
+@dataclasses.dataclass
+class HybridQuery:
+    filters: List[Predicate] = dataclasses.field(default_factory=list)
+    ranks: List[RankTerm] = dataclasses.field(default_factory=list)
+    k: int = 10
+    select: Optional[Sequence[str]] = None
+
+    @property
+    def is_nn(self) -> bool:
+        return bool(self.ranks)
+
+
+# ---------------------------------------------------------------------------
+# continuous query declarations (Type 3 / Type 4)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SyncQuery:
+    """Re-execute every ``interval_s`` seconds (SYNC 60 seconds)."""
+    query: HybridQuery
+    interval_s: float
+    name: str = ""
+
+
+@dataclasses.dataclass
+class AsyncQuery:
+    """Re-execute when underlying data changes (ASYNC)."""
+    query: HybridQuery
+    name: str = ""

@@ -1,0 +1,110 @@
+"""Immutable columnar segments — the SST-file analog (DESIGN.md §2).
+
+A segment stores rows sorted by primary key in fixed-height blocks of
+``BLOCK_ROWS`` (the read unit: one HBM->VMEM tile). Block handles are
+(segment_id, block_id) pairs; the per-segment secondary indexes map
+attribute values / centroids to block handles + in-block offsets, mirroring
+the paper's "(vector, block handle) pairs" posting lists.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.types import (BLOCK_ROWS, Column, ColumnType, IndexKind,
+                              Schema)
+
+_seg_counter = itertools.count()
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockHandle:
+    seg_id: int
+    block_id: int
+
+    def __repr__(self):
+        return f"BH({self.seg_id}:{self.block_id})"
+
+
+class Segment:
+    """Immutable sorted run. ``indexes`` is populated by the index builders
+    at flush/compaction time (the paper: vector index built in the
+    background along with SST construction)."""
+
+    def __init__(self, schema: Schema, pk: np.ndarray, seqno: np.ndarray,
+                 tombstone: np.ndarray, columns: Dict[str, np.ndarray],
+                 level: int = 0, seg_id: Optional[int] = None):
+        order = np.argsort(pk, kind="stable")
+        self.schema = schema
+        self.seg_id = next(_seg_counter) if seg_id is None else seg_id
+        self.level = level
+        self.pk = np.asarray(pk)[order]
+        self.seqno = np.asarray(seqno)[order]
+        self.tombstone = np.asarray(tombstone)[order]
+        self.columns: Dict[str, np.ndarray] = {}
+        for name, arr in columns.items():
+            arr = np.asarray(arr)
+            self.columns[name] = arr[order]
+        self.n_rows = len(self.pk)
+        self.indexes: Dict[str, Any] = {}
+        # per-segment zone map (fence pointers) for the global index
+        self.pk_min = int(self.pk[0]) if self.n_rows else 0
+        self.pk_max = int(self.pk[-1]) if self.n_rows else 0
+
+    # ---- blocks ----------------------------------------------------------
+    @property
+    def n_blocks(self) -> int:
+        return (self.n_rows + BLOCK_ROWS - 1) // BLOCK_ROWS
+
+    def block_rows(self, block_id: int) -> slice:
+        lo = block_id * BLOCK_ROWS
+        return slice(lo, min(lo + BLOCK_ROWS, self.n_rows))
+
+    def read_block(self, col: str, block_id: int) -> np.ndarray:
+        """Block-granular read — the unit the cost model charges for."""
+        return self.columns[col][self.block_rows(block_id)]
+
+    # ---- point lookups ----------------------------------------------------
+    def get(self, key: int) -> Optional[int]:
+        """Row index of ``key`` or None (binary search over sorted pk)."""
+        i = int(np.searchsorted(self.pk, key))
+        if i < self.n_rows and self.pk[i] == key:
+            return i
+        return None
+
+    def may_contain(self, key: int) -> bool:
+        return self.n_rows > 0 and self.pk_min <= key <= self.pk_max
+
+    def row(self, i: int) -> Dict[str, Any]:
+        out = {"_pk": int(self.pk[i]), "_seqno": int(self.seqno[i]),
+               "_tombstone": bool(self.tombstone[i])}
+        for name, arr in self.columns.items():
+            out[name] = arr[i]
+        return out
+
+
+def merge_segments(schema: Schema, segments: Sequence[Segment],
+                   level: int, drop_tombstones: bool) -> Segment:
+    """K-way merge by primary key keeping the newest seqno per key
+    (size-tiered compaction). Tombstones are dropped only when compacting
+    into the bottom tier (no older data can be shadowed)."""
+    if not segments:
+        raise ValueError("nothing to merge")
+    pk = np.concatenate([s.pk for s in segments])
+    seqno = np.concatenate([s.seqno for s in segments])
+    tomb = np.concatenate([s.tombstone for s in segments])
+    cols = {c.name: np.concatenate([s.columns[c.name] for s in segments])
+            for c in schema.columns}
+    # newest version per key: sort by (pk, -seqno), keep first
+    order = np.lexsort((-seqno, pk))
+    pk, seqno, tomb = pk[order], seqno[order], tomb[order]
+    keep = np.ones(len(pk), bool)
+    keep[1:] = pk[1:] != pk[:-1]
+    if drop_tombstones:
+        keep &= ~tomb
+    cols = {k: v[order][keep] for k, v in cols.items()}
+    return Segment(schema, pk[keep], seqno[keep], tomb[keep], cols,
+                   level=level)

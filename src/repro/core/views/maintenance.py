@@ -1,0 +1,153 @@
+"""Incremental view maintenance from write deltas (paper §6).
+
+"To identify affected views, we check which selection predicates of views
+cover the updated point. For spatial and vector filters, each view defines
+a coverage region (e.g., hypersphere), stored in an in-memory spatial
+index (e.g., kd-tree). Upon data updates, we query this index to locate
+and update all relevant views efficiently."
+
+Coverage index: uniform grid over view rects (spatial) + centroid table
+(vector). Backfill on creation scans the current store once.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import query as q
+from repro.core.views.view import SpatialRangeView, VectorNNView
+
+
+class CoverageIndex:
+    """Locates views affected by an inserted/deleted row."""
+
+    def __init__(self, grid: int = 16):
+        self.spatial: List[SpatialRangeView] = []
+        self.vector: List[VectorNNView] = []
+        self.grid = grid
+        self._cells: Dict[tuple, List[int]] = {}
+        self._bbox = None
+        self._centers: Optional[np.ndarray] = None
+
+    def rebuild(self, views) -> None:
+        self.spatial = [v for v in views if isinstance(v, SpatialRangeView)]
+        self.vector = [v for v in views if isinstance(v, VectorNNView)]
+        self._cells = {}
+        if self.spatial:
+            xs0 = min(v.rect[0] for v in self.spatial)
+            ys0 = min(v.rect[1] for v in self.spatial)
+            xs1 = max(v.rect[2] for v in self.spatial)
+            ys1 = max(v.rect[3] for v in self.spatial)
+            self._bbox = (xs0, ys0, max(xs1, xs0 + 1e-9),
+                          max(ys1, ys0 + 1e-9))
+            for i, v in enumerate(self.spatial):
+                for cell in self._cells_of(v.rect):
+                    self._cells.setdefault(cell, []).append(i)
+        self._centers = np.stack([v.center for v in self.vector]) \
+            if self.vector else None
+
+    def _cells_of(self, rect):
+        x0, y0, x1, y1 = self._bbox
+        g = self.grid
+        cx0 = int((rect[0] - x0) / (x1 - x0) * g)
+        cx1 = int((rect[2] - x0) / (x1 - x0) * g)
+        cy0 = int((rect[1] - y0) / (y1 - y0) * g)
+        cy1 = int((rect[3] - y0) / (y1 - y0) * g)
+        for cx in range(max(0, cx0), min(g, cx1 + 1)):
+            for cy in range(max(0, cy0), min(g, cy1 + 1)):
+                yield (cx, cy)
+
+    def spatial_views_for(self, xy) -> List[SpatialRangeView]:
+        if not self.spatial or self._bbox is None:
+            return []
+        x0, y0, x1, y1 = self._bbox
+        g = self.grid
+        cx = int((float(xy[0]) - x0) / (x1 - x0) * g)
+        cy = int((float(xy[1]) - y0) / (y1 - y0) * g)
+        if not (0 <= cx < g and 0 <= cy < g):
+            return [v for v in self.spatial if v.covers_point(xy)]
+        out = []
+        for i in self._cells.get((cx, cy), []):
+            v = self.spatial[i]
+            if v.covers_point(xy):
+                out.append(v)
+        return out
+
+    def vector_views_for(self, vec) -> List[VectorNNView]:
+        if self._centers is None:
+            return []
+        d = np.sqrt(((self._centers - np.asarray(vec)[None, :]) ** 2)
+                    .sum(axis=1))
+        out = []
+        for i, v in enumerate(self.vector):
+            if d[i] <= v.coverage_radius():
+                out.append(v)
+        return out
+
+
+class ViewMaintainer:
+    """Wires the coverage index into the store's delta hook."""
+
+    def __init__(self, store):
+        self.store = store
+        self.views: List = []
+        self.coverage = CoverageIndex()
+        self.deltas_applied = 0
+        store.on_delta(self._on_delta)
+
+    # ------------------------------------------------------------- admin
+    def install(self, views: List) -> None:
+        self.views = list(views)
+        self.coverage.rebuild(self.views)
+        self._backfill()
+
+    def _backfill(self) -> None:
+        """Populate new views from current store contents (one scan)."""
+        for seg in self.store.segments:
+            for v in self.views:
+                if isinstance(v, SpatialRangeView):
+                    pts = np.asarray(seg.columns[v.col], np.float32)
+                    from repro.kernels import ops as kops
+                    inside = kops.rect_filter(pts, v.rect)
+                    for i in np.nonzero(inside)[0]:
+                        v.insert(int(seg.pk[i]), pts[i])
+                else:
+                    vecs = np.asarray(seg.columns[v.col], np.float32)
+                    for i in range(len(vecs)):
+                        v.insert(int(seg.pk[i]), vecs[i])
+        # memtable too
+        pk, seqno, tomb, cols = self.store.memtable.scan_arrays()
+        for v in self.views:
+            arr = cols.get(v.col)
+            if arr is None:
+                continue
+            for i in range(len(pk)):
+                if tomb[i]:
+                    continue
+                if isinstance(v, SpatialRangeView):
+                    if v.covers_point(arr[i]):
+                        v.insert(int(pk[i]), arr[i])
+                else:
+                    v.insert(int(pk[i]), arr[i])
+
+    # ------------------------------------------------------------- delta
+    def _on_delta(self, pks, batch, deleted: bool) -> None:
+        if deleted:
+            for v in self.views:
+                for pk in pks:
+                    v.remove(int(pk))
+            self.deltas_applied += len(pks)
+            return
+        for v_idx, pk in enumerate(pks):
+            for v in self.coverage.spatial_views_for(
+                    batch[self.coverage.spatial[0].col][v_idx]) \
+                    if self.coverage.spatial else []:
+                v.insert(int(pk), batch[v.col][v_idx])
+        if self.coverage.vector:
+            col = self.coverage.vector[0].col
+            vecs = np.asarray(batch[col], np.float32)
+            for i, pk in enumerate(pks):
+                for v in self.coverage.vector_views_for(vecs[i]):
+                    v.insert(int(pk), vecs[i])
+        self.deltas_applied += len(pks)

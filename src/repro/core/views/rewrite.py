@@ -1,0 +1,139 @@
+"""Query rewriting over materialized views (paper §6).
+
+Continuous queries: views matched and *statically* bound at registration
+(reused every execution). Snapshot queries: matched at runtime with
+rule-based heuristics — region containment for spatial filters, embedding
+similarity for vector ranks — and rewritten per execution (greedy: the
+first/highest-hit matching view wins).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import query as q
+from repro.core.views.view import SpatialRangeView, VectorNNView
+
+
+@dataclasses.dataclass
+class Rewrite:
+    """A bound (view, query-part) substitution."""
+    spatial_view: Optional[SpatialRangeView] = None
+    spatial_pred: Optional[q.GeoWithin] = None
+    vector_view: Optional[VectorNNView] = None
+    vector_rank: Optional[q.VectorRank] = None
+
+    @property
+    def any(self) -> bool:
+        return self.spatial_view is not None or self.vector_view is not None
+
+
+def match(views: List, query: q.HybridQuery) -> Rewrite:
+    """Greedy rule-based matching (used at registration for continuous
+    queries, at runtime for snapshot queries)."""
+    rw = Rewrite()
+    for p in query.filters:
+        if isinstance(p, q.GeoWithin) and rw.spatial_view is None:
+            best = None
+            for v in views:
+                if isinstance(v, SpatialRangeView) and v.col == p.col \
+                        and v.covers_rect(p.rect):
+                    if best is None or v.hits > best.hits:
+                        best = v
+            if best is not None:
+                rw.spatial_view, rw.spatial_pred = best, p
+    for r in query.ranks:
+        if isinstance(r, q.VectorRank) and rw.vector_view is None:
+            best = None
+            for v in views:
+                if isinstance(v, VectorNNView) and v.col == r.col \
+                        and v.matches_query(r.q):
+                    if best is None or v.hits > best.hits:
+                        best = v
+            if best is not None:
+                rw.vector_view, rw.vector_rank = best, r
+    return rw
+
+
+def execute_with_views(executor, query: q.HybridQuery, rw: Rewrite):
+    """Execute using the bound views; residual parts go to the base
+    executor. Returns (results, stats, used_view: bool)."""
+    from repro.core import executor as ex
+
+    if not rw.any:
+        res, st = executor.execute(query)
+        return res, st, False
+
+    stats = ex.ExecStats(plan="view_rewrite")
+    store = executor.store
+
+    # Vector-NN rewrite: re-rank materialized candidates, then apply
+    # filters; fall back if the view can't fill k after filtering.
+    if rw.vector_view is not None and query.is_nn:
+        rw.vector_view.hits += 1
+        cand = rw.vector_view.topk_for(rw.vector_rank.q,
+                                       max(query.k * 4, query.k))
+        rows = []
+        for dist, pk in cand:
+            row = store.get(pk)
+            if row is None:
+                continue
+            ok = True
+            for pred in query.filters:
+                vals = {c: np.asarray([row[c]]) for c in row
+                        if not c.startswith("_")}
+                if not ex.eval_predicate_rows(vals, pred)[0]:
+                    ok = False
+                    break
+            if not ok:
+                continue
+            # full weighted score (other rank terms exact from the row)
+            score = 0.0
+            for r in query.ranks:
+                vals = {r.col: np.asarray([row[r.col]])}
+                score += r.weight * float(
+                    ex.rank_distances(vals, r)[0])
+            rows.append(ex.ResultRow(pk=pk, score=score, values={
+                c: v for c, v in row.items() if not c.startswith("_")}))
+            stats.rows_scanned += 1
+        rows.sort(key=lambda r: (r.score, r.pk))
+        if len(rows) >= query.k:
+            return rows[:query.k], stats, True
+        res, st = executor.execute(query)   # underfilled: fall back
+        return res, st, False
+
+    # Spatial-range rewrite: pks from the view replace the GeoWithin scan.
+    if rw.spatial_view is not None:
+        rw.spatial_view.hits += 1
+        pks = rw.spatial_view.pks_in(rw.spatial_pred.rect)
+        rows = []
+        residual = [p for p in query.filters if p is not rw.spatial_pred]
+        for pk in pks:
+            row = store.get(pk)
+            if row is None:
+                continue
+            ok = True
+            for pred in residual:
+                vals = {c: np.asarray([row[c]]) for c in row
+                        if not c.startswith("_")}
+                if not ex.eval_predicate_rows(vals, pred)[0]:
+                    ok = False
+                    break
+            if not ok:
+                continue
+            score = 0.0
+            for r in query.ranks:
+                vals = {r.col: np.asarray([row[r.col]])}
+                score += r.weight * float(ex.rank_distances(vals, r)[0])
+            rows.append(ex.ResultRow(pk=pk, score=score, values={
+                c: v for c, v in row.items() if not c.startswith("_")}))
+            stats.rows_scanned += 1
+        rows.sort(key=lambda r: (r.score, r.pk))
+        if query.is_nn:
+            rows = rows[:query.k]
+        return rows, stats, True
+
+    res, st = executor.execute(query)
+    return res, st, False

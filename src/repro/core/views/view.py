@@ -1,0 +1,115 @@
+"""Incremental materialized views (paper §6).
+
+Two view types, mirroring the paper's "Materialized View Selection":
+  * SpatialRangeView — all rows inside a representative rect; shared by
+    every query whose region is contained in it.
+  * VectorNNView — top-(x*k) candidates around a representative query
+    embedding, sorted by distance; queries with similar embeddings re-rank
+    the materialized candidates at runtime to approximate their top-k.
+
+Views hold (pk, key attrs, sort keys) — not full rows — and are maintained
+incrementally from write deltas (maintenance.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+_view_ids = itertools.count()
+
+
+class SpatialRangeView:
+    kind = "spatial_range"
+
+    def __init__(self, col: str, rect: Tuple[float, float, float, float]):
+        self.view_id = next(_view_ids)
+        self.col = col
+        self.rect = tuple(rect)
+        self.rows: Dict[int, Tuple[float, float]] = {}   # pk -> point
+        self.hits = 0
+
+    # coverage -------------------------------------------------------------
+    def covers_rect(self, rect) -> bool:
+        return (self.rect[0] <= rect[0] and self.rect[1] <= rect[1]
+                and self.rect[2] >= rect[2] and self.rect[3] >= rect[3])
+
+    def covers_point(self, xy) -> bool:
+        x, y = float(xy[0]), float(xy[1])
+        return (self.rect[0] <= x <= self.rect[2]
+                and self.rect[1] <= y <= self.rect[3])
+
+    # maintenance ------------------------------------------------------------
+    def insert(self, pk: int, xy) -> None:
+        self.rows[int(pk)] = (float(xy[0]), float(xy[1]))
+
+    def remove(self, pk: int) -> None:
+        self.rows.pop(int(pk), None)
+
+    # read --------------------------------------------------------------
+    def pks_in(self, rect) -> List[int]:
+        x0, y0, x1, y1 = rect
+        return [pk for pk, (x, y) in self.rows.items()
+                if x0 <= x <= x1 and y0 <= y <= y1]
+
+    @property
+    def size_bytes(self) -> int:
+        return 24 * len(self.rows) + 64
+
+
+class VectorNNView:
+    kind = "vector_nn"
+
+    def __init__(self, col: str, center: np.ndarray, xk: int,
+                 sim_radius: float):
+        self.view_id = next(_view_ids)
+        self.col = col
+        self.center = np.asarray(center, np.float32)
+        self.xk = xk                      # materialize top-(x*k)
+        self.sim_radius = float(sim_radius)  # query-match radius
+        # sorted candidate list: (dist_to_center, pk, vector)
+        self.cand: List[Tuple[float, int, np.ndarray]] = []
+        self.hits = 0
+
+    # coverage ---------------------------------------------------------
+    def matches_query(self, qvec: np.ndarray) -> bool:
+        return float(np.linalg.norm(self.center - qvec)) <= self.sim_radius
+
+    def coverage_radius(self) -> float:
+        """A new point closer to center than the current worst candidate
+        may belong in the view."""
+        if len(self.cand) < self.xk:
+            return float("inf")
+        return self.cand[-1][0]
+
+    # maintenance --------------------------------------------------------
+    def insert(self, pk: int, vec: np.ndarray) -> None:
+        d = float(np.linalg.norm(self.center - vec))
+        if len(self.cand) >= self.xk and d >= self.cand[-1][0]:
+            return
+        import bisect
+        keys = [c[0] for c in self.cand]
+        i = bisect.bisect_left(keys, d)
+        self.cand.insert(i, (d, int(pk), np.asarray(vec, np.float32)))
+        if len(self.cand) > self.xk:
+            self.cand.pop()
+
+    def remove(self, pk: int) -> None:
+        self.cand = [c for c in self.cand if c[1] != pk]
+
+    # read ----------------------------------------------------------------
+    def topk_for(self, qvec: np.ndarray, k: int) -> List[Tuple[float, int]]:
+        """Re-rank materialized candidates for the actual query vector."""
+        if not self.cand:
+            return []
+        vecs = np.stack([c[2] for c in self.cand])
+        d = np.sqrt(((vecs - qvec[None, :]) ** 2).sum(axis=1))
+        order = np.argsort(d)[:k]
+        return [(float(d[i]), self.cand[i][1]) for i in order]
+
+    @property
+    def size_bytes(self) -> int:
+        dim = len(self.center)
+        return len(self.cand) * (8 + 4 + 4 * dim) + 4 * dim + 64

@@ -1,0 +1,45 @@
+"""Pallas TPU kernel: fused multi-predicate range filter -> bitmap.
+
+ARCADE's hybrid-search plans intersect bitmaps from several secondary
+indexes (paper §5); residual predicates over scalar columns are evaluated
+with this fused kernel: one pass over the (BLOCK_N, c) column tile
+evaluates every range predicate and ANDs them on the VPU — the dense-
+bitmap adaptation of the paper's bitmap intersection (DESIGN.md).
+Output is int8 (0/1): TPU-friendly mask representation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 1024
+
+
+def _bitmap_kernel(cols_ref, bounds_ref, out_ref):
+    """cols: (BLOCK_N, c) fp32; bounds: (c, 2); out: (BLOCK_N,) int8."""
+    cols = cols_ref[...]
+    bounds = bounds_ref[...]
+    lo = bounds[:, 0][None, :]
+    hi = bounds[:, 1][None, :]
+    ok = jnp.logical_and(cols >= lo, cols <= hi)
+    out_ref[...] = jnp.all(ok, axis=1).astype(jnp.int8)
+
+
+def bitmap_filter(cols: jnp.ndarray, bounds: jnp.ndarray,
+                  interpret: bool = True) -> jnp.ndarray:
+    """cols: (n, c) fp32; bounds: (c, 2) -> (n,) int8 mask."""
+    n, c = cols.shape
+    assert n % BLOCK_N == 0, n
+    grid = (n // BLOCK_N,)
+    return pl.pallas_call(
+        _bitmap_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_N, c), lambda i: (i, 0)),
+            pl.BlockSpec((c, 2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int8),
+        interpret=interpret,
+    )(cols, bounds)

@@ -1,0 +1,217 @@
+"""Jit'd wrappers over the Pallas kernels with numpy-friendly padding.
+
+Every op has two backends selected by ``use_pallas``:
+  * pallas  — the TPU-target kernels, executed in interpret mode on CPU
+              (correctness path; sweeps validated against ref.py);
+  * ref     — jnp oracles from ref.py, jit-compiled (fast on CPU).
+
+The host-side ARCADE engine calls these for all per-segment compute:
+distance scans, PQ ADC, predicate bitmaps, top-k merges.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import bitmap_filter as bf_kernel
+from repro.kernels import ivf_scan as ivf_kernel
+from repro.kernels import pq_adc as pq_kernel
+from repro.kernels import ref
+from repro.kernels import topk_merge as tk_kernel
+
+# global backend switch (tests flip it); env override for benchmarks
+USE_PALLAS = os.environ.get("REPRO_USE_PALLAS", "0") == "1"
+
+
+def _pad_to(x: np.ndarray, mult: int, axis: int, value=0.0) -> np.ndarray:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return np.pad(x, widths, constant_values=value)
+
+
+def _bucket(n: int, floor: int = 128) -> int:
+    """Round up to the next power-of-two bucket (>= floor): bounds the
+    number of distinct jit shapes from ragged posting lists to O(log n)."""
+    b = floor
+    while b < n:
+        b *= 2
+    return b
+
+
+def _pad_bucket(x: np.ndarray, axis: int, value=0.0,
+                floor: int = 128) -> np.ndarray:
+    n = x.shape[axis]
+    b = _bucket(n, floor)
+    if b == n:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, b - n)
+    return np.pad(x, widths, constant_values=value)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_ivf_ref():
+    return jax.jit(ref.ivf_scan_ref)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_pq_ref():
+    return jax.jit(ref.pq_adc_ref)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_bitmap_ref():
+    return jax.jit(ref.bitmap_filter_ref)
+
+
+# ---------------------------------------------------------------------------
+# distance scans
+# ---------------------------------------------------------------------------
+
+# Below this many MACs the fixed device-dispatch cost dominates: run the
+# op on the host (the TPU-production analog: tiny index probes stay on the
+# host CPU; large posting scans go to the accelerator kernels).
+HOST_FLOP_CUTOFF = 4_000_000
+
+
+def l2_distances(q: np.ndarray, x: np.ndarray,
+                 use_pallas: bool = None) -> np.ndarray:
+    """Squared L2: q (nq, d), x (n, d) -> (nq, n) fp32."""
+    use_pallas = USE_PALLAS if use_pallas is None else use_pallas
+    q = np.asarray(q, np.float32)
+    x = np.asarray(x, np.float32)
+    if len(x) == 0:
+        return np.zeros((len(q), 0), np.float32)
+    if not use_pallas and q.shape[0] * x.shape[0] * x.shape[1] \
+            < HOST_FLOP_CUTOFF:
+        qn = (q * q).sum(1)[:, None]
+        xn = (x * x).sum(1)[None, :]
+        return qn - 2.0 * (q @ x.T) + xn
+    if use_pallas:
+        qp = _pad_to(q, ivf_kernel.BLOCK_Q, 0)
+        xp = _pad_bucket(_pad_to(x, ivf_kernel.BLOCK_N, 0, value=1e30),
+                         0, value=1e30, floor=ivf_kernel.BLOCK_N)
+        out = np.asarray(ivf_kernel.ivf_scan(jnp.asarray(qp),
+                                             jnp.asarray(xp)))
+        return out[:len(q), :len(x)]
+    qp = _pad_bucket(q, 0, floor=8)
+    xp = _pad_bucket(x, 0)
+    out = np.asarray(_jit_ivf_ref()(jnp.asarray(qp), jnp.asarray(xp)))
+    return out[:len(q), :len(x)]
+
+
+def assign_nearest(x: np.ndarray, centroids: np.ndarray,
+                   chunk: int = 16384) -> np.ndarray:
+    """argmin over centroids per row (chunked for memory)."""
+    out = np.empty(len(x), np.int64)
+    for i in range(0, len(x), chunk):
+        d = l2_distances(x[i:i + chunk], centroids)
+        out[i:i + chunk] = np.argmin(d, axis=1)
+    return out
+
+
+def block_topk(q: np.ndarray, vecs: np.ndarray, k: int,
+               use_pallas: bool = None) -> Tuple[np.ndarray, np.ndarray]:
+    """Top-k nearest of q among vecs -> (dists sorted, indices)."""
+    d = l2_distances(q[None, :], vecs, use_pallas=use_pallas)[0]
+    k = min(k, len(d))
+    idx = np.argpartition(d, k - 1)[:k]
+    order = np.argsort(d[idx], kind="stable")
+    return d[idx][order], idx[order]
+
+
+# ---------------------------------------------------------------------------
+# PQ ADC
+# ---------------------------------------------------------------------------
+
+def pq_adc_distances(q: np.ndarray, codes: np.ndarray,
+                     codebooks: np.ndarray,
+                     use_pallas: bool = None) -> np.ndarray:
+    """q (d,); codes (n, m) uint8; codebooks (m, 256, dsub) -> (n,) fp32."""
+    use_pallas = USE_PALLAS if use_pallas is None else use_pallas
+    m, n_codes, dsub = codebooks.shape
+    qs = q.reshape(m, dsub)
+    # LUT: distance from q's subvector to every codeword
+    lut = ((codebooks - qs[:, None, :]) ** 2).sum(axis=2)   # (m, 256)
+    if len(codes) == 0:
+        return np.zeros((0,), np.float32)
+    if not use_pallas and codes.size < HOST_FLOP_CUTOFF:
+        return np.take_along_axis(
+            lut.T, codes.astype(np.int64), axis=0).sum(axis=1) \
+            .astype(np.float32)
+    if use_pallas:
+        cp = _pad_bucket(_pad_to(codes.astype(np.int32),
+                                 pq_kernel.BLOCK_N, 0), 0,
+                         floor=pq_kernel.BLOCK_N)
+        out = np.asarray(pq_kernel.pq_adc(jnp.asarray(cp),
+                                          jnp.asarray(lut, jnp.float32)))
+        return out[:len(codes)]
+    cp = _pad_bucket(codes.astype(np.int32), 0)
+    out = np.asarray(_jit_pq_ref()(jnp.asarray(cp),
+                                   jnp.asarray(lut, jnp.float32)))
+    return out[:len(codes)]
+
+
+# ---------------------------------------------------------------------------
+# predicate bitmaps
+# ---------------------------------------------------------------------------
+
+def range_bitmap(cols: np.ndarray, bounds: np.ndarray,
+                 use_pallas: bool = None) -> np.ndarray:
+    """cols (n, c) fp32; bounds (c, 2) -> (n,) bool (AND of range preds)."""
+    use_pallas = USE_PALLAS if use_pallas is None else use_pallas
+    cols = np.asarray(cols, np.float32)
+    bounds = np.asarray(bounds, np.float32)
+    if len(cols) == 0:
+        return np.zeros((0,), bool)
+    if not use_pallas and cols.size < HOST_FLOP_CUTOFF:
+        return np.all((cols >= bounds[:, 0][None])
+                      & (cols <= bounds[:, 1][None]), axis=1)
+    if use_pallas:
+        cp = _pad_bucket(_pad_to(cols, bf_kernel.BLOCK_N, 0, value=np.inf),
+                         0, value=np.inf, floor=bf_kernel.BLOCK_N)
+        out = np.asarray(bf_kernel.bitmap_filter(jnp.asarray(cp),
+                                                 jnp.asarray(bounds)))
+        return out[:len(cols)].astype(bool)
+    cp = _pad_bucket(cols, 0, value=np.inf)
+    out = np.asarray(_jit_bitmap_ref()(jnp.asarray(cp),
+                                       jnp.asarray(bounds)))
+    return out[:len(cols)]
+
+
+def rect_filter(points: np.ndarray, rect,
+                use_pallas: bool = None) -> np.ndarray:
+    """points (n, 2); rect (xmin, ymin, xmax, ymax) -> (n,) bool."""
+    r = np.asarray(rect, np.float32)
+    bounds = np.stack([[r[0], r[2]], [r[1], r[3]]])       # (2, 2)
+    return range_bitmap(np.asarray(points, np.float32), bounds,
+                        use_pallas=use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# top-k merge
+# ---------------------------------------------------------------------------
+
+def merge_topk(dists: np.ndarray, ids: np.ndarray, k: int,
+               use_pallas: bool = None) -> Tuple[np.ndarray, np.ndarray]:
+    """Merge S per-segment top-k lists (s, kk) -> global (k,)."""
+    use_pallas = USE_PALLAS if use_pallas is None else use_pallas
+    dists = np.asarray(dists, np.float32)
+    ids = np.asarray(ids, np.int64)
+    k = min(k, dists.size)
+    if k == 0:
+        return np.zeros((0,), np.float32), np.zeros((0,), np.int64)
+    if use_pallas:
+        d, i = tk_kernel.topk_merge(jnp.asarray(dists), jnp.asarray(ids), k)
+        return np.asarray(d), np.asarray(i)
+    d, i = ref.topk_merge_ref(jnp.asarray(dists), jnp.asarray(ids), k)
+    return np.asarray(d), np.asarray(i)

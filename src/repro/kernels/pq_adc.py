@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: PQ asymmetric-distance computation (ADC).
+
+GPU PQ scan uses shared-memory LUT gathers; TPUs have no fast random
+gather, so the idiomatic port is a one-hot matmul: for subquantizer j,
+dist_j = onehot(codes[:, j]) @ lut[j] runs on the MXU with the (256,)
+LUT row resident in VMEM (DESIGN.md hardware-adaptation table).
+
+Grid tiles the code block dim; the (m, 256) LUT is broadcast to every
+tile (tiny: m*256*4 bytes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 512        # codes per tile
+
+
+def _pq_adc_kernel(codes_ref, lut_ref, out_ref):
+    """codes: (BLOCK_N, m) int32; lut: (m, 256) fp32; out: (BLOCK_N,)."""
+    codes = codes_ref[...]
+    lut = lut_ref[...]
+    m = codes.shape[1]
+    acc = jnp.zeros((codes.shape[0],), jnp.float32)
+    for j in range(m):          # static unroll over subquantizers
+        onehot = (codes[:, j][:, None] ==
+                  jax.lax.broadcasted_iota(jnp.int32, (1, 256), 1))
+        acc = acc + jax.lax.dot_general(
+            onehot.astype(jnp.float32), lut[j][:, None],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[:, 0]
+    out_ref[...] = acc
+
+
+def pq_adc(codes: jnp.ndarray, lut: jnp.ndarray,
+           interpret: bool = True) -> jnp.ndarray:
+    """codes: (n, m) int32 in [0, 256); lut: (m, 256) fp32 -> (n,) fp32."""
+    n, m = codes.shape
+    assert n % BLOCK_N == 0, n
+    grid = (n // BLOCK_N,)
+    return pl.pallas_call(
+        _pq_adc_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_N, m), lambda i: (i, 0)),
+            pl.BlockSpec((m, 256), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(codes, lut)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness reference).
+
+Each function mirrors one kernel's semantics exactly; kernel tests sweep
+shapes/dtypes and assert_allclose kernel(interpret=True) vs these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ivf_scan_ref(q: jnp.ndarray, vecs: jnp.ndarray) -> jnp.ndarray:
+    """Squared-L2 distances. q: (nq, d); vecs: (n, d) -> (nq, n) fp32."""
+    q = q.astype(jnp.float32)
+    v = vecs.astype(jnp.float32)
+    qn = jnp.sum(q * q, axis=-1, keepdims=True)          # (nq, 1)
+    vn = jnp.sum(v * v, axis=-1)[None, :]                # (1, n)
+    return qn - 2.0 * (q @ v.T) + vn
+
+
+def pq_adc_ref(codes: jnp.ndarray, lut: jnp.ndarray) -> jnp.ndarray:
+    """ADC: codes (n, m) uint8; lut (m, 256) fp32 -> (n,) summed distances."""
+    m = codes.shape[1]
+    take = jnp.take_along_axis(lut.T, codes.astype(jnp.int32), axis=0)
+    # lut.T: (256, m); gather per column j at codes[:, j]
+    return jnp.sum(take.astype(jnp.float32), axis=1)
+
+
+def bitmap_filter_ref(cols: jnp.ndarray, bounds: jnp.ndarray) -> jnp.ndarray:
+    """cols (n, c) fp32; bounds (c, 2) [lo, hi] inclusive -> (n,) bool:
+    AND over all per-column range predicates (fused multi-predicate)."""
+    lo = bounds[:, 0][None, :]
+    hi = bounds[:, 1][None, :]
+    ok = (cols >= lo) & (cols <= hi)
+    return jnp.all(ok, axis=1)
+
+
+def topk_merge_ref(dists: jnp.ndarray, ids: jnp.ndarray, k: int):
+    """Merge S sorted top-k lists: dists/ids (s, k) -> global (k,), (k,)."""
+    flat_d = dists.reshape(-1)
+    flat_i = ids.reshape(-1)
+    order = jnp.argsort(flat_d)[:k]
+    return flat_d[order], flat_i[order]
+
+
+def rect_filter_ref(points: jnp.ndarray, rect: jnp.ndarray) -> jnp.ndarray:
+    """points (n, 2); rect (4,) = (xmin, ymin, xmax, ymax) -> (n,) bool."""
+    x, y = points[:, 0], points[:, 1]
+    return (x >= rect[0]) & (x <= rect[2]) & (y >= rect[1]) & (y <= rect[3])

@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: merge per-segment top-k lists into a global top-k.
+
+ARCADE's "top-level merging iterator" (paper §4) combines per-SST results;
+on TPU the scatter-gather query path merges S per-shard top-k lists with
+this kernel: iterative masked-argmin selection over the flattened
+(S*K,) candidates held in VMEM — k passes of a VPU reduction, no host
+heap. k is small (<= a few hundred), so k * S * K ops stay negligible
+next to the distance scans.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _topk_merge_kernel(d_ref, i_ref, out_d_ref, out_i_ref, *, k: int):
+    d = d_ref[...].reshape(-1).astype(jnp.float32)
+    ids = i_ref[...].reshape(-1)
+
+    def body(j, carry):
+        d_work, od, oi = carry
+        pos = jnp.argmin(d_work)
+        od = od.at[j].set(d_work[pos])
+        oi = oi.at[j].set(ids[pos])
+        d_work = d_work.at[pos].set(jnp.inf)
+        return d_work, od, oi
+
+    od0 = jnp.full((k,), jnp.inf, jnp.float32)
+    oi0 = jnp.zeros((k,), ids.dtype)
+    _, od, oi = jax.lax.fori_loop(0, k, body, (d, od0, oi0))
+    out_d_ref[...] = od
+    out_i_ref[...] = oi
+
+
+def topk_merge(dists: jnp.ndarray, ids: jnp.ndarray, k: int,
+               interpret: bool = True):
+    """dists/ids: (s, kk) -> ((k,), (k,)) globally smallest."""
+    s, kk = dists.shape
+    kern = functools.partial(_topk_merge_kernel, k=k)
+    return pl.pallas_call(
+        kern,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((s, kk), lambda i: (0, 0)),
+            pl.BlockSpec((s, kk), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+            jax.ShapeDtypeStruct((k,), ids.dtype),
+        ],
+        interpret=interpret,
+    )(dists, ids)

@@ -1,0 +1,323 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver builds ShapeDtypeStruct stand-ins for all inputs
+(no allocation), jits the appropriate step with explicit in/out shardings,
+``.lower().compile()``s it for the production mesh, and records
+``memory_analysis`` / ``cost_analysis`` / collective-schedule roofline
+terms into a JSON report consumed by EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both \
+      --out reports/dryrun.json
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, get_config, get_shape, SHAPES
+from repro.configs.base import cell_supported
+from repro.launch import roofline as rl
+from repro.launch.mesh import HBM_BYTES, make_production_mesh
+from repro.models import model
+from repro.sharding import partition
+from repro.train import optimizer as opt_lib
+from repro.train import train_step as ts
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _shard(mesh, rules, shape, axes):
+    spec = partition.safe_spec(shape, axes, mesh, rules)
+    return NamedSharding(mesh, spec)
+
+
+def input_specs(cfg, shape, mesh, rules) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of the cell."""
+    b, s = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {}
+    if shape.kind in ("train", "prefill"):
+        tok_sh = _shard(mesh, rules, (b, s), ("batch", None))
+        specs["tokens"] = _sds((b, s), jnp.int32, tok_sh)
+        if shape.kind == "train":
+            specs["labels"] = _sds((b, s), jnp.int32, tok_sh)
+        mem = memory_spec(cfg, shape, mesh, rules)
+        if mem is not None:
+            specs["memory"] = mem
+    else:  # decode
+        tok_sh = _shard(mesh, rules, (b, 1), ("batch", None))
+        specs["token"] = _sds((b, 1), jnp.int32, tok_sh)
+        specs["pos"] = _sds((), jnp.int32,
+                            NamedSharding(mesh, P()))
+        mem = memory_spec(cfg, shape, mesh, rules)
+        if mem is not None:
+            specs["memory"] = mem
+    return specs
+
+
+def memory_spec(cfg, shape, mesh, rules):
+    """Modality-frontend stub inputs (precomputed embeddings)."""
+    b = shape.global_batch
+    if cfg.family == "audio":
+        m = int(shape.seq_len * cfg.encdec.frontend_len_ratio)
+        return _sds((b, m, cfg.d_model), jnp.bfloat16,
+                    _shard(mesh, rules, (b, m, cfg.d_model),
+                           ("batch", None, None)))
+    if cfg.family == "vlm":
+        m = cfg.vision.num_image_tokens
+        return _sds((b, m, cfg.d_model), jnp.bfloat16,
+                    _shard(mesh, rules, (b, m, cfg.d_model),
+                           ("batch", None, None)))
+    return None
+
+
+def _tree_shardings(axes, shapes, mesh, rules):
+    return partition.tree_sharding(axes, mesh, rules, shapes)
+
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    status: str
+    compile_s: float = 0.0
+    per_device_bytes: float = 0.0
+    fits_hbm: Optional[bool] = None
+    roofline: Optional[Dict] = None
+    error: str = ""
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               compile_only: bool = True) -> Tuple[Any, Any, Any]:
+    """Build + lower + compile one cell; returns (compiled, mesh, extras)."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        raise ValueError(f"SKIP: {why}")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    kind = "long" if shape.name == "long_500k" else shape.kind
+    tp = mesh.shape["model"]
+    eff_heads = cfg.num_heads
+    if os.environ.get("DRYRUN_KV_INT8") == "1" and cfg.attn_type == "gqa":
+        cfg = cfg.replace(kv_cache_dtype="int8")
+    if os.environ.get("DRYRUN_GHOST_HEADS") == "1" and \
+            cfg.attn_type == "gqa" and cfg.num_heads % tp != 0:
+        from repro.configs.base import ghost_head_layout
+        cfg = cfg.replace(pad_heads_to_tp=tp)
+        eff_heads = ghost_head_layout(cfg.num_heads, cfg.num_kv_heads,
+                                      tp)[0]
+    rules = partition.rules_for(kind, num_heads=eff_heads, tp=tp)
+    if os.environ.get("DRYRUN_RES_SEQ") == "1" and kind == "train":
+        rules["res_seq"] = "model"
+    specs = input_specs(cfg, shape, mesh, rules)
+
+    if shape.kind == "train":
+        opt_cfg = opt_lib.OptConfig(name=cfg.optimizer)
+        st_shapes = ts.train_state_shapes(cfg, opt_cfg)
+        st_axes = ts.state_axes(cfg, opt_cfg)
+        st_shard = _tree_shardings(st_axes, st_shapes, mesh, rules)
+        state_in = jax.tree.map(
+            lambda s, sh: _sds(s.shape, s.dtype, sh), st_shapes, st_shard)
+        batch = {k: specs[k] for k in ("tokens", "labels")}
+        if "memory" in specs:
+            batch["memory"] = specs["memory"]
+        # microbatching: ~32-sequence microbatches keep the per-layer
+        # residual stack + loss temps inside the v5e HBM envelope;
+        # widest models (d_model >= 8k, e.g. vision-90b) halve again
+        per_micro = 16 if cfg.d_model >= 8000 else 32
+        if os.environ.get("DRYRUN_PER_MICRO"):
+            per_micro = int(os.environ["DRYRUN_PER_MICRO"])
+        n_micro = max(1, shape.global_batch // per_micro)
+        g_axes = st_axes["params"] if os.environ.get(
+            "DRYRUN_GRAD_CONSTRAIN", "1") == "1" else None
+
+        def step(state, batch):
+            with partition.axis_rules(mesh, rules):
+                return ts.train_step(state, batch, cfg, opt_cfg,
+                                     num_microbatches=n_micro,
+                                     grad_axes=g_axes)
+
+        jitted = jax.jit(step, in_shardings=(st_shard, None),
+                         out_shardings=(st_shard, None),
+                         donate_argnums=(0,))
+        lowered = jitted.lower(state_in, batch)
+
+    elif shape.kind == "prefill":
+        p_shapes = model.param_shapes(cfg)
+        p_axes = model.param_axes(cfg)
+        p_shard = _tree_shardings(p_axes, p_shapes, mesh, rules)
+        params_in = jax.tree.map(
+            lambda s, sh: _sds(s.shape, s.dtype, sh), p_shapes, p_shard)
+
+        n_chunks = int(os.environ.get("DRYRUN_PREFILL_CHUNKS", "1"))
+
+        def step(params, tokens, memory=None):
+            with partition.axis_rules(mesh, rules):
+                if n_chunks <= 1:
+                    return model.forward(params, cfg, tokens, memory)
+                # chunked prefill: sequence the batch through the model in
+                # B/n_chunks slices (bounds live activations; Perf B1)
+                b = tokens.shape[0]
+                tok_c = tokens.reshape(n_chunks, b // n_chunks, -1)
+                if memory is not None:
+                    mem_c = memory.reshape(n_chunks, b // n_chunks,
+                                           *memory.shape[1:])
+                    return jax.lax.map(
+                        lambda args: model.forward(params, cfg, args[0],
+                                                   args[1]),
+                        (tok_c, mem_c))
+                return jax.lax.map(
+                    lambda t: model.forward(params, cfg, t), tok_c)
+
+        args = [params_in, specs["tokens"]]
+        if "memory" in specs:
+            args.append(specs["memory"])
+        jitted = jax.jit(step, in_shardings=(p_shard,) + (None,) * (len(args) - 1))
+        lowered = jitted.lower(*args)
+
+    else:  # decode
+        p_shapes = model.param_shapes(cfg)
+        p_axes = model.param_axes(cfg)
+        p_shard = _tree_shardings(p_axes, p_shapes, mesh, rules)
+        params_in = jax.tree.map(
+            lambda s, sh: _sds(s.shape, s.dtype, sh), p_shapes, p_shard)
+        c_shapes, c_axes = model.cache_shapes(cfg, shape.global_batch,
+                                              shape.seq_len)
+        c_shard = _tree_shardings(c_axes, c_shapes, mesh, rules)
+        cache_in = jax.tree.map(
+            lambda s, sh: _sds(s.shape, s.dtype, sh), c_shapes, c_shard)
+
+        def step(params, token, cache, pos, memory=None):
+            with partition.axis_rules(mesh, rules):
+                return model.decode_step(params, cfg, token, cache, pos,
+                                         memory=memory)
+
+        args = [params_in, specs["token"], cache_in, specs["pos"]]
+        in_sh = [p_shard, None, c_shard, None]
+        if "memory" in specs:
+            args.append(specs["memory"])
+            in_sh.append(None)
+        jitted = jax.jit(step, in_shardings=tuple(in_sh),
+                         out_shardings=(None, c_shard),
+                         donate_argnums=(2,))
+        lowered = jitted.lower(*args)
+
+    compiled = lowered.compile()
+    return compiled, mesh, (cfg, shape)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True) -> CellResult:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    try:
+        compiled, mesh, (cfg, shape) = lower_cell(arch, shape_name, multi_pod)
+    except ValueError as e:
+        if str(e).startswith("SKIP"):
+            return CellResult(arch, shape_name, mesh_name, "skipped",
+                              error=str(e))
+        return CellResult(arch, shape_name, mesh_name, "error",
+                          error=traceback.format_exc()[-2000:])
+    except Exception:
+        return CellResult(arch, shape_name, mesh_name, "error",
+                          error=traceback.format_exc()[-2000:])
+    dt = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    per_dev = 0.0
+    if ma is not None:
+        per_dev = float(ma.argument_size_in_bytes + ma.output_size_in_bytes
+                        - ma.alias_size_in_bytes + ma.temp_size_in_bytes)
+    n_dev = mesh.devices.size
+    mflops = rl.model_flops_for(cfg, shape)
+    roof = rl.analyze(compiled, n_dev, mflops)
+    res = CellResult(
+        arch=arch, shape=shape_name, mesh=mesh_name, status="ok",
+        compile_s=round(dt, 1), per_device_bytes=per_dev,
+        fits_hbm=bool(per_dev <= HBM_BYTES),
+        roofline={
+            "flops_per_dev": roof.flops,
+            "hbm_bytes_per_dev": roof.hbm_bytes,
+            "coll_bytes_per_dev": roof.coll_bytes,
+            "coll_by_kind": roof.coll_by_kind,
+            "compute_s": roof.compute_s,
+            "memory_s": roof.memory_s,
+            "collective_s": roof.collective_s,
+            "bottleneck": roof.bottleneck,
+            "model_flops": roof.model_flops,
+            "useful_ratio": roof.useful_ratio,
+            "step_time_s": roof.step_time_s,
+        })
+    if verbose:
+        print(f"[{mesh_name}] {arch} x {shape_name}: OK "
+              f"compile={dt:.0f}s bytes/dev={per_dev/2**30:.2f}GiB "
+              f"fits={res.fits_hbm} bottleneck={roof.bottleneck} "
+              f"(c={roof.compute_s:.4f}s m={roof.memory_s:.4f}s "
+              f"k={roof.collective_s:.4f}s)", flush=True)
+        print("  memory_analysis:", ma, flush=True)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["no", "yes", "both"], default="no")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = list(ASSIGNED_ARCHS) if args.all or not args.arch else [args.arch]
+    shapes = [s.name for s in SHAPES] if args.all or not args.shape \
+        else [args.shape]
+    pods = {"no": [False], "yes": [True], "both": [False, True]}[args.multi_pod]
+
+    results = []
+
+    def _save():
+        if args.out:
+            os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+
+    for mp in pods:
+        for arch in archs:
+            for shape in shapes:
+                res = run_cell(arch, shape, mp)
+                if res.status == "error":
+                    print(f"[{'2x16x16' if mp else '16x16'}] {arch} x {shape}"
+                          f": ERROR\n{res.error}", flush=True)
+                elif res.status == "skipped":
+                    print(f"[{'2x16x16' if mp else '16x16'}] {arch} x {shape}"
+                          f": SKIPPED ({res.error})", flush=True)
+                results.append(dataclasses.asdict(res))
+                _save()
+                jax.clear_caches()
+    if args.out:
+        print(f"wrote {args.out}")
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    print(f"SUMMARY: {n_ok} ok, {n_skip} skipped, {n_err} errors "
+          f"of {len(results)} cells")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,216 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = collective_bytes_per_device / link_bw
+
+``cost_analysis`` on the partitioned executable reports the per-device
+program, so the per-chip division is already done. Collective bytes are NOT
+in cost_analysis: we parse the post-SPMD optimized HLO and sum operand
+sizes of every collective op, weighting all-reduce 2x (ring = reduce-
+scatter + all-gather).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# result-shape(s) of an op line: one or more `dtype[d0,d1,...]` groups
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# bytes moved per byte of payload (asymptotic ring factors)
+_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+           "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Tuple[float, Dict[str, float]]:
+    """Weighted bytes moved through ICI per device, by collective kind."""
+    per_kind: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        lhs, rhs = stripped.split("=", 1)
+        rhs = rhs.strip()
+        for kind in _COLLECTIVES:
+            # match `bf16[...] all-reduce(` / `all-gather-start(` forms;
+            # skip `-done` (payload already counted at `-start`).
+            m = re.search(rf"\b{kind}(-start)?\(", rhs)
+            if not m:
+                continue
+            if re.search(rf"\b{kind}-done\(", rhs):
+                continue
+            # result shape: text before the op name
+            head = rhs[:m.start()]
+            size = _shape_bytes(head)
+            per_kind[kind] = per_kind.get(kind, 0.0) + size * _FACTOR[kind]
+            break
+    return sum(per_kind.values()), per_kind
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device bytes accessed
+    coll_bytes: float            # per-device weighted collective bytes
+    coll_by_kind: Dict[str, float]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float = 0.0     # 6*N*D (useful flops, global)
+    n_devices: int = 1
+
+    @property
+    def useful_ratio(self) -> Optional[float]:
+        if not self.model_flops:
+            return None
+        total = self.flops * self.n_devices
+        return self.model_flops / total if total else None
+
+    @property
+    def step_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the step that is pure compute at peak — i.e. how
+        close the dominant term is to the compute roofline."""
+        t = self.step_time_s
+        return self.compute_s / t if t else 0.0
+
+
+def analyze(compiled, n_devices: int, model_flops: float = 0.0) -> Roofline:
+    """Roofline terms from the optimized per-device HLO.
+
+    Uses the trip-count-aware HLO walker (launch.hlo_cost) rather than
+    ``compiled.cost_analysis()``: XLA's built-in analysis counts while-loop
+    bodies once, which under-counts every scanned layer/chunk/microbatch
+    loop (verified empirically — see EXPERIMENTS.md §Method).
+    """
+    from repro.launch import hlo_cost
+    hc = hlo_cost.analyze_hlo(compiled.as_text())
+    flops = hc.flops
+    hbm = hc.hbm_bytes
+    coll, by_kind = hc.coll_bytes, dict(hc.coll_bytes_by_kind)
+    c_s = flops / PEAK_FLOPS_BF16
+    m_s = hbm / HBM_BW
+    k_s = coll / ICI_BW
+    terms = {"compute": c_s, "memory": m_s, "collective": k_s}
+    bottleneck = max(terms, key=terms.get)
+    return Roofline(flops=flops, hbm_bytes=hbm, coll_bytes=coll,
+                    coll_by_kind=by_kind, compute_s=c_s, memory_s=m_s,
+                    collective_s=k_s, bottleneck=bottleneck,
+                    model_flops=model_flops, n_devices=n_devices)
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS = 6 * N * D  (dense)  or  6 * N_active * D (MoE); decode uses
+# 2 * N * D_new (forward only, one token per step per sequence).
+# ---------------------------------------------------------------------------
+
+def count_params(cfg, active_only: bool = False) -> float:
+    """Approximate parameter count from the config (embedding included)."""
+    d, v, L = cfg.d_model, cfg.vocab_size, cfg.num_layers
+    hd = cfg.resolved_head_dim
+    n = v * d * (1 if cfg.tie_embeddings else 2)
+
+    def attn_params():
+        if cfg.attn_type == "mla":
+            m = cfg.mla
+            qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+            return (d * m.q_lora_rank + m.q_lora_rank * cfg.num_heads * qk
+                    + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                    + m.kv_lora_rank * cfg.num_heads
+                    * (m.qk_nope_head_dim + m.v_head_dim)
+                    + cfg.num_heads * m.v_head_dim * d)
+        if cfg.attn_type == "none":
+            return 0
+        return (d * cfg.num_heads * hd + 2 * d * cfg.num_kv_heads * hd
+                + cfg.num_heads * hd * d)
+
+    def mlp_params(ff):
+        return 3 * d * ff
+
+    if cfg.family == "moe":
+        m = cfg.moe
+        n += m.first_dense_layers * (attn_params() + mlp_params(m.dense_d_ff))
+        moe_layers = L - m.first_dense_layers
+        routed = mlp_params(m.expert_d_ff)
+        shared = mlp_params(m.expert_d_ff * m.num_shared_experts)
+        per_layer_total = attn_params() + m.num_experts * routed + shared
+        per_layer_active = attn_params() + m.top_k * routed + shared
+        n_total = n + moe_layers * per_layer_total
+        n_active = n + moe_layers * per_layer_active \
+            + m.first_dense_layers * (attn_params() + mlp_params(m.dense_d_ff))
+        return n_active if active_only else n_total
+
+    if cfg.family == "ssm":   # xLSTM
+        xl = cfg.xlstm
+        di_m = int(xl.mlstm_proj_factor * d)
+        ml = d * 2 * di_m + 3 * di_m * di_m // cfg.num_heads * cfg.num_heads \
+            + di_m * d
+        sl = d * 4 * d + 3 * d * int(xl.slstm_proj_factor * d)
+        n += (L // 2) * (ml + sl)
+        return n
+
+    if cfg.family == "hybrid":
+        s = cfg.ssm
+        d_inner = s.expand * d
+        mamba = d * (2 * d_inner + 2 * s.d_state + d_inner // s.head_dim) \
+            + d_inner * d
+        n_mamba = L - (L // s.attn_every)
+        n_attn = 1 if s.shared_attn else L // s.attn_every
+        n += n_mamba * mamba + n_attn * (attn_params() + mlp_params(cfg.d_ff))
+        return n
+
+    if cfg.family == "audio":
+        enc = cfg.encdec.encoder_layers * (attn_params() + mlp_params(cfg.d_ff))
+        dec = L * (2 * attn_params() + mlp_params(cfg.d_ff))
+        return n + enc + dec
+
+    if cfg.family == "vlm":
+        per = cfg.vision.cross_attn_every
+        n_cross = L // per
+        n_self = L - n_cross
+        n += n_self * (attn_params() + mlp_params(cfg.d_ff))
+        n += n_cross * (attn_params() + mlp_params(cfg.d_ff))
+        return n
+
+    return n + L * (attn_params() + mlp_params(cfg.d_ff))
+
+
+def model_flops_for(cfg, shape) -> float:
+    n = count_params(cfg, active_only=(cfg.family == "moe"))
+    tokens = shape.seq_len * shape.global_batch
+    if shape.kind == "train":
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * tokens
+    # decode: one new token per sequence per step
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,3 @@
+from repro.models.model import (decode_step, encode, forward, init_cache,
+                                init_params, loss_fn, param_axes,
+                                param_shapes, trunk)

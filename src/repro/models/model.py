@@ -1,0 +1,229 @@
+"""Public model API: init / forward / loss / cache / decode for every arch.
+
+All functions are pure and jit-able. Parameter and cache pytrees carry a
+parallel *axes* pytree of logical axis names consumed by
+``repro.sharding.partition``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.transformer import Ctx, Stage, build_stages, stack_axes
+from repro.models.transformer import DenseBlock
+from repro.sharding.partition import constrain
+
+Pytree = Any
+
+EMBED_HEAD_DIM = 128   # ARCADE embedding dimensionality (paper §7.1)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig) -> Tuple[Pytree, Pytree]:
+    stages = build_stages(cfg)
+    keys = jax.random.split(key, len(stages) + 3)
+    params: Dict[str, Any] = {}
+    axes: Dict[str, Any] = {}
+    ep, ea = layers.embedding_init(keys[0], cfg.vocab_size, cfg.d_model,
+                                   cfg.tie_embeddings)
+    params["embedding"], axes["embedding"] = ep, ea
+    fp, fa = layers.rmsnorm_init(cfg.d_model)
+    params["final_norm"], axes["final_norm"] = fp, fa
+    for i, st in enumerate(stages):
+        p, a = st.init(keys[i + 1])
+        params[st.name], axes[st.name] = p, a
+    if cfg.mtp_depth:
+        k = keys[-2]
+        blk = DenseBlock(cfg, use_moe=False,
+                         d_ff=cfg.moe.dense_d_ff if cfg.moe else cfg.d_ff)
+        bp, ba = blk.init(k)
+        params["mtp"] = {
+            "proj": layers.dense_init(k, 2 * cfg.d_model, cfg.d_model),
+            "block": bp,
+        }
+        axes["mtp"] = {"proj": ("embed", "embed"), "block": ba}
+    if cfg.name.startswith("arcade-embedder"):
+        params["embed_head"] = layers.dense_init(keys[-1], cfg.d_model,
+                                                 EMBED_HEAD_DIM)
+        axes["embed_head"] = ("embed", None)
+    return params, axes
+
+
+def param_axes(cfg: ModelConfig) -> Pytree:
+    """Axes pytree without materializing parameters.
+
+    The axes tree is static Python structure; capture it by side effect
+    while abstractly evaluating the initializer (no allocation).
+    """
+    box = {}
+
+    def f(k):
+        p, a = init_params(k, cfg)
+        box["axes"] = a
+        return p
+
+    jax.eval_shape(f, jax.random.PRNGKey(0))
+    return box["axes"]
+
+
+def param_shapes(cfg: ModelConfig) -> Pytree:
+    return jax.eval_shape(lambda k: init_params(k, cfg)[0],
+                          jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# forward trunk
+# ---------------------------------------------------------------------------
+
+def _decoder_stages(cfg, stages):
+    return [s for s in stages if s.name != "encoder"]
+
+
+def _run_encoder(params, cfg, stages, memory):
+    """Audio family: run the (non-causal) encoder over frontend embeddings."""
+    enc = [s for s in stages if s.name == "encoder"]
+    if not enc or memory is None:
+        return memory
+    b, m, _ = memory.shape
+    pos = jnp.broadcast_to(jnp.arange(m, dtype=jnp.int32)[None], (b, m))
+    ctx = Ctx(cfg=cfg, positions=pos, causal=False)
+    h, _ = enc[0].apply(params["encoder"], memory, ctx, cfg.remat)
+    return h
+
+
+def trunk(params: Pytree, cfg: ModelConfig, tokens: jnp.ndarray,
+          memory: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens: (B, S) int32; memory: (B, M, D) modality-frontend embeddings.
+
+    Returns (hidden (B, S, D), aux_loss).
+    """
+    b, s = tokens.shape
+    tokens = constrain(tokens, ("batch", None))
+    x = layers.embed(params["embedding"], tokens)
+    x = constrain(x, ("batch", None, None))
+    stages = build_stages(cfg)
+    memory = _run_encoder(params, cfg, stages, memory)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    ctx = Ctx(cfg=cfg, positions=pos, memory=memory)
+    aux = 0.0
+    for st in _decoder_stages(cfg, stages):
+        x, a = st.apply(params[st.name], x, ctx, cfg.remat)
+        aux = aux + a
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux
+
+
+def forward(params: Pytree, cfg: ModelConfig, tokens: jnp.ndarray,
+            memory: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Full-sequence logits (B, S, V) — the prefill path."""
+    h, _ = trunk(params, cfg, tokens, memory)
+    logits = layers.unembed(params["embedding"], h)
+    return constrain(logits, ("batch", None, "vocab"))
+
+
+def encode(params: Pytree, cfg: ModelConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Mean-pooled embedding (B, EMBED_HEAD_DIM) — the ARCADE embedder path."""
+    h, _ = trunk(params, cfg, tokens)
+    pooled = jnp.mean(h.astype(jnp.float32), axis=1).astype(h.dtype)
+    if "embed_head" in params:
+        pooled = pooled @ params["embed_head"]
+    emb = pooled.astype(jnp.float32)
+    return emb / jnp.maximum(jnp.linalg.norm(emb, axis=-1, keepdims=True), 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# loss (with optional MTP)
+# ---------------------------------------------------------------------------
+
+def loss_fn(params: Pytree, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            mtp_weight: float = 0.3) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    tokens, labels = batch["tokens"], batch["labels"]
+    memory = batch.get("memory")
+    h, aux = trunk(params, cfg, tokens, memory)
+    logits = layers.unembed(params["embedding"], h)
+    logits = constrain(logits, ("batch", None, "vocab"))
+    main = layers.softmax_xent(logits, labels, cfg.vocab_size)
+    total = main + aux
+    metrics = {"loss": main, "aux": jnp.asarray(aux, jnp.float32)}
+
+    if cfg.mtp_depth:
+        # DeepSeek-V3 MTP: combine h_t with emb(token_{t+1}) and predict
+        # label_{t+1} (i.e. token t+2) through one extra block.
+        emb_next = layers.embed(params["embedding"], tokens)
+        h_in = jnp.concatenate(
+            [layers.rms_normalize(h[:, :-1]),
+             layers.rms_normalize(emb_next[:, 1:])], axis=-1)
+        h_mtp = h_in @ params["mtp"]["proj"]
+        b, sm, _ = h_mtp.shape
+        pos = jnp.broadcast_to(jnp.arange(sm, dtype=jnp.int32)[None], (b, sm))
+        blk = DenseBlock(cfg, use_moe=False,
+                         d_ff=cfg.moe.dense_d_ff if cfg.moe else cfg.d_ff)
+        h_mtp, _ = blk.apply(params["mtp"]["block"], h_mtp,
+                             Ctx(cfg=cfg, positions=pos))
+        mtp_logits = layers.unembed(params["embedding"], h_mtp)
+        mtp_loss = layers.softmax_xent(mtp_logits, labels[:, 1:],
+                                       cfg.vocab_size)
+        total = total + mtp_weight * mtp_loss
+        metrics["mtp_loss"] = mtp_loss
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Tuple[Pytree, Pytree]:
+    stages = build_stages(cfg)
+    caches, axes = {}, {}
+    for st in _decoder_stages(cfg, stages):
+        c, a = st.init_cache(batch, max_seq)
+        caches[st.name], axes[st.name] = c, a
+    return caches, axes
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_seq: int) -> Pytree:
+    box = {}
+
+    def f():
+        c, a = init_cache(cfg, batch, max_seq)
+        box["axes"] = a
+        return c
+
+    shapes = jax.eval_shape(f)
+    return shapes, box["axes"]
+
+
+def decode_step(params: Pytree, cfg: ModelConfig, token: jnp.ndarray,
+                cache: Pytree, pos,
+                memory: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, Pytree]:
+    """One-token serve step. token: (B, 1) int32; pos: scalar int32 index.
+
+    ``memory``: for audio, the *encoder output* (precomputed once at
+    prefill — the decode step must not re-run the encoder per token);
+    for vlm, the stubbed patch embeddings.
+    """
+    x = layers.embed(params["embedding"], token)
+    stages = build_stages(cfg)
+    ctx = Ctx(cfg=cfg, memory=memory, pos=pos)
+    new_cache = {}
+    for st in _decoder_stages(cfg, stages):
+        x, c = st.decode(params[st.name], x, cache[st.name], ctx)
+        new_cache[st.name] = c
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = layers.unembed(params["embedding"], x)
+    # mask padded-vocab tail so sampling/argmax never picks a pad id
+    vp = logits.shape[-1]
+    if vp > cfg.vocab_size:
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                        logits.ndim - 1)
+        logits = jnp.where(iota < cfg.vocab_size, logits,
+                           jnp.asarray(-1e30, logits.dtype))
+    return logits, new_cache

@@ -1,0 +1,105 @@
+"""Capacity-based grouped MoE (Switch/MaxText-style dense dispatch).
+
+Tokens are reshaped into groups of ``group_size``; per group a
+(S, E, C) dispatch/combine pair routes top-k tokens into per-expert
+capacity slots. The dispatch einsums keep the expert dim (logical axis
+"experts" -> mesh "model") and the group dim (logical "batch" -> mesh
+"data") sharded, which is EP x DP under GSPMD. Shared experts are a plain
+SwiGLU applied to every token (DeepSeek fine-grained design).
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.layers import Axes, Params
+from repro.sharding.partition import constrain
+
+
+def _capacity(group_size: int, top_k: int, num_experts: int,
+              capacity_factor: float) -> int:
+    c = math.ceil(group_size * top_k / num_experts * capacity_factor)
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def moe_init(key, d_model: int, moe) -> Tuple[Params, Axes]:
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    e, f = moe.num_experts, moe.expert_d_ff
+    params = {
+        "router": layers.dense_init(k1, d_model, e, dtype=jnp.float32),
+        "w_gate": jax.vmap(lambda k: layers.dense_init(k, d_model, f))(
+            jax.random.split(k2, e)),
+        "w_up": jax.vmap(lambda k: layers.dense_init(k, d_model, f))(
+            jax.random.split(k3, e)),
+        "w_down": jax.vmap(lambda k: layers.dense_init(k, f, d_model))(
+            jax.random.split(k4, e)),
+    }
+    axes = {
+        "router": ("embed", None),
+        "w_gate": ("experts", "embed", "ff"),
+        "w_up": ("experts", "embed", "ff"),
+        "w_down": ("experts", "ff", "embed"),
+    }
+    if moe.num_shared_experts:
+        shared_ff = moe.expert_d_ff * moe.num_shared_experts
+        p, a = layers.mlp_init(k5, d_model, shared_ff)
+        params["shared"], axes["shared"] = p, a
+    return params, axes
+
+
+def moe_apply(params: Params, x: jnp.ndarray, moe) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, M) -> (y, aux_loss)."""
+    b, s, m = x.shape
+    e, k = moe.num_experts, moe.top_k
+    g_size = min(moe.group_size, b * s)
+    n_groups = (b * s) // g_size
+    assert b * s % g_size == 0, (b, s, g_size)
+    c = _capacity(g_size, k, e, moe.capacity_factor)
+
+    xg = x.reshape(n_groups, g_size, m)
+    xg = constrain(xg, ("batch", None, None))
+
+    logits = (xg.astype(jnp.float32) @ params["router"])      # (G, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)           # (G, S, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # position of each assignment within its expert's capacity buffer:
+    # flatten (S, k) into a priority order, cumsum per expert.
+    mask = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)   # (G, S, k, E)
+    flat = mask.reshape(n_groups, g_size * k, e)
+    pos_flat = jnp.cumsum(flat, axis=1) - flat                # (G, S*k, E)
+    pos = pos_flat.reshape(n_groups, g_size, k, e)
+    keep = mask * (pos < c)
+    # combine: (G, S, E, C) weighted by gate value
+    pos_oh = jax.nn.one_hot(jnp.sum(pos * mask, axis=-1), c,
+                            dtype=jnp.float32)                # (G, S, k, C)
+    combine = jnp.einsum("gske,gsk,gskc->gsec",
+                         keep, gate_vals, pos_oh)
+    dispatch = (combine > 0).astype(x.dtype)
+    combine = combine.astype(x.dtype)
+    combine = constrain(combine, ("batch", None, "experts", None))
+    dispatch = constrain(dispatch, ("batch", None, "experts", None))
+
+    # route: (G, E, C, M)
+    expert_in = jnp.einsum("gsec,gsm->gecm", dispatch, xg)
+    expert_in = constrain(expert_in, ("batch", "experts", None, None))
+    h = (jax.nn.silu(jnp.einsum("gecm,emf->gecf", expert_in, params["w_gate"]))
+         * jnp.einsum("gecm,emf->gecf", expert_in, params["w_up"]))
+    expert_out = jnp.einsum("gecf,efm->gecm", h, params["w_down"])
+    expert_out = constrain(expert_out, ("batch", "experts", None, None))
+    y = jnp.einsum("gsec,gecm->gsm", combine, expert_out)
+
+    if "shared" in params:
+        y = y + layers.mlp_apply(params["shared"], xg)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    frac = jnp.mean(jnp.sum(keep, axis=2), axis=(0, 1))       # (E,) dispatch frac
+    prob = jnp.mean(probs, axis=(0, 1))                       # (E,)
+    aux = e * jnp.sum(frac * prob) * moe.aux_loss_weight
+
+    return y.reshape(b, s, m), aux

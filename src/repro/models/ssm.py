@@ -1,0 +1,407 @@
+"""State-space & recurrent sequence mixers: Mamba2 (SSD) and xLSTM blocks.
+
+Both families are sub-quadratic: full-sequence forward uses a chunkwise
+parallel form (O(S * chunk) memory), decode is an O(1) state update —
+this is what makes the long_500k cell feasible.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.layers import Axes, Params
+
+
+# ===========================================================================
+# Mamba2 (SSD, single group)
+# ===========================================================================
+
+def mamba2_init(key, d_model: int, ssm) -> Tuple[Params, Axes]:
+    d_inner = ssm.expand * d_model
+    n_heads = d_inner // ssm.head_dim
+    conv_ch = d_inner + 2 * ssm.d_state
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params = {
+        # (z, xBC, dt) fused input projection
+        "in_proj": layers.dense_init(k1, d_model,
+                                     2 * d_inner + 2 * ssm.d_state + n_heads),
+        "conv_w": (jax.random.normal(k2, (ssm.d_conv, conv_ch), jnp.float32)
+                   * 0.1).astype(layers.DTYPE),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm": jnp.ones((d_inner,), layers.DTYPE),
+        "out_proj": layers.dense_init(k3, d_inner, d_model),
+    }
+    axes = {
+        "in_proj": ("embed", "ff"),
+        "conv_w": (None, "ff"),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "norm": ("ff",),
+        "out_proj": ("ff", "embed"),
+    }
+    return params, axes
+
+
+def _split_zxbcdt(params, y, d_model, ssm):
+    d_inner = ssm.expand * d_model
+    n_heads = d_inner // ssm.head_dim
+    z = y[..., :d_inner]
+    xbc = y[..., d_inner:d_inner + d_inner + 2 * ssm.d_state]
+    dt = y[..., -n_heads:]
+    return z, xbc, dt, d_inner, n_heads
+
+
+def _causal_conv(xbc: jnp.ndarray, conv_w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over (B, L, C) with kernel (W, C)."""
+    w = conv_w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (w - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(w):
+        out = out + pad[:, i:i + xbc.shape[1], :].astype(jnp.float32) \
+            * conv_w[i].astype(jnp.float32)
+    return out.astype(xbc.dtype)
+
+
+def _gated_norm(y, z, scale, eps=1e-6):
+    g = y * jax.nn.silu(z)
+    return layers.rms_normalize(g, eps) * scale
+
+
+def mamba2_apply(params: Params, x: jnp.ndarray, ssm,
+                 d_model: int) -> jnp.ndarray:
+    """Chunkwise SSD, streamed: one ``lax.scan`` over chunks carrying the
+    (H, P, N) state. Per-iteration intermediates are O(B * Q^2 * H) —
+    constant in sequence length — which is what makes long_500k lowerable.
+    x: (B, L, D_model)."""
+    b, l, _ = x.shape
+    q = min(ssm.chunk_size, l)
+    assert l % q == 0, (l, q)
+    nc = l // q
+
+    y0 = x @ params["in_proj"]
+    z, xbc, dt, d_inner, h = _split_zxbcdt(params, y0, d_model, ssm)
+    xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"]))
+    xs = xbc[..., :d_inner].reshape(b, l, h, ssm.head_dim)
+    bmat = xbc[..., d_inner:d_inner + ssm.d_state]          # (B, L, N)
+    cmat = xbc[..., d_inner + ssm.d_state:]                 # (B, L, N)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,L,H)
+    a = -jnp.exp(params["A_log"])                           # (H,)
+    da = dt * a                                             # (B, L, H)
+
+    # chunk-major reshapes: leading scan axis NC
+    def chunked(t):
+        return t.reshape(b, nc, q, *t.shape[2:]).swapaxes(0, 1)
+
+    xs_c = chunked(xs.astype(jnp.float32))                  # (NC,B,Q,H,P)
+    b_c = chunked(bmat.astype(jnp.float32))                 # (NC,B,Q,N)
+    c_c = chunked(cmat.astype(jnp.float32))                 # (NC,B,Q,N)
+    dt_c = chunked(dt)                                      # (NC,B,Q,H)
+    da_c = chunked(da)                                      # (NC,B,Q,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+
+    def chunk_step(h_prev, inp):
+        xb, bb, cb_, dtb, dab = inp
+        da_cs = jnp.cumsum(dab, axis=1)                     # (B,Q,H)
+        # intra-chunk: L[t,s] = exp(da_cs[t]-da_cs[s]) for s<=t
+        diff = da_cs[:, :, None, :] - da_cs[:, None, :, :]  # (B,Q,Q,H)
+        lmat = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+        cb_mat = jnp.einsum("bqn,bsn->bqs", cb_, bb)        # (B,Q,Q)
+        att = cb_mat[..., None] * lmat * dtb[:, None, :, :]  # (B,Q,S,H)
+        y_diag = jnp.einsum("bqsh,bshp->bqhp", att, xb)
+        # contribution of carried state
+        y_off = jnp.einsum("bqn,bhpn,bqh->bqhp",
+                           cb_, h_prev, jnp.exp(da_cs))
+        # state update to chunk end
+        decay_to_end = jnp.exp(da_cs[:, -1:, :] - da_cs)    # (B,Q,H)
+        s_c = jnp.einsum("bsh,bsn,bshp->bhpn",
+                         dtb * decay_to_end, bb, xb)
+        h_new = h_prev * jnp.exp(da_cs[:, -1, :])[:, :, None, None] + s_c
+        return h_new, y_diag + y_off
+
+    h0 = jnp.zeros((b, h, ssm.head_dim, ssm.d_state), jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, h0, (xs_c, b_c, c_c, dt_c, da_c))
+    y = ys.swapaxes(0, 1).reshape(b, l, h, ssm.head_dim)
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, l, d_inner).astype(x.dtype)
+    y = _gated_norm(y, z, params["norm"])
+    return y @ params["out_proj"]
+
+
+def mamba2_init_cache(batch: int, d_model: int, ssm,
+                      dtype=layers.DTYPE) -> Params:
+    d_inner = ssm.expand * d_model
+    h = d_inner // ssm.head_dim
+    conv_ch = d_inner + 2 * ssm.d_state
+    return {
+        "conv": jnp.zeros((batch, ssm.d_conv - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, h, ssm.head_dim, ssm.d_state), jnp.float32),
+    }
+
+
+def mamba2_decode(params: Params, x: jnp.ndarray, cache: Params, ssm,
+                  d_model: int) -> Tuple[jnp.ndarray, Params]:
+    """Single-token recurrent step. x: (B, 1, D_model)."""
+    b = x.shape[0]
+    y0 = x @ params["in_proj"]
+    z, xbc, dt, d_inner, h = _split_zxbcdt(params, y0, d_model, ssm)
+
+    conv_in = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B, W, C)
+    conv_out = jnp.sum(conv_in.astype(jnp.float32)
+                       * params["conv_w"].astype(jnp.float32)[None], axis=1,
+                       keepdims=True)
+    xbc = jax.nn.silu(conv_out).astype(x.dtype)
+    new_conv = conv_in[:, 1:, :]
+
+    xs = xbc[..., :d_inner].reshape(b, h, ssm.head_dim)
+    bvec = xbc[:, 0, d_inner:d_inner + ssm.d_state].astype(jnp.float32)
+    cvec = xbc[:, 0, d_inner + ssm.d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * a)                                  # (B, H)
+
+    dbx = jnp.einsum("bh,bn,bhp->bhpn", dt, bvec, xs.astype(jnp.float32))
+    h_new = cache["ssm"] * decay[:, :, None, None] + dbx
+    y = jnp.einsum("bn,bhpn->bhp", cvec, h_new)
+    y = y + params["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, 1, d_inner).astype(x.dtype)
+    y = _gated_norm(y, z, params["norm"])
+    return y @ params["out_proj"], {"conv": new_conv, "ssm": h_new}
+
+
+# ===========================================================================
+# xLSTM: mLSTM (matrix memory) and sLSTM (scalar memory) blocks
+# ===========================================================================
+
+def mlstm_init(key, d_model: int, num_heads: int, xl) -> Tuple[Params, Axes]:
+    d_inner = int(xl.mlstm_proj_factor * d_model)
+    dh = d_inner // num_heads
+    k1, k2, k3, k4, k5, k6, k7 = jax.random.split(key, 7)
+    params = {
+        "up": layers.dense_init(k1, d_model, 2 * d_inner),
+        "wq": layers.dense_init(k2, d_inner, num_heads, dh),
+        "wk": layers.dense_init(k3, d_inner, num_heads, dh),
+        "wv": layers.dense_init(k4, d_inner, num_heads, dh),
+        "w_if": layers.dense_init(k5, d_inner, 2 * num_heads,
+                                  dtype=jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((num_heads,)),
+                                 3.0 * jnp.ones((num_heads,))]),
+        "norm": jnp.ones((d_inner,), layers.DTYPE),
+        "down": layers.dense_init(k6, d_inner, d_model),
+    }
+    axes = {
+        "up": ("embed", "ff"), "wq": ("ff", "heads", None),
+        "wk": ("ff", "heads", None), "wv": ("ff", "heads", None),
+        "w_if": ("ff", None), "b_if": (None,), "norm": ("ff",),
+        "down": ("ff", "embed"),
+    }
+    return params, axes
+
+
+def _mlstm_gates(params, xi, num_heads):
+    gates = xi.astype(jnp.float32) @ params["w_if"] + params["b_if"]
+    li = gates[..., :num_heads]                          # input gate preact
+    lf = jax.nn.log_sigmoid(gates[..., num_heads:])      # log forget gate
+    return li, lf
+
+
+def mlstm_apply(params: Params, x: jnp.ndarray, num_heads: int,
+                xl) -> jnp.ndarray:
+    """Chunkwise-parallel stabilized mLSTM. x: (B, L, D_model)."""
+    b, l, d_model = x.shape
+    up = x @ params["up"]
+    d_inner = up.shape[-1] // 2
+    xi, gate_br = up[..., :d_inner], up[..., d_inner:]
+    q = jnp.einsum("bld,dhk->blhk", xi, params["wq"])
+    k = jnp.einsum("bld,dhk->blhk", xi, params["wk"])
+    v = jnp.einsum("bld,dhk->blhk", xi, params["wv"])
+    li, lf = _mlstm_gates(params, xi, num_heads)         # (B, L, H)
+
+    qc = min(xl.chunk_size, l)
+    assert l % qc == 0
+    nc = l // qc
+    dh = q.shape[-1]
+    scale = 1.0 / math.sqrt(dh)
+
+    def resh(t):
+        return t.reshape(b, nc, qc, *t.shape[2:]).transpose(1, 0, 2, *range(3, t.ndim + 1))
+
+    qs, ks, vs = resh(q), resh(k), resh(v)               # (NC,B,Q,H,dh)
+    lis, lfs = resh(li), resh(lf)                        # (NC,B,Q,H)
+
+    def chunk_step(carry, inp):
+        cmat, nvec, m_prev = carry                       # (B,H,dk,dv),(B,H,dk),(B,H)
+        qb, kb, vb, lib, lfb = inp
+        f_cs = jnp.cumsum(lfb, axis=1)                   # (B,Q,H)
+        # log weight of in-chunk source s for target t: F_t - F_s + i_s
+        lw = (f_cs[:, :, None, :] - f_cs[:, None, :, :]
+              + lib[:, None, :, :])                      # (B,T,S,H)
+        tri = jnp.tril(jnp.ones((qc, qc), bool))
+        lw = jnp.where(tri[None, :, :, None], lw, -jnp.inf)
+        # carried-state log weight for target t
+        lw_carry = m_prev[:, None, :] + f_cs             # (B,T,H)
+        m_t = jnp.maximum(jnp.max(lw, axis=2), lw_carry)  # (B,T,H)
+        m_t = jnp.maximum(m_t, -1e30)
+        dmat = jnp.exp(lw - m_t[:, :, None, :])          # (B,T,S,H)
+        scores = jnp.einsum("bthk,bshk->btsh",
+                            qf := qb.astype(jnp.float32) * scale,
+                            kb.astype(jnp.float32)) * dmat
+        num_intra = jnp.einsum("btsh,bshv->bthv", scores, vb.astype(jnp.float32))
+        den_intra = jnp.sum(scores, axis=2)              # (B,T,H)
+        w_carry = jnp.exp(lw_carry - m_t)                # (B,T,H)
+        num_inter = jnp.einsum("bthk,bhkv->bthv", qf, cmat) * w_carry[..., None]
+        den_inter = jnp.einsum("bthk,bhk->bth", qf, nvec) * w_carry
+        den = jnp.maximum(jnp.abs(den_intra + den_inter), jnp.exp(-m_t)) + 1e-30
+        h_out = (num_intra + num_inter) / den[..., None]  # (B,T,H,dv)
+
+        # ---- state update to chunk end -------------------------------
+        f_tot = f_cs[:, -1, :]                           # (B,H)
+        lw_end = f_tot[:, None, :] - f_cs + lib          # (B,S,H)
+        m_new = jnp.maximum(m_prev + f_tot, jnp.max(lw_end, axis=1))
+        w_old = jnp.exp(m_prev + f_tot - m_new)          # (B,H)
+        w_src = jnp.exp(lw_end - m_new[:, None, :])      # (B,S,H)
+        kv = jnp.einsum("bsh,bshk,bshv->bhkv", w_src,
+                        kb.astype(jnp.float32), vb.astype(jnp.float32))
+        ksum = jnp.einsum("bsh,bshk->bhk", w_src, kb.astype(jnp.float32))
+        c_new = cmat * w_old[:, :, None, None] + kv
+        n_new = nvec * w_old[:, :, None] + ksum
+        return (c_new, n_new, m_new), h_out
+
+    c0 = jnp.zeros((b, num_heads, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, num_heads, dh), jnp.float32)
+    m0 = jnp.full((b, num_heads), -1e30, jnp.float32)
+    _, hs = jax.lax.scan(chunk_step, (c0, n0, m0), (qs, ks, vs, lis, lfs))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(b, l, d_inner).astype(x.dtype)
+    h = layers.rms_normalize(h) * params["norm"]
+    h = h * jax.nn.silu(gate_br)
+    return h @ params["down"]
+
+
+def mlstm_init_cache(batch, d_model, num_heads, xl, dtype=jnp.float32):
+    d_inner = int(xl.mlstm_proj_factor * d_model)
+    dh = d_inner // num_heads
+    return {
+        "c": jnp.zeros((batch, num_heads, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, num_heads, dh), jnp.float32),
+        "m": jnp.full((batch, num_heads), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(params: Params, x: jnp.ndarray, cache: Params,
+                 num_heads: int, xl) -> Tuple[jnp.ndarray, Params]:
+    b = x.shape[0]
+    up = x @ params["up"]
+    d_inner = up.shape[-1] // 2
+    xi, gate_br = up[..., :d_inner], up[..., d_inner:]
+    q = jnp.einsum("bld,dhk->blhk", xi, params["wq"])[:, 0]
+    k = jnp.einsum("bld,dhk->blhk", xi, params["wk"])[:, 0]
+    v = jnp.einsum("bld,dhk->blhk", xi, params["wv"])[:, 0]
+    li, lf = _mlstm_gates(params, xi[:, 0], num_heads)   # (B, H)
+    dh = q.shape[-1]
+    scale = 1.0 / math.sqrt(dh)
+
+    m_new = jnp.maximum(lf + cache["m"], li)
+    w_old = jnp.exp(lf + cache["m"] - m_new)
+    w_in = jnp.exp(li - m_new)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    c_new = cache["c"] * w_old[:, :, None, None] \
+        + w_in[:, :, None, None] * kf[:, :, :, None] * vf[:, :, None, :]
+    n_new = cache["n"] * w_old[:, :, None] + w_in[:, :, None] * kf
+    qf = q.astype(jnp.float32) * scale
+    num = jnp.einsum("bhk,bhkv->bhv", qf, c_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n_new)),
+                      jnp.exp(-m_new)) + 1e-30
+    h = (num / den[..., None]).reshape(b, 1, d_inner).astype(x.dtype)
+    h = layers.rms_normalize(h) * params["norm"]
+    h = h * jax.nn.silu(gate_br)
+    return h @ params["down"], {"c": c_new, "n": n_new, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, d_model: int, num_heads: int, xl) -> Tuple[Params, Axes]:
+    dh = d_model // num_heads
+    d_ff = int(xl.slstm_proj_factor * d_model)
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "w_in": layers.dense_init(k1, d_model, 4 * d_model),
+        "r": (jax.random.normal(k2, (num_heads, dh, 4 * dh), jnp.float32)
+              / math.sqrt(dh)).astype(jnp.float32),
+        "b": jnp.zeros((4 * d_model,), jnp.float32),
+        "norm": jnp.ones((d_model,), layers.DTYPE),
+    }
+    axes = {
+        "w_in": ("embed", "ff"), "r": ("heads", None, None), "b": (None,),
+        "norm": (None,),
+    }
+    ffp, ffa = layers.mlp_init(k3, d_model, d_ff)
+    params["ffn"], axes["ffn"] = ffp, ffa
+    return params, axes
+
+
+def _slstm_cell(params, pre, state, num_heads, dh):
+    """pre: (B, 4*D) input preactivation; state: (h, c, n, m) each (B,H,dh|1)."""
+    h_prev, c_prev, n_prev, m_prev = state
+    b = pre.shape[0]
+    rec = jnp.einsum("bhd,hdk->bhk", h_prev, params["r"])   # (B,H,4*dh)
+    pre = pre.reshape(b, num_heads, 4 * dh) + rec
+    z, i_t, f_t, o_t = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o_t)
+    # stabilized exponential gating (per head-channel)
+    m_new = jnp.maximum(f_t + m_prev, i_t)
+    i_g = jnp.exp(i_t - m_new)
+    f_g = jnp.exp(f_t + m_prev - m_new)
+    c_new = f_g * c_prev + i_g * z
+    n_new = f_g * n_prev + i_g
+    h_new = o * c_new / jnp.maximum(jnp.abs(n_new), 1e-6)
+    return h_new, (h_new, c_new, n_new, m_new)
+
+
+def slstm_apply(params: Params, x: jnp.ndarray, num_heads: int,
+                xl) -> jnp.ndarray:
+    b, l, d_model = x.shape
+    dh = d_model // num_heads
+    pre_all = (x @ params["w_in"]).astype(jnp.float32) + params["b"]
+
+    def step(state, pre_t):
+        h, state = _slstm_cell(params, pre_t, state, num_heads, dh)
+        return state, h
+
+    s0 = (jnp.zeros((b, num_heads, dh), jnp.float32),
+          jnp.zeros((b, num_heads, dh), jnp.float32),
+          jnp.zeros((b, num_heads, dh), jnp.float32),
+          jnp.full((b, num_heads, dh), -1e30, jnp.float32))
+    _, hs = jax.lax.scan(step, s0, pre_all.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2, 3).reshape(b, l, d_model).astype(x.dtype)
+    h = layers.rms_normalize(h) * params["norm"]
+    return h + layers.mlp_apply(params["ffn"], h)
+
+
+def slstm_init_cache(batch, d_model, num_heads, dtype=jnp.float32):
+    dh = d_model // num_heads
+    z = jnp.zeros((batch, num_heads, dh), jnp.float32)
+    return {"h": z, "c": z, "n": z,
+            "m": jnp.full((batch, num_heads, dh), -1e30, jnp.float32)}
+
+
+def slstm_decode(params: Params, x: jnp.ndarray, cache: Params,
+                 num_heads: int, xl) -> Tuple[jnp.ndarray, Params]:
+    b, _, d_model = x.shape
+    dh = d_model // num_heads
+    pre = (x[:, 0] @ params["w_in"]).astype(jnp.float32) + params["b"]
+    state = (cache["h"], cache["c"], cache["n"], cache["m"])
+    h, (h_n, c_n, n_n, m_n) = _slstm_cell(params, pre, state, num_heads, dh)
+    h = h.reshape(b, 1, d_model).astype(x.dtype)
+    h = layers.rms_normalize(h) * params["norm"]
+    h = h + layers.mlp_apply(params["ffn"], h)
+    return h, {"h": h_n, "c": c_n, "n": n_n, "m": m_n}

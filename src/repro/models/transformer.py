@@ -1,0 +1,449 @@
+"""Model assembly: stages of scanned layer stacks for every arch family.
+
+A model is a sequence of *stages*; each stage is a homogeneous stack of
+layers lowered as one ``jax.lax.scan`` over stacked parameters (constant
+HLO size in depth). Heterogeneous patterns (Zamba2's shared attention
+every 6th layer, Llama-Vision's cross-attn every 5th) become *super-block*
+stages whose scan body contains an inner mini-scan.
+
+Block interface (per layer):
+  init(key)            -> (params, axes)
+  apply(params, x, ctx)-> (x, aux)          full-sequence forward
+  decode(params, x, cache, ctx) -> (x, cache)   one-token step
+  init_cache(batch)    -> (cache, cache_axes)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, layers, moe as moe_lib, ssm as ssm_lib
+from repro.sharding.partition import constrain
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class Ctx:
+    cfg: ModelConfig
+    positions: Optional[jnp.ndarray] = None   # (B, S)
+    memory: Optional[jnp.ndarray] = None      # (B, M, D) cross-attn memory
+    pos: Any = None                           # scalar decode position
+    causal: bool = True
+
+
+def _remat(fn: Callable, mode: str) -> Callable:
+    if mode == "none":
+        return fn
+    if mode == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+
+def stack_axes(axes: Pytree, prefix: Tuple = ("layers",)) -> Pytree:
+    return jax.tree.map(lambda a: tuple(prefix) + tuple(a), axes,
+                        is_leaf=lambda a: isinstance(a, tuple))
+
+
+def stacked_init(init_fn: Callable, key, n: int) -> Tuple[Pytree, Pytree]:
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: init_fn(k)[0])(keys)
+    _, axes = init_fn(key)
+    return params, stack_axes(axes)
+
+
+# ===========================================================================
+# blocks
+# ===========================================================================
+
+class DenseBlock:
+    """Pre-norm attention (GQA or MLA) + pre-norm FFN (dense or MoE)."""
+
+    def __init__(self, cfg: ModelConfig, use_moe: bool = False,
+                 d_ff: Optional[int] = None, causal: bool = True):
+        self.cfg = cfg
+        self.use_moe = use_moe and cfg.moe is not None
+        self.d_ff = d_ff if d_ff is not None else cfg.d_ff
+        self.causal = causal
+
+    def init(self, key):
+        cfg = self.cfg
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        if cfg.attn_type == "mla":
+            attn_p, attn_a = attention.mla_init(k1, cfg.d_model,
+                                                cfg.num_heads, cfg.mla)
+        else:
+            attn_p, attn_a = attention.gqa_init(
+                k1, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                cfg.resolved_head_dim, cfg.qk_norm,
+                pad_to_tp=cfg.pad_heads_to_tp)
+        if self.use_moe:
+            ffn_p, ffn_a = moe_lib.moe_init(k2, cfg.d_model, cfg.moe)
+        else:
+            ffn_p, ffn_a = layers.mlp_init(k2, cfg.d_model, self.d_ff)
+        n1, a1 = layers.rmsnorm_init(cfg.d_model)
+        n2, a2 = layers.rmsnorm_init(cfg.d_model)
+        params = {"attn": attn_p, "ffn": ffn_p, "ln1": n1, "ln2": n2}
+        axes = {"attn": attn_a, "ffn": ffn_a, "ln1": a1, "ln2": a2}
+        return params, axes
+
+    def apply(self, params, x, ctx: Ctx):
+        cfg = self.cfg
+        h = layers.rmsnorm(params["ln1"], x, cfg.norm_eps)
+        # when q heads don't divide TP, attention is sharded on seq instead
+        # ("attn_seq" maps to the model axis in that rule variant)
+        h = constrain(h, ("batch", "attn_seq", None))
+        if cfg.attn_type == "mla":
+            a = attention.mla_apply(params["attn"], h, ctx.positions,
+                                    cfg.rope_theta, cfg.mla)
+        else:
+            q_mask, _ = attention.ghost_masks(
+                cfg.num_heads, cfg.num_kv_heads, cfg.pad_heads_to_tp)
+            a = attention.gqa_apply(params["attn"], h, ctx.positions,
+                                    cfg.rope_theta, cfg.qk_norm,
+                                    causal=self.causal and ctx.causal,
+                                    head_mask=q_mask)
+        x = x + a
+        x = constrain(x, ("batch", None, None))
+        h = layers.rmsnorm(params["ln2"], x, cfg.norm_eps)
+        if self.use_moe:
+            f, aux = moe_lib.moe_apply(params["ffn"], h, cfg.moe)
+        else:
+            f, aux = layers.mlp_apply(params["ffn"], h), 0.0
+        x = x + f
+        x = constrain(x, ("batch", "res_seq", None))
+        return x, aux
+
+    def init_cache(self, batch: int, max_seq: int):
+        cfg = self.cfg
+        if cfg.attn_type == "mla":
+            c = attention.mla_init_cache(batch, max_seq, cfg.mla)
+            a = {"c_kv": ("batch", "kv_seq", None),
+                 "k_rope": ("batch", "kv_seq", None)}
+        else:
+            _, kv_mask = attention.ghost_masks(
+                cfg.num_heads, cfg.num_kv_heads, cfg.pad_heads_to_tp)
+            nkv = cfg.num_kv_heads if kv_mask is None else kv_mask.shape[0]
+            quant = cfg.kv_cache_dtype == "int8"
+            c = attention.gqa_init_cache(batch, max_seq, nkv,
+                                         cfg.resolved_head_dim,
+                                         quantized=quant)
+            a = {"k": ("batch", "kv_seq", "kv", None),
+                 "v": ("batch", "kv_seq", "kv", None)}
+            if quant:
+                a["k_scale"] = ("batch", "kv_seq", "kv")
+                a["v_scale"] = ("batch", "kv_seq", "kv")
+        return c, a
+
+    def decode(self, params, x, cache, ctx: Ctx):
+        cfg = self.cfg
+        h = layers.rmsnorm(params["ln1"], x, cfg.norm_eps)
+        if cfg.attn_type == "mla":
+            a, cache = attention.mla_decode(params["attn"], h, cache, ctx.pos,
+                                            cfg.rope_theta, cfg.mla)
+        else:
+            q_mask, _ = attention.ghost_masks(
+                cfg.num_heads, cfg.num_kv_heads, cfg.pad_heads_to_tp)
+            a, cache = attention.gqa_decode(params["attn"], h, cache, ctx.pos,
+                                            cfg.rope_theta, cfg.qk_norm,
+                                            head_mask=q_mask)
+        x = x + a
+        h = layers.rmsnorm(params["ln2"], x, cfg.norm_eps)
+        if self.use_moe:
+            f, _ = moe_lib.moe_apply(params["ffn"], h, cfg.moe)
+        else:
+            f = layers.mlp_apply(params["ffn"], h)
+        return x + f, cache
+
+
+class CrossBlock:
+    """Gated cross-attention + FFN (Llama-Vision image layers / enc-dec)."""
+
+    def __init__(self, cfg: ModelConfig, gated: bool = True):
+        self.cfg = cfg
+        self.gated = gated
+
+    def init(self, key):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        attn_p, attn_a = attention.cross_init(
+            k1, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+            cfg.resolved_head_dim)
+        ffn_p, ffn_a = layers.mlp_init(k2, cfg.d_model, cfg.d_ff or cfg.d_model * 4)
+        n1, a1 = layers.rmsnorm_init(cfg.d_model)
+        n2, a2 = layers.rmsnorm_init(cfg.d_model)
+        params = {"attn": attn_p, "ffn": ffn_p, "ln1": n1, "ln2": n2}
+        axes = {"attn": attn_a, "ffn": ffn_a, "ln1": a1, "ln2": a2}
+        if self.gated:
+            params["gate_attn"] = jnp.zeros((), jnp.float32)
+            params["gate_ffn"] = jnp.zeros((), jnp.float32)
+            axes["gate_attn"] = ()
+            axes["gate_ffn"] = ()
+        return params, axes
+
+    def apply(self, params, x, ctx: Ctx):
+        cfg = self.cfg
+        h = layers.rmsnorm(params["ln1"], x, cfg.norm_eps)
+        a = attention.cross_apply(params["attn"], h, ctx.memory)
+        if self.gated:
+            a = jnp.tanh(params["gate_attn"]).astype(a.dtype) * a
+        x = x + a
+        h = layers.rmsnorm(params["ln2"], x, cfg.norm_eps)
+        f = layers.mlp_apply(params["ffn"], h)
+        if self.gated:
+            f = jnp.tanh(params["gate_ffn"]).astype(f.dtype) * f
+        return x + f, 0.0
+
+    def init_cache(self, batch: int, max_seq: int):
+        # cross-attn KV depends only on the (fixed) memory; nothing cached —
+        # recomputed per step from ctx.memory (cheap: memory is short).
+        return {}, {}
+
+    def decode(self, params, x, cache, ctx: Ctx):
+        y, _ = self.apply(params, x, ctx)
+        return y, cache
+
+
+class MambaBlock:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, key):
+        cfg = self.cfg
+        p, a = ssm_lib.mamba2_init(key, cfg.d_model, cfg.ssm)
+        n, na = layers.rmsnorm_init(cfg.d_model)
+        return {"mamba": p, "ln": n}, {"mamba": a, "ln": na}
+
+    def apply(self, params, x, ctx: Ctx):
+        h = layers.rmsnorm(params["ln"], x, self.cfg.norm_eps)
+        y = ssm_lib.mamba2_apply(params["mamba"], h, self.cfg.ssm,
+                                 self.cfg.d_model)
+        x = x + y
+        return constrain(x, ("batch", None, None)), 0.0
+
+    def init_cache(self, batch: int, max_seq: int):
+        c = ssm_lib.mamba2_init_cache(batch, self.cfg.d_model, self.cfg.ssm)
+        a = {"conv": ("batch", None, "ff"), "ssm": ("batch", "heads", None, None)}
+        return c, a
+
+    def decode(self, params, x, cache, ctx: Ctx):
+        h = layers.rmsnorm(params["ln"], x, self.cfg.norm_eps)
+        y, cache = ssm_lib.mamba2_decode(params["mamba"], h, cache,
+                                         self.cfg.ssm, self.cfg.d_model)
+        return x + y, cache
+
+
+class MLSTMBlock:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, key):
+        p, a = ssm_lib.mlstm_init(key, self.cfg.d_model, self.cfg.num_heads,
+                                  self.cfg.xlstm)
+        n, na = layers.rmsnorm_init(self.cfg.d_model)
+        return {"mlstm": p, "ln": n}, {"mlstm": a, "ln": na}
+
+    def apply(self, params, x, ctx: Ctx):
+        h = layers.rmsnorm(params["ln"], x, self.cfg.norm_eps)
+        y = ssm_lib.mlstm_apply(params["mlstm"], h, self.cfg.num_heads,
+                                self.cfg.xlstm)
+        return x + y, 0.0
+
+    def init_cache(self, batch: int, max_seq: int):
+        c = ssm_lib.mlstm_init_cache(batch, self.cfg.d_model,
+                                     self.cfg.num_heads, self.cfg.xlstm)
+        a = {"c": ("batch", "heads", None, None),
+             "n": ("batch", "heads", None), "m": ("batch", "heads")}
+        return c, a
+
+    def decode(self, params, x, cache, ctx: Ctx):
+        h = layers.rmsnorm(params["ln"], x, self.cfg.norm_eps)
+        y, cache = ssm_lib.mlstm_decode(params["mlstm"], h, cache,
+                                        self.cfg.num_heads, self.cfg.xlstm)
+        return x + y, cache
+
+
+class SLSTMBlock:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, key):
+        p, a = ssm_lib.slstm_init(key, self.cfg.d_model, self.cfg.num_heads,
+                                  self.cfg.xlstm)
+        n, na = layers.rmsnorm_init(self.cfg.d_model)
+        return {"slstm": p, "ln": n}, {"slstm": a, "ln": na}
+
+    def apply(self, params, x, ctx: Ctx):
+        h = layers.rmsnorm(params["ln"], x, self.cfg.norm_eps)
+        y = ssm_lib.slstm_apply(params["slstm"], h, self.cfg.num_heads,
+                                self.cfg.xlstm)
+        return x + y, 0.0
+
+    def init_cache(self, batch: int, max_seq: int):
+        c = ssm_lib.slstm_init_cache(batch, self.cfg.d_model,
+                                     self.cfg.num_heads)
+        a = {k: ("batch", "heads", None) for k in ("h", "c", "n", "m")}
+        return c, a
+
+    def decode(self, params, x, cache, ctx: Ctx):
+        h = layers.rmsnorm(params["ln"], x, self.cfg.norm_eps)
+        y, cache = ssm_lib.slstm_decode(params["slstm"], h, cache,
+                                        self.cfg.num_heads, self.cfg.xlstm)
+        return x + y, cache
+
+
+class EncDecBlock:
+    """Decoder layer with self-attn + cross-attn + FFN (seamless decoder)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.self_block = DenseBlock(cfg)
+        self.cross = CrossBlock(cfg, gated=False)
+
+    def init(self, key):
+        k1, k2 = jax.random.split(key)
+        sp, sa = self.self_block.init(k1)
+        cp, ca = self.cross.init(k2)
+        return {"self": sp, "cross": cp}, {"self": sa, "cross": ca}
+
+    def apply(self, params, x, ctx: Ctx):
+        x, _ = self.self_block.apply(params["self"], x, ctx)
+        x, _ = self.cross.apply(params["cross"], x, ctx)
+        return x, 0.0
+
+    def init_cache(self, batch: int, max_seq: int):
+        c, a = self.self_block.init_cache(batch, max_seq)
+        return c, a
+
+    def decode(self, params, x, cache, ctx: Ctx):
+        x, cache = self.self_block.decode(params["self"], x, cache, ctx)
+        x, _ = self.cross.decode(params["cross"], x, {}, ctx)
+        return x, cache
+
+
+# ===========================================================================
+# stages
+# ===========================================================================
+
+@dataclasses.dataclass
+class Stage:
+    """A scanned stack of ``n`` identical blocks (or super-blocks)."""
+    name: str
+    blocks: List[Any]          # block templates inside one super-block
+    n: int                     # scan length
+    shared: Tuple[int, ...] = ()   # indices of blocks whose params are shared
+
+    def init(self, key):
+        keys = jax.random.split(key, len(self.blocks) + 1)
+        scanned_p, scanned_a, shared_p, shared_a = {}, {}, {}, {}
+        for i, blk in enumerate(self.blocks):
+            bname = f"b{i}"
+            if i in self.shared:
+                p, a = blk.init(keys[i])
+                shared_p[bname], shared_a[bname] = p, a
+            else:
+                p, a = stacked_init(blk.init, keys[i], self.n)
+                scanned_p[bname], scanned_a[bname] = p, a
+        return ({"scanned": scanned_p, "shared": shared_p},
+                {"scanned": scanned_a, "shared": shared_a})
+
+    def apply(self, params, x, ctx: Ctx, remat: str):
+        def body(carry, layer_params):
+            h, aux = carry
+            for i, blk in enumerate(self.blocks):
+                bname = f"b{i}"
+                p = (params["shared"][bname] if i in self.shared
+                     else layer_params[bname])
+                h, a = blk.apply(p, h, ctx)
+                aux = aux + a
+            return (h, aux), None
+
+        body = _remat(body, remat)
+        aux0 = jnp.zeros((), jnp.float32)
+        (x, aux), _ = jax.lax.scan(body, (x, aux0), params["scanned"])
+        return x, aux
+
+    def init_cache(self, batch: int, max_seq: int):
+        caches, axes = {}, {}
+        for i, blk in enumerate(self.blocks):
+            bname = f"b{i}"
+            c, a = blk.init_cache(batch, max_seq)
+            if not c:
+                caches[bname], axes[bname] = {}, {}
+                continue
+            caches[bname] = jax.tree.map(
+                lambda t: jnp.broadcast_to(t[None], (self.n,) + t.shape), c)
+            axes[bname] = stack_axes(a)
+        return caches, axes
+
+    def decode(self, params, x, cache, ctx: Ctx):
+        def body(h, inp):
+            layer_params, layer_cache = inp
+            new_cache = {}
+            for i, blk in enumerate(self.blocks):
+                bname = f"b{i}"
+                p = (params["shared"][bname] if i in self.shared
+                     else layer_params[bname])
+                h, c = blk.decode(p, h, layer_cache[bname], ctx)
+                new_cache[bname] = c
+            return h, new_cache
+
+        x, new_cache = jax.lax.scan(body, x, (params["scanned"], cache))
+        return x, new_cache
+
+
+# ===========================================================================
+# stage layout per architecture family
+# ===========================================================================
+
+def build_stages(cfg: ModelConfig) -> List[Stage]:
+    if cfg.family == "moe":
+        m = cfg.moe
+        stages = []
+        if m.first_dense_layers:
+            stages.append(Stage("dense", [DenseBlock(cfg, use_moe=False,
+                                                     d_ff=m.dense_d_ff)],
+                                m.first_dense_layers))
+        stages.append(Stage("moe", [DenseBlock(cfg, use_moe=True)],
+                            cfg.num_layers - m.first_dense_layers))
+        return stages
+
+    if cfg.family == "vlm":
+        v = cfg.vision
+        per = v.cross_attn_every
+        n_super = cfg.num_layers // per
+        blocks = [DenseBlock(cfg) for _ in range(per - 1)] + [CrossBlock(cfg)]
+        return [Stage("vlm_super", blocks, n_super)]
+
+    if cfg.family == "hybrid":
+        s = cfg.ssm
+        per = s.attn_every
+        n_super = cfg.num_layers // per
+        trailing = cfg.num_layers - n_super * per
+        blocks = [MambaBlock(cfg) for _ in range(per - 1)] + [DenseBlock(cfg)]
+        shared = (per - 1,) if s.shared_attn else ()
+        stages = [Stage("zamba_super", blocks, n_super, shared=shared)]
+        if trailing:
+            stages.append(Stage("mamba_tail", [MambaBlock(cfg)], trailing))
+        return stages
+
+    if cfg.family == "ssm":   # xLSTM: alternating (mLSTM, sLSTM)
+        n_super = cfg.num_layers // 2
+        return [Stage("xlstm_super", [MLSTMBlock(cfg), SLSTMBlock(cfg)],
+                      n_super)]
+
+    if cfg.family == "audio":  # encoder-decoder
+        enc_cfg = cfg
+        return [Stage("encoder", [DenseBlock(enc_cfg, causal=False)],
+                      cfg.encdec.encoder_layers),
+                Stage("decoder", [EncDecBlock(cfg)], cfg.num_layers)]
+
+    # dense
+    return [Stage("dense", [DenseBlock(cfg)], cfg.num_layers)]

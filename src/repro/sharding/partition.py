@@ -1,0 +1,183 @@
+"""Logical-axis partitioning: maps logical axis names to mesh axes.
+
+Models annotate parameters and activations with *logical* axes
+("embed", "heads", "ff", "experts", "batch", "seq", ...). A rule set maps
+each logical axis to a mesh axis (or None = replicated). ``axis_rules`` is
+a context manager installing (mesh, rules); ``constrain`` applies
+``with_sharding_constraint`` when inside a context and is a no-op outside,
+so model code runs unmodified on a single CPU device in tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+# Default production rules (training / prefill).
+#   pod+data together form the FSDP/data axis; model is the TP/EP axis.
+RULES_TRAIN: Dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "embed": ("pod", "data"),       # FSDP: big-matrix width dim sharded on data
+    "heads": "model",
+    "heads_flat": "model",
+    "kv": "model",
+    "ff": "model",
+    "experts": "model",             # activation expert dim: EP on model
+    "experts_w": "model",           # weight expert dim
+    "vocab": "model",
+    "seq": None,
+    "attn_seq": None,               # per-arch: "model" when heads % TP != 0
+    "res_seq": None,                # layer-carry storage: "model" seq-shards
+    #                                 the remat residual stack (Perf A3)
+    "kv_seq": None,
+    "norm": None,
+    "layers": None,
+}
+RULES_2D = RULES_TRAIN  # alias
+
+# decode (serving): params replicated across data (no FSDP gather per token),
+# KV cache sequence dim sharded on model; MoE expert weights sharded over
+# (data, model) so 671B fits without FSDP.
+RULES_DECODE: Dict[str, Any] = dict(
+    RULES_TRAIN,
+    embed=None,
+    kv_seq="model",
+    # expert weights AND expert activations both (data, model)-sharded:
+    # mismatched specs would make GSPMD gather a 16x expert-weight slice
+    # per step (measured 175 GiB temp on dsv3 decode before this fix)
+    experts_w=("data", "model"),
+    experts=("data", "model"),
+)
+
+# long-context decode (batch=1): shard the KV/state sequence dim over every
+# axis (context parallelism for a 524288-deep cache).
+RULES_LONG_CONTEXT = dict(
+    RULES_DECODE,
+    batch=None,
+    kv_seq=("pod", "data", "model"),
+)
+
+
+def rules_for(kind: str, num_heads: int = 0, tp: int = 16) -> Dict[str, Any]:
+    """Pick the rule set for a shape kind, with the per-arch attention
+    fallback: when q heads don't divide the TP width, shard attention
+    activations on the sequence dim instead (DESIGN.md §6)."""
+    base = {"train": RULES_TRAIN, "prefill": RULES_TRAIN,
+            "decode": RULES_DECODE, "long": RULES_LONG_CONTEXT}[kind]
+    rules = dict(base)
+    if num_heads and num_heads % tp != 0:
+        rules["attn_seq"] = "model"
+        if kind in ("decode", "long"):
+            # decode params are not FSDP-sharded (embed=None), so heads-
+            # indivisible archs would replicate all attention weights;
+            # shard their contraction dim on model instead (row-parallel,
+            # one psum per projection — fine at decode batch sizes)
+            rules["embed"] = "model"
+    return rules
+
+
+def _mesh_axes_for(logical: Optional[str], mesh: Mesh, rules: Mapping) -> Any:
+    if logical is None:
+        return None
+    rule = rules.get(logical, None)
+    if rule is None:
+        return None
+    if isinstance(rule, tuple):
+        present = tuple(a for a in rule if a in mesh.axis_names)
+        if not present:
+            return None
+        return present if len(present) > 1 else present[0]
+    return rule if rule in mesh.axis_names else None
+
+
+def spec_for(axes: Sequence[Optional[str]], mesh: Mesh,
+             rules: Mapping) -> P:
+    """Logical axes tuple -> PartitionSpec, dropping shardings that do not
+    divide evenly is left to the caller (see ``safe_spec``)."""
+    return P(*[_mesh_axes_for(a, mesh, rules) for a in axes])
+
+
+def _axis_size(entry: Any, mesh: Mesh) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def safe_spec(shape: Sequence[int], axes: Sequence[Optional[str]],
+              mesh: Mesh, rules: Mapping) -> P:
+    """spec_for, but drops any dim whose size does not divide the mesh
+    extent (e.g. batch=1 on a 16-way data axis) and any mesh axis already
+    consumed by an earlier dim (e.g. kv_seq and kv both wanting "model")."""
+    entries = []
+    used = set()
+    for dim, a in zip(shape, axes):
+        entry = _mesh_axes_for(a, mesh, rules)
+        if entry is not None:
+            names = entry if isinstance(entry, tuple) else (entry,)
+            if any(n in used for n in names):
+                names = tuple(n for n in names if n not in used)
+                entry = names if len(names) > 1 else (names[0] if names else None)
+        if entry is not None and dim % _axis_size(entry, mesh) != 0:
+            entry = None
+        if entry is not None:
+            used.update(entry if isinstance(entry, tuple) else (entry,))
+        entries.append(entry)
+    return P(*entries)
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, rules: Optional[Mapping] = None):
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (mesh, dict(rules or RULES_2D))
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def current_context():
+    return getattr(_state, "ctx", None)
+
+
+def constrain(x: jnp.ndarray, axes: Sequence[Optional[str]]) -> jnp.ndarray:
+    """Apply a sharding constraint if inside an ``axis_rules`` context."""
+    ctx = current_context()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = safe_spec(x.shape, axes, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def tree_spec(params_axes, mesh: Mesh, rules: Optional[Mapping] = None,
+              shapes=None):
+    """Map an axes-pytree (tuples of logical names) to PartitionSpecs.
+
+    ``shapes``: optional matching pytree of shapes for divisibility checks.
+    """
+    rules = dict(rules or RULES_2D)
+    if shapes is None:
+        return jax.tree.map(
+            lambda a: spec_for(a, mesh, rules), params_axes,
+            is_leaf=lambda a: isinstance(a, tuple))
+    return jax.tree.map(
+        lambda a, s: safe_spec(getattr(s, "shape", s), a, mesh, rules),
+        params_axes, shapes,
+        is_leaf=lambda a: isinstance(a, tuple))
+
+
+def tree_sharding(params_axes, mesh: Mesh, rules=None, shapes=None):
+    specs = tree_spec(params_axes, mesh, rules, shapes)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))

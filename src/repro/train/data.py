@@ -1,0 +1,84 @@
+"""Deterministic sharded data pipeline.
+
+Synthetic token streams (zipfian unigram mix + markov bigram structure so
+loss decreases measurably), deterministically sharded by (host, step):
+every host derives its shard from (seed, step, host_id) — no coordination
+traffic, and a restarted/elastically-rescaled job replays exactly from the
+checkpointed cursor. This is the standard straggler-free input design for
+1000+ node jobs (no central dispenser to fall behind).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    num_hosts: int = 1
+    host_id: int = 0
+
+
+class SyntheticLM:
+    """Markov-chain token stream: next ~ 0.7 * bigram(prev) + 0.3 * zipf."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        v = cfg.vocab_size
+        # sparse bigram: each token has 4 likely successors
+        self.succ = rng.integers(0, v, size=(v, 4))
+        ranks = np.arange(1, v + 1, dtype=np.float64)
+        p = 1.0 / ranks
+        self.zipf = p / p.sum()
+        self.step = 0
+
+    @property
+    def host_batch(self) -> int:
+        b, n = self.cfg.global_batch, self.cfg.num_hosts
+        assert b % n == 0, (b, n)
+        return b // n
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        """Deterministic batch for (step, host) — replayable after restart."""
+        cfg = self.cfg
+        rng = np.random.default_rng(
+            (cfg.seed, step, cfg.host_id, 0xA5CADE))
+        b, s = self.host_batch, cfg.seq_len
+        toks = np.empty((b, s + 1), np.int32)
+        toks[:, 0] = rng.choice(cfg.vocab_size, size=b, p=self.zipf)
+        use_bigram = rng.random((b, s)) < 0.7
+        zipf_draw = rng.choice(cfg.vocab_size, size=(b, s), p=self.zipf)
+        succ_pick = rng.integers(0, 4, size=(b, s))
+        for t in range(s):
+            big = self.succ[toks[:, t], succ_pick[:, t]]
+            toks[:, t + 1] = np.where(use_bigram[:, t], big, zipf_draw[:, t])
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        while True:
+            yield self.batch_at(self.step)
+            self.step += 1
+
+    # ---- checkpointable cursor ----
+    def state_dict(self) -> Dict:
+        return {"step": self.step}
+
+    def load_state_dict(self, s: Dict) -> None:
+        self.step = int(s["step"])
+
+
+def text_to_tokens(text: str, vocab_size: int, seq_len: int) -> np.ndarray:
+    """Toy hashing tokenizer for examples (byte-pair-free, deterministic)."""
+    words = text.lower().split()
+    ids = [(hash(w) % (vocab_size - 2)) + 2 for w in words][:seq_len]
+    ids = ids + [0] * (seq_len - len(ids))
+    return np.asarray(ids, np.int32)

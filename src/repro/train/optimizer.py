@@ -1,0 +1,205 @@
+"""Optimizers in pure JAX: AdamW (bf16 params + fp32 moments) and Adafactor
+(factored second moment — the production choice for the 671B config, whose
+Adam states exceed the v5e HBM envelope; EXPERIMENTS.md §Dry-run).
+
+Also: int8 gradient compression with error feedback, an optional
+distributed-optimization trick for cross-pod all-reduces (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"           # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    # adafactor
+    decay_rate: float = 0.8
+    # gradient compression (int8 + error feedback) for cross-pod all-reduce
+    compress_grads: bool = False
+
+
+def lr_schedule(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree: Pytree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree: Pytree, max_norm: float) -> Tuple[Pytree, jnp.ndarray]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# int8 gradient compression with error feedback
+# ---------------------------------------------------------------------------
+
+def compress_int8(g: jnp.ndarray, err: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Quantize g+err to int8 with a per-tensor scale; returns (q, scale,
+    new_err). The all-reduce then moves 1/4 the bytes of fp32 (1/2 of bf16)."""
+    g = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, g - deq
+
+
+def apply_grad_compression(grads: Pytree, err: Pytree) -> Tuple[Pytree, Pytree]:
+    """Simulate compressed all-reduce: quantize -> dequantize, carrying the
+    quantization error into the next step (error feedback)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err)
+    outs, new_errs = [], []
+    for g, e in zip(flat_g, flat_e):
+        q, scale, ne = compress_int8(g, e)
+        outs.append(q.astype(jnp.float32) * scale)
+        new_errs.append(ne)
+    return jax.tree.unflatten(treedef, outs), jax.tree.unflatten(treedef, new_errs)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params: Pytree, cfg: OptConfig) -> Pytree:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if cfg.compress_grads:
+        state["err"] = jax.tree.map(zeros, params)
+    return state
+
+
+def adamw_update(grads: Pytree, state: Pytree, params: Pytree,
+                 cfg: OptConfig) -> Tuple[Pytree, Pytree]:
+    step = state["step"] + 1
+    if cfg.compress_grads:
+        grads, new_err = apply_grad_compression(grads, state["err"])
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    lr = lr_schedule(cfg, step)
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - cfg.b1 ** t
+    c2 = 1.0 - cfg.b2 ** t
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32)
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mu_hat = mu / c1
+        nu_hat = nu / c2
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        if p.ndim >= 2:   # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda o: o[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"mu": new_mu, "nu": new_nu, "step": step}
+    if cfg.compress_grads:
+        new_state["err"] = new_err
+    return new_params, new_state
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment)
+# ---------------------------------------------------------------------------
+
+def adafactor_init(params: Pytree, cfg: OptConfig) -> Pytree:
+    def factored(p):
+        if p.ndim >= 2:
+            row = jnp.zeros(p.shape[:-1], jnp.float32)
+            col = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return {"row": row, "col": col}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {
+        "v": jax.tree.map(factored, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(grads: Pytree, state: Pytree, params: Pytree,
+                     cfg: OptConfig) -> Tuple[Pytree, Pytree]:
+    step = state["step"] + 1
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    lr = lr_schedule(cfg, step)
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-cfg.decay_rate)
+
+    def upd(p, g, v):
+        g = g.astype(jnp.float32)
+        g2 = g * g + 1e-30
+        if p.ndim >= 2:
+            row = beta2 * v["row"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            col = beta2 * v["col"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            row_mean = jnp.mean(row, axis=-1, keepdims=True)
+            vhat = (row / jnp.maximum(row_mean, 1e-30))[..., None] * col[..., None, :]
+            new_v = {"row": row, "col": col}
+        else:
+            vhat = beta2 * v["v"] + (1 - beta2) * g2
+            new_v = {"v": vhat}
+        update = g / jnp.sqrt(vhat + 1e-30)
+        # update clipping (RMS <= 1)
+        rms = jnp.sqrt(jnp.mean(update * update) + 1e-30)
+        update = update / jnp.maximum(1.0, rms)
+        if p.ndim >= 2:
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * update).astype(p.dtype), new_v
+
+    out = jax.tree.map(upd, params, grads, state["v"],
+                       is_leaf=lambda x: isinstance(x, dict) and
+                       ("row" in x or "v" in x))
+    # out leaves are tuples at the positions of params leaves
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"v": new_v, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+def opt_init(params: Pytree, cfg: OptConfig) -> Pytree:
+    return adafactor_init(params, cfg) if cfg.name == "adafactor" \
+        else adamw_init(params, cfg)
+
+
+def opt_update(grads: Pytree, state: Pytree, params: Pytree,
+               cfg: OptConfig) -> Tuple[Pytree, Pytree]:
+    return adafactor_update(grads, state, params, cfg) \
+        if cfg.name == "adafactor" else adamw_update(grads, state, params, cfg)

@@ -1,0 +1,61 @@
+"""Serving steps: prefill (full forward) and decode (one token against a
+KV/state cache), plus a batched request loop used by the serving driver and
+the ARCADE embedding path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model
+
+Pytree = Any
+
+
+def prefill_step(params: Pytree, cfg: ModelConfig, tokens: jnp.ndarray,
+                 memory: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Full-sequence forward -> logits (B, S, V)."""
+    return model.forward(params, cfg, tokens, memory)
+
+
+def decode_step(params: Pytree, cfg: ModelConfig, token: jnp.ndarray,
+                cache: Pytree, pos,
+                memory: Optional[jnp.ndarray] = None):
+    """One new token given a cache of depth seq_len -> (logits, cache)."""
+    return model.decode_step(params, cfg, token, cache, pos, memory=memory)
+
+
+def embed_step(params: Pytree, cfg: ModelConfig,
+               tokens: jnp.ndarray) -> jnp.ndarray:
+    """Batched embedding requests (the ARCADE ingestion/query vector path)."""
+    return model.encode(params, cfg, tokens)
+
+
+def greedy_generate(params: Pytree, cfg: ModelConfig, prompt: jnp.ndarray,
+                    max_new: int, max_seq: int,
+                    memory: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Greedy decode loop (host-side driver for examples; jits each step)."""
+    b, p_len = prompt.shape
+    cache, _ = model.init_cache(cfg, b, max_seq)
+    step = jax.jit(functools.partial(decode_step, cfg=cfg),
+                   static_argnames=())
+
+    tok = prompt[:, :1]
+    out = [tok]
+    # feed the prompt one token at a time (simple, exercises the cache path)
+    for i in range(p_len - 1):
+        _, cache = step(params, token=prompt[:, i:i + 1], cache=cache,
+                        pos=jnp.int32(i), memory=memory)
+    pos = p_len - 1
+    tok = prompt[:, pos:pos + 1]
+    gen = []
+    for i in range(max_new):
+        logits, cache = step(params, token=tok, cache=cache,
+                             pos=jnp.int32(pos + i), memory=memory)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        gen.append(tok)
+    return jnp.concatenate(gen, axis=1)

@@ -1,0 +1,131 @@
+"""Train step: loss + grad + optimizer update, with microbatching
+(gradient accumulation), remat policy (set per-config), and donated buffers.
+
+The step is a pure function; the launcher jits it with in/out shardings
+derived from the logical axes (repro.sharding.partition).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model
+from repro.train import optimizer as opt_lib
+
+Pytree = Any
+
+
+def make_train_state(key, cfg: ModelConfig, opt_cfg: opt_lib.OptConfig):
+    params, axes = model.init_params(key, cfg)
+    opt_state = opt_lib.opt_init(params, opt_cfg)
+    return {"params": params, "opt": opt_state}, axes
+
+
+def train_state_shapes(cfg: ModelConfig, opt_cfg: opt_lib.OptConfig):
+    return jax.eval_shape(
+        lambda k: make_train_state(k, cfg, opt_cfg)[0], jax.random.PRNGKey(0))
+
+
+def _is_axes(a):
+    return isinstance(a, tuple)
+
+
+def state_axes(cfg: ModelConfig, opt_cfg: opt_lib.OptConfig) -> Pytree:
+    """Logical axes for the full train state (params + optimizer moments).
+
+    AdamW moments share the param axes; Adafactor's factored rows/cols drop
+    the last / second-to-last axis respectively.
+    """
+    p_axes = model.param_axes(cfg)
+    p_shapes = model.param_shapes(cfg)
+    if opt_cfg.name == "adafactor":
+        def v_axes(a, s):
+            if len(s.shape) >= 2:
+                return {"row": tuple(a[:-1]),
+                        "col": tuple(a[:-2]) + (a[-1],)}
+            return {"v": tuple(a)}
+
+        v = jax.tree.map(v_axes, p_axes, p_shapes, is_leaf=_is_axes)
+        opt_axes = {"v": v, "step": ()}
+    else:
+        opt_axes = {"mu": p_axes, "nu": p_axes, "step": ()}
+        if opt_cfg.compress_grads:
+            opt_axes["err"] = p_axes
+    return {"params": p_axes, "opt": opt_axes}
+
+
+def _loss_for_grad(params, cfg, batch):
+    loss, metrics = model.loss_fn(params, cfg, batch)
+    return loss, metrics
+
+
+def train_step(state: Pytree, batch: Dict[str, jnp.ndarray],
+               cfg: ModelConfig, opt_cfg: opt_lib.OptConfig,
+               num_microbatches: int = 1,
+               grad_axes: Optional[Pytree] = None) -> Tuple[Pytree, Dict]:
+    """One optimizer step. batch["tokens"]: (global_batch, seq).
+
+    ``grad_axes``: logical-axes pytree matching params. When set, each
+    microbatch's gradients are sharding-constrained to the parameter
+    layout *before* accumulation, so GSPMD lowers the per-microbatch
+    cross-data reduction as a reduce-scatter (1/data_parallelism the
+    bytes of the unsharded all-reduce it otherwise emits — measured 16x
+    on the yi-34b train cell, EXPERIMENTS.md §Perf A1).
+    """
+    from repro.sharding.partition import constrain
+
+    params = state["params"]
+    grad_fn = jax.value_and_grad(_loss_for_grad, has_aux=True)
+
+    def _constrain_grads(g):
+        if grad_axes is None:
+            return g
+        # map with the axes tree first: is_leaf stops at axes tuples
+        return jax.tree.map(
+            lambda a, leaf: constrain(leaf, a), grad_axes, g,
+            is_leaf=lambda a: isinstance(a, tuple))
+
+    if num_microbatches <= 1:
+        (loss, metrics), grads = grad_fn(params, cfg, batch)
+        grads = _constrain_grads(grads)
+    else:
+        # gradient accumulation over microbatches via scan (constant HLO)
+        def resh(x):
+            b = x.shape[0]
+            assert b % num_microbatches == 0, (b, num_microbatches)
+            return x.reshape(num_microbatches, b // num_microbatches,
+                             *x.shape[1:])
+
+        micro = jax.tree.map(resh, batch)
+        zero_grads = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def acc_fn(carry, mb):
+            g_acc, loss_acc = carry
+            (loss, _), g = grad_fn(params, cfg, mb)
+            g = _constrain_grads(g)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+            return (g_acc, loss_acc + loss), None
+
+        (grads, loss), _ = jax.lax.scan(
+            acc_fn, (zero_grads, jnp.zeros((), jnp.float32)), micro)
+        grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+        loss = loss / num_microbatches
+        metrics = {"loss": loss}
+
+    new_params, new_opt = opt_lib.opt_update(grads, state["opt"], params,
+                                             opt_cfg)
+    metrics = dict(metrics)
+    metrics["grad_norm"] = opt_lib.global_norm(grads)
+    return {"params": new_params, "opt": new_opt}, metrics
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: opt_lib.OptConfig,
+                    num_microbatches: int = 1):
+    return functools.partial(train_step, cfg=cfg, opt_cfg=opt_cfg,
+                             num_microbatches=num_microbatches)

@@ -1,0 +1,101 @@
+"""The trip-count-aware HLO cost walker (roofline methodology)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_cost
+
+
+def test_single_matmul_flops():
+    n = 256
+    w = jnp.zeros((n, n), jnp.float32)
+    x = jnp.zeros((n, n), jnp.float32)
+    c = jax.jit(lambda a, b: a @ b).lower(x, w).compile()
+    hc = hlo_cost.analyze_hlo(c.as_text())
+    assert hc.flops == pytest.approx(2 * n**3, rel=0.05)
+
+
+def test_scan_multiplies_by_trip_count():
+    n, trips = 128, 7
+    w = jnp.zeros((n, n), jnp.float32)
+    x = jnp.zeros((n, n), jnp.float32)
+
+    def f(w, x):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=trips)
+        return y
+
+    c = jax.jit(f).lower(w, x).compile()
+    hc = hlo_cost.analyze_hlo(c.as_text())
+    assert hc.flops == pytest.approx(trips * 2 * n**3, rel=0.15)
+
+
+def test_nested_scans_multiply():
+    n, outer, inner = 64, 3, 4
+    w = jnp.zeros((n, n), jnp.float32)
+    x = jnp.zeros((n, n), jnp.float32)
+
+    def f(w, x):
+        def obody(c, _):
+            def ibody(ci, _):
+                return ci @ w, None
+            ci, _ = jax.lax.scan(ibody, c, None, length=inner)
+            return ci, None
+        y, _ = jax.lax.scan(obody, x, None, length=outer)
+        return y
+
+    c = jax.jit(f).lower(w, x).compile()
+    hc = hlo_cost.analyze_hlo(c.as_text())
+    assert hc.flops == pytest.approx(outer * inner * 2 * n**3, rel=0.15)
+
+
+def test_bytes_scale_with_tensor_size():
+    small = jax.jit(lambda x: jnp.tanh(x) * 2).lower(
+        jnp.zeros((128, 128))).compile()
+    big = jax.jit(lambda x: jnp.tanh(x) * 2).lower(
+        jnp.zeros((512, 512))).compile()
+    hs = hlo_cost.analyze_hlo(small.as_text())
+    hb = hlo_cost.analyze_hlo(big.as_text())
+    assert hb.hbm_bytes > 8 * hs.hbm_bytes
+
+
+def test_collectives_counted(tmp_path):
+    # hand-built HLO exercising the parser (no multi-device needed)
+    hlo = """
+HloModule test, entry_computation_layout={()->f32[]}
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+ENTRY %main () -> f32[] {
+  %c = f32[128,128]{1,0} constant(0)
+  %ar = f32[128,128]{1,0} all-reduce(%c), replica_groups={}, to_apply=%add
+  %ag = f32[256,128]{1,0} all-gather(%ar), dimensions={0}
+  ROOT %s = f32[] constant(0)
+}
+"""
+    hc = hlo_cost.analyze_hlo(hlo)
+    ar = 128 * 128 * 4
+    ag = 256 * 128 * 4
+    assert hc.coll_bytes_by_kind["all-reduce"] == pytest.approx(2 * ar)
+    assert hc.coll_bytes_by_kind["all-gather"] == pytest.approx(ag)
+
+
+def test_roofline_model_flops():
+    from repro.configs import get_config, get_shape
+    from repro.launch import roofline as rl
+    cfg = get_config("qwen3-4b")
+    n = rl.count_params(cfg)
+    assert 3.5e9 < n < 5.5e9            # ~4B params
+    mf = rl.model_flops_for(cfg, get_shape("train_4k"))
+    assert mf == pytest.approx(6 * n * 4096 * 256, rel=1e-6)
+    # MoE uses active params only
+    ds = get_config("deepseek-moe-16b")
+    n_all = rl.count_params(ds)
+    n_act = rl.count_params(ds, active_only=True)
+    assert n_act < 0.5 * n_all

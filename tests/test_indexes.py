@@ -1,0 +1,139 @@
+"""Unified secondary index framework: bitmaps, sorted access, pruning."""
+import numpy as np
+import pytest
+
+from conftest import WORDS, make_batch, tweet_schema
+from repro.core import query as q
+from repro.core.index.base import MergedSortedAccess
+from repro.core.index.spatial import morton_codes
+from repro.core.index.text import tokenize
+
+
+def _seg(small_store):
+    store, _ = small_store
+    return store.segments[0]
+
+
+def test_scalar_bitmap_matches_column(small_store):
+    seg = _seg(small_store)
+    idx = seg.indexes["time"]
+    pred = q.Range("time", 20.0, 40.0)
+    mask = idx.bitmap(seg, pred)
+    truth = (seg.columns["time"] >= 20.0) & (seg.columns["time"] <= 40.0)
+    np.testing.assert_array_equal(mask, truth)
+    sel = idx.selectivity(seg, pred)
+    assert abs(sel - truth.mean()) < 1e-9
+
+
+def test_spatial_bitmap_matches_column(small_store):
+    seg = _seg(small_store)
+    idx = seg.indexes["coordinate"]
+    pred = q.GeoWithin("coordinate", (2.0, 3.0, 6.0, 7.0))
+    mask = idx.bitmap(seg, pred)
+    pts = seg.columns["coordinate"]
+    truth = ((pts[:, 0] >= 2) & (pts[:, 0] <= 6)
+             & (pts[:, 1] >= 3) & (pts[:, 1] <= 7))
+    np.testing.assert_array_equal(mask, truth)
+
+
+def test_text_bitmap_and_selectivity(small_store):
+    seg = _seg(small_store)
+    idx = seg.indexes["content"]
+    pred = q.TextContains("content", "apple")
+    mask = idx.bitmap(seg, pred)
+    truth = np.asarray(["apple" in tokenize(t)
+                        for t in seg.columns["content"]])
+    np.testing.assert_array_equal(mask, truth)
+    assert idx.selectivity(seg, pred) == pytest.approx(truth.mean())
+
+
+def test_ivf_bitmap_high_recall(small_store):
+    seg = _seg(small_store)
+    idx = seg.indexes["embedding"]
+    qv = np.asarray(seg.columns["embedding"][3], np.float32)
+    d = np.sqrt(((seg.columns["embedding"] - qv) ** 2).sum(1))
+    thresh = np.percentile(d, 2.0)
+    pred = q.VectorRange("embedding", qv, float(thresh))
+    mask = idx.bitmap(seg, pred)
+    truth = d < thresh
+    # IVF probes half the lists: recall high, precision exact
+    assert (mask & ~truth).sum() == 0
+    assert mask.sum() >= 0.6 * truth.sum()
+
+
+def test_ivf_search_recall(small_store):
+    seg = _seg(small_store)
+    idx = seg.indexes["embedding"]
+    qv = np.random.default_rng(0).normal(size=16).astype(np.float32)
+    d, rows, blocks = idx.search(qv, 10)
+    assert len(rows) == 10 and blocks > 0
+    assert np.all(np.diff(d) >= -1e-6)
+    exact = np.argsort(((seg.columns["embedding"] - qv) ** 2).sum(1))[:10]
+    assert len(set(rows.tolist()) & set(exact.tolist())) >= 5
+
+
+def test_ivf_sorted_access_is_globally_sorted(small_store):
+    seg = _seg(small_store)
+    idx = seg.indexes["embedding"]
+    qv = np.random.default_rng(1).normal(size=16).astype(np.float32)
+    it = idx.iterator(seg, qv)
+    prev = -1.0
+    seen = 0
+    for d, rows in it:
+        assert d[0] >= prev - 1e-5
+        assert np.all(np.diff(d) >= -1e-5)
+        prev = d[-1]
+        seen += len(d)
+    assert seen == seg.n_rows
+
+
+def test_spatial_sorted_access_exact(small_store):
+    seg = _seg(small_store)
+    idx = seg.indexes["coordinate"]
+    p = np.asarray([5.0, 5.0], np.float32)
+    it = idx.iterator(seg, p)
+    d_all, r_all = [], []
+    for d, rows in it:
+        d_all += d.tolist()
+        r_all += rows.tolist()
+    assert np.all(np.diff(d_all) >= -1e-6)
+    exact = np.sqrt(((seg.columns["coordinate"] - p) ** 2).sum(1))
+    np.testing.assert_allclose(sorted(d_all)[:20], np.sort(exact)[:20],
+                               rtol=1e-5)
+
+
+def test_merged_sorted_access_globally_sorted(small_store):
+    store, _ = small_store
+    qv = np.random.default_rng(2).normal(size=16).astype(np.float32)
+    streams = [(s.seg_id, s.indexes["embedding"].iterator(s, qv))
+               for s in store.segments]
+    merged = MergedSortedAccess(streams)
+    prev = -1.0
+    total = 0
+    for d, _ in merged:
+        assert d[0] >= prev - 1e-5
+        prev = d[-1]
+        total += len(d)
+    assert total == sum(s.n_rows for s in store.segments)
+
+
+def test_global_index_prunes_segments(small_store):
+    store, _ = small_store
+    # a range outside every segment's zone map must prune everything
+    pred = q.Range("time", 1e6, 2e6)
+    pruned = store.global_index.prune(store.segments, pred)
+    assert pruned == []
+    pred2 = q.Range("time", 0.0, 100.0)
+    assert len(store.global_index.prune(store.segments, pred2)) == \
+        len(store.segments)
+
+
+def test_morton_locality():
+    rng = np.random.default_rng(3)
+    pts = rng.uniform(0, 1, (512, 2)).astype(np.float32)
+    z = morton_codes(pts, (0, 0, 1, 1))
+    order = np.argsort(z)
+    # consecutive points in z order are spatially close on average
+    d = np.sqrt(((pts[order][1:] - pts[order][:-1]) ** 2).sum(1))
+    rand_d = np.sqrt(((pts[1:] - pts[:-1]) ** 2).sum(1))
+    assert d.mean() < 0.5 * rand_d.mean()

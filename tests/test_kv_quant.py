@@ -1,0 +1,41 @@
+"""int8 KV-cache quantization (EXPERIMENTS.md §Perf C3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model
+
+B, S = 2, 12
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "smollm-135m"])
+def test_int8_kv_decode_close_to_bf16(arch):
+    cfg = get_config(arch, reduced=True).replace(kv_cache_dtype="int8")
+    key = jax.random.PRNGKey(3)
+    params, _ = model.init_params(key, cfg)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    full = np.asarray(model.forward(params, cfg, tokens)
+                      .astype(jnp.float32))
+    cache, _ = model.init_cache(cfg, B, S)
+    outs = []
+    for i in range(S):
+        lg, cache = model.decode_step(params, cfg, tokens[:, i:i + 1],
+                                      cache, jnp.int32(i))
+        outs.append(np.asarray(lg.astype(jnp.float32))[:, 0])
+    dec = np.stack(outs, 1)
+    agree = (full.argmax(-1) == dec.argmax(-1)).mean()
+    assert agree > 0.8, agree
+
+
+def test_int8_cache_half_bytes():
+    cfg = get_config("qwen3-4b", reduced=True)
+    c_bf, _ = model.init_cache(cfg, B, 512)
+    c_i8, _ = model.init_cache(cfg.replace(kv_cache_dtype="int8"), B, 512)
+
+    def nbytes(c):
+        return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(c))
+
+    ratio = nbytes(c_i8) / nbytes(c_bf)
+    assert 0.5 <= ratio <= 0.6   # int8 payload + bf16 scales

@@ -1,0 +1,107 @@
+"""LSM store behaviour: write path, flush, compaction, MVCC."""
+import numpy as np
+import pytest
+
+from conftest import make_batch, tweet_schema
+from repro.core.lsm import LSMConfig, LSMStore
+from repro.core.segment import merge_segments
+
+
+def test_put_get_roundtrip():
+    rng = np.random.default_rng(0)
+    store = LSMStore(tweet_schema(), LSMConfig(flush_rows=100))
+    pks, batch = make_batch(rng, 250)
+    store.put(pks, batch)
+    # memtable + flushed segments both readable
+    for i in (0, 120, 249):
+        row = store.get(i)
+        assert row is not None
+        np.testing.assert_allclose(row["embedding"], batch["embedding"][i],
+                                   rtol=1e-6)
+        assert row["time"] == batch["time"][i]
+
+
+def test_flush_threshold_and_background_index_build():
+    rng = np.random.default_rng(1)
+    store = LSMStore(tweet_schema(), LSMConfig(flush_rows=128))
+    for i in range(4):
+        pks, batch = make_batch(rng, 128, pk_start=i * 128)
+        store.put(pks, batch)
+    assert store.metrics["flushes"] >= 3
+    for seg in store.segments:
+        # every declared index was built with the segment (paper §4)
+        assert set(seg.indexes) == {"embedding", "coordinate", "content",
+                                    "time"}
+
+
+def test_update_shadows_old_version():
+    rng = np.random.default_rng(2)
+    store = LSMStore(tweet_schema(), LSMConfig(flush_rows=64))
+    pks, batch = make_batch(rng, 64)
+    store.put(pks, batch)
+    store.flush()
+    _, batch2 = make_batch(rng, 1)
+    store.put([10], batch2)
+    row = store.get(10)
+    np.testing.assert_allclose(row["embedding"], batch2["embedding"][0])
+    store.flush()   # still newest after flush
+    row = store.get(10)
+    np.testing.assert_allclose(row["embedding"], batch2["embedding"][0])
+
+
+def test_delete_tombstone():
+    rng = np.random.default_rng(3)
+    store = LSMStore(tweet_schema(), LSMConfig(flush_rows=64))
+    pks, batch = make_batch(rng, 64)
+    store.put(pks, batch)
+    store.delete([5, 6])
+    assert store.get(5) is None and store.get(6) is None
+    store.flush()
+    assert store.get(5) is None
+    assert store.get(7) is not None
+
+
+def test_compaction_preserves_visible_rows():
+    rng = np.random.default_rng(4)
+    store = LSMStore(tweet_schema(), LSMConfig(flush_rows=100, fanout=3))
+    expect = {}
+    for i in range(0, 900, 100):
+        pks, batch = make_batch(rng, 100, pk_start=i)
+        store.put(pks, batch)
+        for j, pk in enumerate(pks):
+            expect[pk] = batch["time"][j]
+    store.flush()
+    assert store.metrics["compactions"] >= 1
+    levels = {s.level for s in store.segments}
+    assert max(levels) >= 1
+    for pk, t in list(expect.items())[::37]:
+        assert store.get(pk)["time"] == t
+    assert store.n_rows == len(expect)
+
+
+def test_merge_segments_keeps_newest_seqno():
+    rng = np.random.default_rng(5)
+    schema = tweet_schema()
+    store = LSMStore(schema, LSMConfig(flush_rows=10**9))
+    pks, b1 = make_batch(rng, 50)
+    store.put(pks, b1)
+    s1 = store.flush()
+    _, b2 = make_batch(rng, 50)
+    store.put(pks, b2)     # same keys, newer seqnos
+    s2 = store.flush()
+    merged = merge_segments(schema, [s1, s2], level=1, drop_tombstones=True)
+    assert merged.n_rows == 50
+    i = merged.get(25)
+    np.testing.assert_allclose(merged.columns["embedding"][i],
+                               b2["embedding"][25])
+
+
+def test_segment_block_reads():
+    rng = np.random.default_rng(6)
+    store = LSMStore(tweet_schema(), LSMConfig(flush_rows=300))
+    pks, batch = make_batch(rng, 300)
+    store.put(pks, batch)
+    seg = store.segments[0]
+    assert seg.n_blocks == (seg.n_rows + 127) // 128
+    blk = seg.read_block("embedding", 0)
+    assert blk.shape[0] <= 128

@@ -1,0 +1,133 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from conftest import tweet_schema
+from repro.core import query as q
+from repro.core.executor import Executor
+from repro.core.index.spatial import morton_codes
+from repro.core.lsm import LSMConfig, LSMStore
+from repro.kernels import ops
+
+SET = settings(max_examples=20, deadline=None,
+               suppress_health_check=[HealthCheck.too_slow])
+
+
+def _mk_store(seed, n, flush_rows):
+    rng = np.random.default_rng(seed)
+    store = LSMStore(tweet_schema(dim=8), LSMConfig(flush_rows=flush_rows))
+    vecs = rng.normal(size=(n, 8)).astype(np.float32)
+    pts = rng.uniform(0, 10, (n, 2)).astype(np.float32)
+    texts = np.asarray(["w%d w%d" % (i % 5, i % 3) for i in range(n)],
+                       object)
+    times = rng.uniform(0, 100, n)
+    step = max(1, n // 4)
+    for i in range(0, n, step):
+        j = min(i + step, n)
+        store.put(list(range(i, j)), {
+            "embedding": vecs[i:j], "coordinate": pts[i:j],
+            "content": texts[i:j], "time": times[i:j]})
+    store.flush()
+    return store, vecs, pts, times
+
+
+@SET
+@given(seed=st.integers(0, 10**6), n=st.integers(50, 400),
+       flush=st.sampled_from([32, 64, 128]))
+def test_lsm_every_put_visible(seed, n, flush):
+    store, vecs, pts, times = _mk_store(seed, n, flush)
+    rng = np.random.default_rng(seed + 1)
+    for pk in rng.integers(0, n, size=10):
+        row = store.get(int(pk))
+        assert row is not None
+        assert row["time"] == times[pk]
+
+
+@SET
+@given(seed=st.integers(0, 10**6), n=st.integers(100, 300),
+       lo=st.floats(0, 50), width=st.floats(0.1, 50))
+def test_range_query_matches_brute(seed, n, lo, width):
+    store, vecs, pts, times = _mk_store(seed, n, 64)
+    ex = Executor(store)
+    res, _ = ex.execute(q.HybridQuery(filters=[q.Range("time", lo,
+                                                       lo + width)]))
+    want = set(np.nonzero((times >= lo) & (times <= lo + width))[0].tolist())
+    assert set(r.pk for r in res) == want
+
+
+@SET
+@given(seed=st.integers(0, 10**6), n=st.integers(100, 300),
+       k=st.integers(1, 15))
+def test_nra_matches_brute_force(seed, n, k):
+    store, vecs, pts, times = _mk_store(seed, n, 128)
+    rng = np.random.default_rng(seed + 2)
+    qv = rng.normal(size=8).astype(np.float32)
+    p = tuple(rng.uniform(0, 10, 2))
+    w1, w2 = float(rng.uniform(0.1, 2)), float(rng.uniform(0.1, 2))
+    from repro.core.optimizer import planner as pl
+    ranks = [q.VectorRank("embedding", qv, w1),
+             q.SpatialRank("coordinate", p, w2)]
+    plan = pl.Plan(kind="nra", ranks=ranks, k=k)
+    res, _ = Executor(store).execute(q.HybridQuery(ranks=ranks, k=k),
+                                     plan=plan)
+    score = w1 * np.sqrt(((vecs - qv) ** 2).sum(1)) \
+        + w2 * np.sqrt(((pts - np.asarray(p)) ** 2).sum(1))
+    want_scores = np.sort(score)[:k]
+    got_scores = np.asarray([r.score for r in res])
+    np.testing.assert_allclose(got_scores, want_scores, rtol=1e-4,
+                               atol=1e-4)
+
+
+@SET
+@given(seed=st.integers(0, 10**6), n=st.integers(1, 600),
+       c=st.integers(1, 5))
+def test_bitmap_kernel_property(seed, n, c):
+    rng = np.random.default_rng(seed)
+    cols = rng.uniform(-1, 1, (n, c)).astype(np.float32)
+    bounds = np.sort(rng.uniform(-1, 1, (c, 2)), axis=1).astype(np.float32)
+    got = ops.range_bitmap(cols, bounds, use_pallas=False)
+    want = np.all((cols >= bounds[:, 0]) & (cols <= bounds[:, 1]), axis=1)
+    np.testing.assert_array_equal(got, want)
+
+
+@SET
+@given(seed=st.integers(0, 10**6), n=st.integers(2, 256))
+def test_morton_codes_bounded(seed, n):
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(-5, 5, (n, 2)).astype(np.float32)
+    bbox = (float(pts[:, 0].min()), float(pts[:, 1].min()),
+            float(pts[:, 0].max()), float(pts[:, 1].max()))
+    z = morton_codes(pts, bbox)
+    assert z.dtype == np.uint32
+    # corner points map to extreme codes
+    lo = morton_codes(np.asarray([[bbox[0], bbox[1]]], np.float32), bbox)
+    assert lo[0] == 0
+
+
+@SET
+@given(seed=st.integers(0, 10**6),
+       nq=st.integers(1, 8), n=st.integers(1, 300), d=st.integers(2, 32))
+def test_l2_distance_property(seed, nq, n, d):
+    rng = np.random.default_rng(seed)
+    qs = rng.normal(size=(nq, d)).astype(np.float32)
+    xs = rng.normal(size=(n, d)).astype(np.float32)
+    got = ops.l2_distances(qs, xs)
+    want = ((qs[:, None, :] - xs[None, :, :]) ** 2).sum(-1)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+@SET
+@given(seed=st.integers(0, 10**6), n=st.integers(20, 200),
+       n_del=st.integers(1, 10))
+def test_delete_then_query_never_returns_deleted(seed, n, n_del):
+    store, vecs, pts, times = _mk_store(seed, n, 64)
+    rng = np.random.default_rng(seed + 3)
+    dels = [int(x) for x in rng.integers(0, n, n_del)]
+    store.delete(dels)
+    res, _ = Executor(store).execute(
+        q.HybridQuery(filters=[q.Range("time", -1, 101)]))
+    got = set(r.pk for r in res)
+    assert not (got & set(dels))
+    assert got == set(range(n)) - set(dels)
