@@ -1,0 +1,92 @@
+"""Batched multi-query execution: ``execute_many`` vs sequential
+``execute`` on the same workload (the shared-scan amortization the
+vectorized operator pipeline enables).
+
+At each batch size B, the same B hybrid NN queries run (a) sequentially,
+one ``execute`` per query, and (b) as one ``execute_many`` batch that
+shares per-segment scans, predicate bitmaps, and stacks the B query
+vectors into single ``l2_distances(Q, X)`` kernel calls.
+
+Rows: ``mq_batchN,us_per_query_batched,seq_qps=..;batch_qps=..;speedup=..``
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks import tracy
+from repro.core import query as q
+from repro.core.executor import Executor
+
+BATCH_SIZES = (1, 8, 64)
+
+
+def _make_queries(data: tracy.TracyData, n: int) -> List[q.HybridQuery]:
+    """Hybrid NN workload: vector rank + time filter (template t8 shape),
+    distinct query vector per request."""
+    out = []
+    for _ in range(n):
+        lo = float(data.rng.uniform(0, 800))
+        out.append(q.HybridQuery(
+            filters=[q.Range("time", lo, lo + 200)],
+            ranks=[q.VectorRank("embedding", data.query_vec(), 1.0)],
+            k=10))
+    return out
+
+
+def _time_best(fn, repeats: int = 3) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run_multi_query(n_rows: int = 6000, batch: int = 8, seed: int = 0,
+                    repeats: int = 3) -> dict:
+    cfg = tracy.TracyConfig(n_rows=n_rows, seed=seed, dim=64)
+    store, data = tracy.build_store(cfg)
+    ex = Executor(store)
+    queries = _make_queries(data, batch)
+    plans = [None] * batch
+
+    # warm both paths (plan cache, jit, visibility index)
+    ex.execute_many(queries)
+    for qq in queries:
+        ex.execute(qq)
+
+    seq_s = _time_best(
+        lambda: [ex.execute(qq) for qq in queries], repeats)
+    bat_s = _time_best(
+        lambda: ex.execute_many(queries, plans=list(plans)), repeats)
+
+    # sanity: both paths agree on results
+    seq_res = [ex.execute(qq)[0] for qq in queries]
+    bat_res = [r for r, _ in ex.execute_many(queries)]
+    for a, b in zip(seq_res, bat_res):
+        assert [r.pk for r in a] == [r.pk for r in b], \
+            "batched results diverge from sequential"
+
+    return {"seq_qps": batch / seq_s, "batch_qps": batch / bat_s,
+            "speedup": seq_s / bat_s,
+            "us_per_query_batched": bat_s / batch * 1e6}
+
+
+def bench(scale: float = 1.0) -> List[str]:
+    rows = []
+    n_rows = int(6000 * scale)
+    for batch in BATCH_SIZES:
+        r = run_multi_query(n_rows=n_rows, batch=batch)
+        rows.append(
+            f"mq_batch{batch},{r['us_per_query_batched']:.0f},"
+            f"seq_qps={r['seq_qps']:.0f};batch_qps={r['batch_qps']:.0f};"
+            f"speedup={r['speedup']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in bench():
+        print(row)

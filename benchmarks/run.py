@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV (assignment contract).
   tab1_*   — hybrid query latency vs baseline strategies (paper Table 1)
   fig5a/b_* — continuous queries: budget / #queries sweeps (paper Fig. 5)
   ingest_* — ingestion throughput vs global in-memory index (paper §1)
+  mq_*     — batched execute_many vs sequential execute throughput
 
 ``--scale`` shrinks/grows the workload (CPU container default 1.0).
 """
@@ -17,18 +18,20 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--only", default=None,
-                    help="comma list: fig4,tab1,fig5,ingest")
+                    help="comma list: fig4,tab1,fig5,ingest,mq")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (continuous_bench, dynamic_workload,
-                            hybrid_latency, ingestion, pq_study)
+                            hybrid_latency, ingestion, multi_query,
+                            pq_study)
     sections = [
         ("tab1", hybrid_latency.bench),
         ("fig4", dynamic_workload.bench),
         ("fig5", continuous_bench.bench),
         ("ingest", ingestion.bench),
         ("pq", pq_study.bench),
+        ("mq", multi_query.bench),
     ]
     print("name,us_per_call,derived")
     for name, fn in sections:

@@ -86,23 +86,26 @@ def main():
     print(f"ingested {n_ingest} docs in {ingest_dt:.2f}s "
           f"({n_ingest / ingest_dt:.0f} docs/s incl. embedding)")
 
-    # --- serve hybrid queries -------------------------------------------
+    # --- serve hybrid queries (batched: one embed call, one shared scan)
     ex = Executor(store)
     queries = ["sports championship", "food dinner recipe",
                "tech stock earnings"]
     t0 = time.perf_counter()
-    for text in queries:
-        qv = embed_texts([text])[0]
-        res, st = ex.execute(q.HybridQuery(
+    toks = np.stack([data_lib.text_to_tokens(t, cfg.vocab_size, seq)
+                     for t in queries])
+    answered = serve_step.serve_hybrid_queries(
+        params, cfg, jnp.asarray(toks), ex,
+        lambda qv: q.HybridQuery(
             filters=[q.Range("time", 0, args.requests)],
             ranks=[q.VectorRank("embedding", qv, 1.0)], k=3))
+    for text, (res, st) in zip(queries, answered):
         top = [(r.values["content"][:40], round(r.score, 3)) for r in res]
         print(f"query {text!r}: plan={st.plan.split('(')[0]}")
         for c, s in top:
             print(f"    {s:6.3f}  {c}")
     q_dt = (time.perf_counter() - t0) / len(queries)
-    print(f"avg hybrid query latency (incl. query embedding): "
-          f"{q_dt * 1e3:.1f} ms")
+    print(f"avg hybrid query latency (incl. query embedding, batched "
+          f"execute_many): {q_dt * 1e3:.1f} ms")
 
 
 if __name__ == "__main__":

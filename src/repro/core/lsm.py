@@ -167,26 +167,7 @@ class LSMStore:
     def resolve_visible(self, per_segment_rows: Dict[int, np.ndarray]
                         ) -> Dict[int, np.ndarray]:
         """Given {seg_id: row_indices}, drop rows shadowed by newer versions
-        of the same pk elsewhere (or by memtable / tombstones)."""
-        seg_by_id = {s.seg_id: s for s in self.segments}
-        best: Dict[int, tuple] = {}
-        for sid, rows in per_segment_rows.items():
-            seg = seg_by_id[sid]
-            for i in np.asarray(rows):
-                key = int(seg.pk[i])
-                sq = int(seg.seqno[i])
-                cur = best.get(key)
-                if cur is None or sq > cur[0]:
-                    best[key] = (sq, sid, int(i), bool(seg.tombstone[i]))
-        # memtable shadows everything it contains
-        for key in list(best.keys()):
-            m = self.memtable.get(key)
-            if m is not None:
-                del best[key]
-        out: Dict[int, List[int]] = {}
-        for key, (sq, sid, i, tomb) in best.items():
-            if tomb:
-                continue
-            out.setdefault(sid, []).append(i)
-        return {sid: np.asarray(sorted(rows), np.int64)
-                for sid, rows in out.items()}
+        of the same pk elsewhere (or by memtable / tombstones).  Delegates
+        to the shared vectorized resolver in ``core.visibility``."""
+        from repro.core import visibility
+        return visibility.visibility_index(self).resolve(per_segment_rows)

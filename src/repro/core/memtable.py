@@ -24,6 +24,9 @@ class MemTable:
         self._cols: Dict[str, List[Any]] = {c.name: [] for c in schema.columns}
         # newest row index per key for O(1) point reads
         self._latest: Dict[int, int] = {}
+        # scan_arrays() memo — every read path materializes the same
+        # columnar view; cleared on write (flush swaps the instance)
+        self._scan_cache = None
 
     def __len__(self) -> int:
         return len(self._pk)
@@ -45,6 +48,7 @@ class MemTable:
                   tombstone: bool = False) -> int:
         """Append rows; returns the next unused seqno."""
         n = validate_batch(self.schema, batch) if not tombstone else len(pks)
+        self._scan_cache = None
         seq = seqno_start
         for i in range(len(pks)):
             self._latest[int(pks[i])] = len(self._pk)
@@ -71,7 +75,10 @@ class MemTable:
 
     def scan_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
                                    Dict[str, np.ndarray]]:
-        """Materialize as columnar arrays (for flush or brute-force read)."""
+        """Materialize as columnar arrays (for flush or brute-force read).
+        Memoized until the next write; callers must not mutate."""
+        if self._scan_cache is not None:
+            return self._scan_cache
         pk = np.asarray(self._pk, np.int64)
         seqno = np.asarray(self._seqno, np.int64)
         tomb = np.asarray(self._tomb, bool)
@@ -89,7 +96,8 @@ class MemTable:
                 cols[c.name] = np.asarray(vals, np.float64)
             else:
                 cols[c.name] = np.asarray(vals, object)
-        return pk, seqno, tomb, cols
+        self._scan_cache = (pk, seqno, tomb, cols)
+        return self._scan_cache
 
 
 def _null_for(c):

@@ -28,37 +28,19 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import query as q
+from repro.core import visibility as vis_lib
 from repro.core.executor import ExecStats  # noqa: F401 (type only)
 from repro.core.index.base import MergedSortedAccess
 
 
-class _VisibilityOracle:
-    """pk -> visible (seg_id, row) or None; memtable shadows segments."""
-
-    def __init__(self, store):
-        self.store = store
-        self._cache: Dict[int, Optional[Tuple[int, int]]] = {}
-
-    def visible(self, sid: int, row: int, seg_by_id) -> bool:
-        seg = seg_by_id[sid]
-        key = int(seg.pk[row])
-        if key not in self._cache:
-            if self.store.memtable.get(key) is not None:
-                self._cache[key] = None
-            else:
-                best = None
-                for s in self.store.segments:
-                    if not s.may_contain(key):
-                        continue
-                    i = s.get(key)
-                    if i is not None and (best is None or
-                                          s.seqno[i] > best[0]):
-                        best = (int(s.seqno[i]), s.seg_id, int(i),
-                                bool(s.tombstone[i]))
-                self._cache[key] = None if best is None or best[3] \
-                    else (best[1], best[2])
-        vis = self._cache[key]
-        return vis is not None and vis == (sid, row)
+def _per_segment_lookup(masks: Dict[int, np.ndarray], sids: np.ndarray,
+                        rows: np.ndarray) -> np.ndarray:
+    """Vectorized masks[sid][row] gather, grouped by segment."""
+    keep = np.empty(len(sids), bool)
+    for sid in np.unique(sids):
+        sel = sids == sid
+        keep[sel] = masks[int(sid)][rows[sel]]
+    return keep
 
 
 def _modality_stream(store, rank, stats) -> Optional[MergedSortedAccess]:
@@ -92,7 +74,7 @@ def nra_topk(store, catalog, query: q.HybridQuery, stats) -> List:
     dmax = np.asarray([catalog.dist_bound(r) for r in ranks], np.float32)
     k = query.k
     seg_by_id = {s.seg_id: s for s in store.segments}
-    oracle = _VisibilityOracle(store)
+    vis = None if store.unique_pks else vis_lib.visibility_index(store)
 
     streams = [_modality_stream(store, r, stats) for r in ranks]
     if any(s is None for s in streams):
@@ -122,7 +104,6 @@ def nra_topk(store, catalog, query: q.HybridQuery, stats) -> List:
     n_seen = 0
     bottoms = np.zeros(ell, np.float32)
     exhausted = np.zeros(ell, bool)
-    check_vis = not store.unique_pks
 
     ROUND_ROWS = 256   # drain this many rows per modality per round:
     #                    the merged stream certifies small prefixes, so
@@ -152,14 +133,10 @@ def nra_topk(store, catalog, query: q.HybridQuery, stats) -> List:
             sids = keys[:, 0].astype(np.int64)
             rows = keys[:, 1].astype(np.int64)
             if query.filters:
-                keep = np.fromiter(
-                    (masks[int(s)][int(r)] for s, r in zip(sids, rows)),
-                    bool, len(sids))
+                keep = _per_segment_lookup(masks, sids, rows)
                 sids, rows, dists = sids[keep], rows[keep], dists[keep]
-            if check_vis and len(sids):
-                keep = np.fromiter(
-                    (oracle.visible(int(s), int(r), seg_by_id)
-                     for s, r in zip(sids, rows)), bool, len(sids))
+            if vis is not None and len(sids):
+                keep = vis.visible_mask(sids, rows)
                 sids, rows, dists = sids[keep], rows[keep], dists[keep]
             if not len(sids):
                 continue
@@ -215,31 +192,21 @@ def nra_topk(store, catalog, query: q.HybridQuery, stats) -> List:
                         int(enc_arr[i]) & 0xFFFFFFFF) for i in order]
             break
 
-    # --- random-access refinement: exact scores for the winner set -----
-    out = []
+    # --- random-access refinement: exact scores for the winner set, then
+    # the shared finishing pipeline (visibility + memtable overlay + topk)
+    from repro.core import operators as ops_lib
+
+    parts = []
     for sid, row in winners:
         seg = seg_by_id[sid]
-        vals = {c: seg.columns[c][np.asarray([row])] for c in seg.columns}
+        vals = {r.col: seg.columns[r.col][np.asarray([row])] for r in ranks}
         score = float(ex.combined_scores(vals, ranks)[0])
         stats.rows_scanned += 1
-        out.append(ex.ResultRow(
-            pk=int(seg.pk[row]), score=score,
-            values={c: seg.columns[c][row] for c in seg.columns}))
-
-    # memtable overlay (exact, brute force)
-    mt = store.memtable
-    if len(mt):
-        pk, seqno, tomb, cols = mt.scan_arrays()
-        keep = ex.Executor._memtable_visible(pk, tomb)
-        for pred in query.filters:
-            keep &= ex.eval_predicate_rows(cols, pred)
-        rows = np.nonzero(keep)[0]
-        if len(rows):
-            vals = {c: cols[c][rows] for c in cols}
-            scores = ex.combined_scores(vals, ranks)
-            for s, i in zip(scores, rows):
-                out.append(ex.ResultRow(
-                    pk=int(pk[i]), score=float(s),
-                    values={c: cols[c][i] for c in cols}))
-    out.sort(key=lambda r: (r.score, r.pk))
-    return out[:k]
+        parts.append(ops_lib.Candidates(
+            np.asarray([sid], np.int64), np.asarray([row], np.int64),
+            np.asarray([score], np.float32)))
+    cand = ops_lib.Candidates.concat(parts)
+    from repro.core.optimizer import planner as pl
+    plan = pl.Plan(kind="nra", residual=query.filters, ranks=ranks, k=k)
+    ctx = ops_lib.PipelineContext(store, catalog, [query], [plan], [stats])
+    return ops_lib.finish_candidates(ctx, [cand])[0]

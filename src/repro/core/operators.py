@@ -1,0 +1,665 @@
+"""Composable physical operators over columnar batches (paper §5).
+
+The read path is a pipeline of physical operators that pass columnar
+batches — never per-row Python loops:
+
+  SegmentScan / IndexProbe   leaf sources: per-segment candidate bitmaps
+  FilterBitmap               residual predicates ANDed into the bitmaps
+  RankScore                  batched distance kernels over the bitmap union
+  VisibilityResolve          shared lexsort-based MVCC winner filtering
+  MemtableOverlay            brute-force scan of the RAM write buffer
+  TopKMerge                  per-query (score, pk) merge and cut
+
+Every operator doubles as an EXPLAIN node (``explain()`` renders the tree
+with per-operator cost estimates) and as an execution unit.  Execution is
+*multi-query*: a ``PipelineContext`` carries a batch of queries, leaf
+scans are shared across the batch (each predicate bitmap is computed once
+per segment, whatever the batch size), and ``RankScore`` stacks the batch
+query vectors into single ``l2_distances(Q, X)`` kernel calls — N
+sequential segment sweeps become one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import query as q
+from repro.core import visibility as vis_lib
+from repro.core.index.text import tokenize
+from repro.core.optimizer.cost import (C_FILTER_BLOCK, C_MERGE,
+                                       C_ROW_RESIDUAL, C_VECTOR_BLOCK)
+from repro.core.types import BLOCK_ROWS
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass
+class ExecStats:
+    blocks_read: float = 0.0
+    rows_scanned: int = 0
+    plan: str = ""
+
+
+@dataclasses.dataclass
+class ResultRow:
+    pk: int
+    score: float
+    values: Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# predicate evaluation (segment bitmaps + materialized rows)
+# ---------------------------------------------------------------------------
+
+def eval_predicate_seg(seg, pred, stats: ExecStats,
+                       use_index: bool = True) -> np.ndarray:
+    """Bool mask over segment rows for one predicate."""
+    idx = seg.indexes.get(getattr(pred, "col", None)) if use_index else None
+    if idx is not None:
+        try:
+            mask = idx.bitmap(seg, pred)
+            stats.blocks_read += idx.probe_cost_blocks(seg, pred)
+            return mask
+        except NotImplementedError:
+            pass
+    # kernel fallback (full column scan)
+    stats.blocks_read += seg.n_blocks
+    if isinstance(pred, q.Range):
+        col = np.asarray(seg.columns[pred.col], np.float32)[:, None]
+        return kops.range_bitmap(col, np.asarray([[pred.lo, pred.hi]]))
+    if isinstance(pred, q.GeoWithin):
+        return kops.rect_filter(np.asarray(seg.columns[pred.col],
+                                           np.float32), pred.rect)
+    if isinstance(pred, q.TextContains):
+        term = pred.term.lower()
+        return np.asarray([term in tokenize(t)
+                           for t in seg.columns[pred.col]], bool)
+    if isinstance(pred, q.VectorRange):
+        d = np.sqrt(np.maximum(kops.l2_distances(
+            pred.q[None, :], np.asarray(seg.columns[pred.col],
+                                        np.float32))[0], 0))
+        return d < pred.thresh
+    raise TypeError(f"unknown predicate {pred!r}")
+
+
+def eval_predicate_rows(row_values: Dict[str, np.ndarray], pred) -> np.ndarray:
+    """Predicate over materialized rows (memtable / residual eval)."""
+    if isinstance(pred, q.Range):
+        v = np.asarray(row_values[pred.col], np.float64)
+        return (v >= pred.lo) & (v <= pred.hi)
+    if isinstance(pred, q.GeoWithin):
+        return kops.rect_filter(np.asarray(row_values[pred.col],
+                                           np.float32), pred.rect)
+    if isinstance(pred, q.TextContains):
+        term = pred.term.lower()
+        return np.asarray([term in tokenize(t)
+                           for t in row_values[pred.col]], bool)
+    if isinstance(pred, q.VectorRange):
+        vecs = np.asarray(row_values[pred.col], np.float32)
+        if len(vecs) == 0:
+            return np.zeros((0,), bool)
+        d = np.sqrt(np.maximum(
+            kops.l2_distances(pred.q[None, :], vecs)[0], 0))
+        return d < pred.thresh
+    raise TypeError(f"unknown predicate {pred!r}")
+
+
+def pred_cache_key(pred) -> Tuple:
+    """Hashable identity for a predicate (VectorRange holds an ndarray)."""
+    if isinstance(pred, q.Range):
+        return ("range", pred.col, pred.lo, pred.hi)
+    if isinstance(pred, q.GeoWithin):
+        return ("geo", pred.col, tuple(pred.rect))
+    if isinstance(pred, q.TextContains):
+        return ("text", pred.col, pred.term)
+    if isinstance(pred, q.VectorRange):
+        return ("vrange", pred.col, pred.q.tobytes(), pred.thresh)
+    return ("id", id(pred))
+
+
+# ---------------------------------------------------------------------------
+# rank-distance evaluation (exact; single-query and batched)
+# ---------------------------------------------------------------------------
+
+def rank_distances(values: Dict[str, np.ndarray], rank, seg=None,
+                   rows: Optional[np.ndarray] = None) -> np.ndarray:
+    if isinstance(rank, q.VectorRank):
+        vecs = np.asarray(values[rank.col], np.float32)
+        if len(vecs) == 0:
+            return np.zeros((0,), np.float32)
+        return np.sqrt(np.maximum(
+            kops.l2_distances(rank.q[None, :], vecs)[0], 0))
+    if isinstance(rank, q.SpatialRank):
+        pts = np.asarray(values[rank.col], np.float32)
+        p = np.asarray(rank.point, np.float32)
+        if len(pts) == 0:
+            return np.zeros((0,), np.float32)
+        return np.sqrt(((pts - p) ** 2).sum(axis=1))
+    if isinstance(rank, q.TextRank):
+        out = np.empty(len(values[rank.col]), np.float32)
+        qterms = [t.lower() for t in rank.terms]
+        for i, text in enumerate(values[rank.col]):
+            toks = tokenize(text)
+            score = sum(toks.count(t) for t in qterms) / (len(toks) + 1.0)
+            out[i] = 1.0 / (1.0 + score * 10.0)
+        return out
+    raise TypeError(f"unknown rank {rank!r}")
+
+
+def combined_scores(values: Dict[str, np.ndarray], ranks) -> np.ndarray:
+    n = len(next(iter(values.values()))) if values else 0
+    total = np.zeros(n, np.float32)
+    for r in ranks:
+        total += r.weight * rank_distances(values, r)
+    return total
+
+
+def rank_signature(ranks) -> Tuple:
+    """Queries with equal signatures can share one batched kernel call."""
+    return tuple((type(r).__name__, r.col) for r in ranks)
+
+
+def batched_rank_scores(values: Dict[str, np.ndarray],
+                        rank_lists: Sequence[Sequence]) -> np.ndarray:
+    """Weighted-sum scores for a batch of structurally-identical rank
+    lists -> (nq, n).  Vector and spatial modalities stack the batch's
+    query points into one ``l2_distances(Q, X)`` kernel call."""
+    nq = len(rank_lists)
+    n = len(next(iter(values.values()))) if values else 0
+    total = np.zeros((nq, n), np.float32)
+    for j in range(len(rank_lists[0])):
+        terms = [rl[j] for rl in rank_lists]
+        r0 = terms[0]
+        w = np.asarray([t.weight for t in terms], np.float32)[:, None]
+        if isinstance(r0, (q.VectorRank, q.SpatialRank)):
+            pts = np.asarray(values[r0.col], np.float32)
+            Q = np.stack([np.asarray(
+                t.q if isinstance(t, q.VectorRank) else t.point, np.float32)
+                for t in terms])
+            D = np.sqrt(np.maximum(kops.l2_distances(Q, pts), 0))
+        else:
+            D = np.stack([rank_distances(values, t) for t in terms])
+        total += w * D
+    return total
+
+
+# ---------------------------------------------------------------------------
+# execution context: one per query batch
+# ---------------------------------------------------------------------------
+
+class PipelineContext:
+    """Shared state for executing a batch of queries in one pipeline pass:
+    per-(segment, predicate) bitmap cache, global-index pruning sets, the
+    shared visibility index, and memtable arrays."""
+
+    def __init__(self, store, catalog, queries, plans,
+                 stats: List[ExecStats],
+                 pred_cache: Optional[Dict] = None):
+        self.store = store
+        self.catalog = catalog
+        self.queries = list(queries)
+        self.plans = list(plans)
+        self.stats = list(stats)
+        self.nq = len(self.queries)
+        self._pred_cache: Dict = pred_cache if pred_cache is not None else {}
+        self._mt = None
+        self._mt_pred: Dict = {}
+        self._vis = False            # lazily resolved (False = unset)
+        # zone-map pruning per query (filter plans only, matching the
+        # sequential executor: NN scans visit every segment)
+        self._allowed: List[Optional[set]] = []
+        for qq, plan in zip(self.queries, self.plans):
+            if plan.kind in ("full_scan", "index_intersect"):
+                preds = plan.indexed or plan.residual
+                segs = store.segments
+                for p in preds:
+                    segs = store.global_index.prune(segs, p)
+                self._allowed.append({s.seg_id for s in segs})
+            else:
+                self._allowed.append(None)
+
+    # ------------------------------------------------------------- caches
+    @property
+    def visibility(self):
+        if self._vis is False:
+            self._vis = None if self.store.unique_pks else \
+                vis_lib.visibility_index(self.store)
+        return self._vis
+
+    def allowed(self, qi: int, seg) -> bool:
+        a = self._allowed[qi]
+        return a is None or seg.seg_id in a
+
+    def pred_mask(self, seg, pred, use_index: bool
+                  ) -> Tuple[np.ndarray, float]:
+        """(bool mask over segment rows, block cost) — computed once per
+        (segment, predicate) whatever the batch size; the block cost is
+        charged to every query that uses the mask so per-query stats stay
+        comparable with sequential execution."""
+        key = (seg.seg_id, use_index, pred_cache_key(pred))
+        hit = self._pred_cache.get(key)
+        if hit is None:
+            s = ExecStats()
+            mask = eval_predicate_seg(seg, pred, s, use_index=use_index)
+            hit = (mask, s.blocks_read)
+            self._pred_cache[key] = hit
+        return hit
+
+    def memtable_arrays(self):
+        if self._mt is None:
+            self._mt = self.store.memtable.scan_arrays()
+        return self._mt
+
+    def memtable_pred_mask(self, pred) -> np.ndarray:
+        key = pred_cache_key(pred)
+        hit = self._mt_pred.get(key)
+        if hit is None:
+            _, _, _, cols = self.memtable_arrays()
+            hit = eval_predicate_rows(cols, pred)
+            self._mt_pred[key] = hit
+        return hit
+
+
+@dataclasses.dataclass
+class Candidates:
+    """Per-query columnar candidate set: parallel arrays of (segment id,
+    row index, score).  ``sid == -1`` denotes a memtable row."""
+    sids: np.ndarray
+    rows: np.ndarray
+    scores: np.ndarray
+
+    @staticmethod
+    def empty() -> "Candidates":
+        return Candidates(np.zeros(0, np.int64), np.zeros(0, np.int64),
+                          np.zeros(0, np.float32))
+
+    @staticmethod
+    def concat(parts: List["Candidates"]) -> "Candidates":
+        if not parts:
+            return Candidates.empty()
+        return Candidates(np.concatenate([p.sids for p in parts]),
+                          np.concatenate([p.rows for p in parts]),
+                          np.concatenate([p.scores for p in parts]))
+
+
+# ---------------------------------------------------------------------------
+# physical operators
+# ---------------------------------------------------------------------------
+
+class PhysicalOp:
+    name = "Op"
+
+    def __init__(self, children: Sequence["PhysicalOp"] = (),
+                 detail: str = "", est_cost: float = 0.0):
+        self.children = list(children)
+        self.detail = detail
+        self.est_cost = est_cost
+
+    def explain(self, indent: int = 0) -> str:
+        pad = "  " * indent
+        head = f"{pad}-> {self.name}"
+        if self.detail:
+            head += f" [{self.detail}]"
+        head += f" cost={self.est_cost:.1f}"
+        lines = [head]
+        for c in self.children:
+            lines.append(c.explain(indent + 1))
+        return "\n".join(lines)
+
+    # -- execution interface (leaf sources / transforms override) --------
+    def batches(self, ctx: PipelineContext
+                ) -> Iterator[Tuple[Any, np.ndarray]]:
+        """Yield (segment, mask (nq, n_rows) bool) columnar batches."""
+        raise NotImplementedError(self.name)
+
+
+class SegmentScan(PhysicalOp):
+    """Leaf: every row of every (unpruned) segment."""
+    name = "SegmentScan"
+
+    def batches(self, ctx):
+        for seg in ctx.store.segments:
+            if seg.n_rows == 0:
+                continue
+            mask = np.zeros((ctx.nq, seg.n_rows), bool)
+            for qi in range(ctx.nq):
+                if ctx.allowed(qi, seg):
+                    mask[qi, :] = True
+            if mask.any():
+                yield seg, mask
+
+
+class IndexProbe(PhysicalOp):
+    """Leaf: per-segment index bitmaps for each query's probe predicates,
+    intersected.  Falls back to a kernel column scan where a segment lacks
+    the index."""
+    name = "IndexProbe"
+
+    def batches(self, ctx):
+        for seg in ctx.store.segments:
+            if seg.n_rows == 0:
+                continue
+            mask = np.zeros((ctx.nq, seg.n_rows), bool)
+            for qi, plan in enumerate(ctx.plans):
+                if not ctx.allowed(qi, seg):
+                    continue
+                m = np.ones(seg.n_rows, bool)
+                for pred in plan.indexed:
+                    pm, blocks = ctx.pred_mask(seg, pred, use_index=True)
+                    ctx.stats[qi].blocks_read += blocks
+                    m &= pm
+                    if not m.any():
+                        break
+                mask[qi] = m
+            if mask.any():
+                yield seg, mask
+
+
+class FilterBitmap(PhysicalOp):
+    """Residual predicates ANDed into the candidate bitmaps.  Each
+    predicate is evaluated once per segment per batch, row-wise over the
+    UNION of the batch's surviving candidate rows — N queries sharing a
+    filter pay for one evaluation, and a selective index probe upstream
+    keeps residual work O(survivors), never O(segment)."""
+    name = "FilterBitmap"
+
+    def batches(self, ctx):
+        for seg, mask in self.children[0].batches(ctx):
+            rows = np.nonzero(mask.any(axis=0))[0]
+            evaluated: Dict[Tuple, np.ndarray] = {}
+
+            def residual_mask(pred) -> np.ndarray:
+                key = pred_cache_key(pred)
+                hit = evaluated.get(key)
+                if hit is None:
+                    vals = {pred.col: seg.columns[pred.col][rows]}
+                    hit = np.zeros(seg.n_rows, bool)
+                    hit[rows[eval_predicate_rows(vals, pred)]] = True
+                    evaluated[key] = hit
+                return hit
+
+            for qi, plan in enumerate(ctx.plans):
+                if not plan.residual or not mask[qi].any():
+                    continue
+                ctx.stats[qi].rows_scanned += int(mask[qi].sum())
+                for pred in plan.residual:
+                    mask[qi] &= residual_mask(pred)
+                    if not mask[qi].any():
+                        break
+            if mask.any():
+                yield seg, mask
+
+
+class RankScore(PhysicalOp):
+    """Exact rank scores for surviving candidates.  The batch's query
+    vectors are stacked into one ``l2_distances(Q, X)`` call per segment
+    over the union of candidate rows."""
+    name = "RankScore"
+
+    def collect(self, ctx: PipelineContext) -> List[List[Candidates]]:
+        out: List[List[Candidates]] = [[] for _ in range(ctx.nq)]
+        rank_lists = [qq.ranks for qq in ctx.queries]
+        rank_cols = {r.col for r in rank_lists[0]}
+        for seg, mask in self.children[0].batches(ctx):
+            union = mask.any(axis=0)
+            rows = np.nonzero(union)[0]
+            if not len(rows):
+                continue
+            vals = {c: seg.columns[c][rows] for c in rank_cols}
+            scores = batched_rank_scores(vals, rank_lists)
+            for qi, plan in enumerate(ctx.plans):
+                sel = mask[qi][rows]
+                if not sel.any():
+                    continue
+                if not plan.indexed and not plan.residual:
+                    ctx.stats[qi].blocks_read += \
+                        seg.n_blocks * len(rank_lists[qi])
+                qrows = rows[sel]
+                ctx.stats[qi].rows_scanned += len(qrows)
+                out[qi].append(Candidates(
+                    np.full(len(qrows), seg.seg_id, np.int64),
+                    qrows.astype(np.int64), scores[qi][sel]))
+        return out
+
+
+class VisibilityResolve(PhysicalOp):
+    """Drop candidates shadowed by a newer version of their pk anywhere in
+    the store (shared lexsort winner set — core/visibility.py)."""
+    name = "VisibilityResolve"
+
+    def apply(self, ctx: PipelineContext,
+              cands: List[Candidates]) -> List[Candidates]:
+        vis = ctx.visibility
+        if vis is None:                       # unique-pk fast path
+            return cands
+        out = []
+        for c in cands:
+            keep = vis.visible_mask(c.sids, c.rows)
+            out.append(Candidates(c.sids[keep], c.rows[keep],
+                                  c.scores[keep]))
+        return out
+
+
+class MemtableOverlay(PhysicalOp):
+    """Brute-force scan of the RAM write buffer: newest visible version
+    per pk, the query's filters applied, exact rank scores."""
+    name = "MemtableOverlay"
+
+    def apply(self, ctx: PipelineContext,
+              cands: List[Candidates]) -> List[Candidates]:
+        if not len(ctx.store.memtable):
+            return cands
+        pk, _, tomb, cols = ctx.memtable_arrays()
+        base = vis_lib.memtable_visible(pk, tomb)
+        out = []
+        for qi, (qq, c) in enumerate(zip(ctx.queries, cands)):
+            keep = base.copy()
+            for pred in qq.filters:
+                keep &= ctx.memtable_pred_mask(pred)
+            rows = np.nonzero(keep)[0]
+            if not len(rows):
+                out.append(c)
+                continue
+            if qq.ranks:
+                vals = {r.col: cols[r.col][rows] for r in qq.ranks}
+                scores = combined_scores(vals, qq.ranks)
+            else:
+                scores = np.zeros(len(rows), np.float32)
+            mt_c = Candidates(np.full(len(rows), -1, np.int64),
+                              rows.astype(np.int64),
+                              scores.astype(np.float32))
+            out.append(Candidates.concat([c, mt_c]))
+        return out
+
+
+class TopKMerge(PhysicalOp):
+    """Per-query merge of scored candidates: order by (score, pk), cut to
+    k, materialize only the returned rows."""
+    name = "TopKMerge"
+
+    def finish(self, ctx: PipelineContext,
+               cands: List[Candidates]) -> List[List[ResultRow]]:
+        return [materialize(ctx, qq, c, k=qq.k)
+                for qq, c in zip(ctx.queries, cands)]
+
+
+class NRAMerge(PhysicalOp):
+    """No-random-access aggregation over per-modality sorted streams
+    (paper Algorithm 1) — executed by core.nra over the merged ``Next()``
+    iterators; appears here as the plan's EXPLAIN node."""
+    name = "NRAMerge"
+
+
+# ---------------------------------------------------------------------------
+# materialization
+# ---------------------------------------------------------------------------
+
+def candidate_pks(ctx: PipelineContext, c: Candidates) -> np.ndarray:
+    pks = np.empty(len(c.sids), np.int64)
+    seg_by_id = {s.seg_id: s for s in ctx.store.segments}
+    for sid in np.unique(c.sids):
+        sel = c.sids == sid
+        if sid < 0:
+            mt_pk, _, _, _ = ctx.memtable_arrays()
+            pks[sel] = mt_pk[c.rows[sel]]
+        else:
+            pks[sel] = seg_by_id[sid].pk[c.rows[sel]]
+    return pks
+
+
+def materialize(ctx: PipelineContext, query, c: Candidates,
+                k: Optional[int] = None) -> List[ResultRow]:
+    """Sort candidates by (score, pk), optionally cut to k, and gather the
+    selected columns for the surviving rows only."""
+    pks = candidate_pks(ctx, c)
+    order = np.lexsort((pks, c.scores))
+    if k is not None:
+        order = order[:k]
+    select = query.select or [col.name for col in ctx.store.schema.columns]
+    seg_by_id = {s.seg_id: s for s in ctx.store.segments}
+    out: List[ResultRow] = []
+    for t in order:
+        sid, row = int(c.sids[t]), int(c.rows[t])
+        if sid < 0:
+            _, _, _, cols = ctx.memtable_arrays()
+            values = {name: cols[name][row] for name in select}
+        else:
+            seg = seg_by_id[sid]
+            values = {name: seg.columns[name][row] for name in select}
+        out.append(ResultRow(pk=int(pks[t]), score=float(c.scores[t]),
+                             values=values))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# pipeline drivers
+# ---------------------------------------------------------------------------
+
+def collect_rows(ctx: PipelineContext, source: PhysicalOp
+                 ) -> List[Candidates]:
+    """Drain a bitmap-producing operator into per-query candidates with
+    zero scores (filter-query path)."""
+    out: List[List[Candidates]] = [[] for _ in range(ctx.nq)]
+    for seg, mask in source.batches(ctx):
+        for qi in range(ctx.nq):
+            rows = np.nonzero(mask[qi])[0]
+            if len(rows):
+                out[qi].append(Candidates(
+                    np.full(len(rows), seg.seg_id, np.int64),
+                    rows.astype(np.int64),
+                    np.zeros(len(rows), np.float32)))
+    return [Candidates.concat(parts) for parts in out]
+
+
+def run_scan_group(store, catalog, queries, plans, stats,
+                   pred_cache: Optional[Dict] = None
+                   ) -> List[List[ResultRow]]:
+    """Execute a batch of scan-based queries (full_scan, index_intersect,
+    full_scan_nn, prefilter_nn) in ONE shared pass over the segments."""
+    ctx = PipelineContext(store, catalog, queries, plans, stats, pred_cache)
+    is_nn = bool(queries[0].ranks)
+    source: PhysicalOp = IndexProbe() if any(p.indexed for p in plans) \
+        else SegmentScan()
+    if any(p.residual for p in plans):
+        source = FilterBitmap([source])
+    if is_nn:
+        parts = RankScore([source]).collect(ctx)
+        cands = [Candidates.concat(p) for p in parts]
+    else:
+        cands = collect_rows(ctx, source)
+    cands = VisibilityResolve().apply(ctx, cands)
+    cands = MemtableOverlay().apply(ctx, cands)
+    if is_nn:
+        return TopKMerge().finish(ctx, cands)
+    return [materialize(ctx, qq, c) for qq, c in zip(ctx.queries, cands)]
+
+
+def finish_candidates(ctx: PipelineContext, cands: List[Candidates]
+                      ) -> List[List[ResultRow]]:
+    """Visibility + memtable overlay + top-k for externally-produced
+    candidates (post-filter probes, NRA winner sets)."""
+    cands = VisibilityResolve().apply(ctx, cands)
+    cands = MemtableOverlay().apply(ctx, cands)
+    return TopKMerge().finish(ctx, cands)
+
+
+# ---------------------------------------------------------------------------
+# EXPLAIN tree construction
+# ---------------------------------------------------------------------------
+
+def _pred_detail(preds) -> str:
+    return ",".join(type(p).__name__ + ":" + str(getattr(p, "col", "?"))
+                    for p in preds)
+
+
+def build_tree(plan, catalog=None) -> PhysicalOp:
+    """Operator tree for a plan — the EXPLAIN structure.  With a catalog,
+    nodes carry cost estimates in block-read units; without one (manual
+    plans in tests) costs render as 0."""
+    have = catalog is not None
+    n_segs = len(catalog.store.segments) if have else 0
+    total_blocks = catalog.total_blocks if have else 0.0
+    mt_rows = len(catalog.store.memtable) if have else 0
+
+    sel = 1.0
+    for p in list(plan.indexed) + list(plan.residual):
+        sel *= catalog.selectivity(p) if have else 1.0
+    passing = sel * (catalog.total_rows if have else 0)
+
+    def source() -> PhysicalOp:
+        if plan.indexed:
+            est = sum(catalog.index_probe_blocks(p) for p in plan.indexed) \
+                if have else 0.0
+            return IndexProbe(detail=_pred_detail(plan.indexed),
+                              est_cost=est)
+        return SegmentScan(detail=f"{n_segs} segments",
+                           est_cost=total_blocks * C_FILTER_BLOCK)
+
+    def with_residual(node: PhysicalOp) -> PhysicalOp:
+        if not plan.residual:
+            return node
+        est = passing * C_ROW_RESIDUAL * len(plan.residual)
+        return FilterBitmap([node], detail=_pred_detail(plan.residual),
+                            est_cost=est)
+
+    def finishers(node: PhysicalOp, with_topk: bool) -> PhysicalOp:
+        node = VisibilityResolve([node], detail="lexsort winners")
+        node = MemtableOverlay([node], detail=f"{mt_rows} rows",
+                               est_cost=mt_rows / BLOCK_ROWS)
+        if with_topk:
+            node = TopKMerge([node], detail=f"k={plan.k}",
+                             est_cost=C_MERGE * n_segs)
+        return node
+
+    kind = plan.kind
+    if kind in ("full_scan", "index_intersect"):
+        return finishers(with_residual(source()), with_topk=False)
+    if kind in ("full_scan_nn", "prefilter_nn"):
+        est = (passing / BLOCK_ROWS) * C_VECTOR_BLOCK * \
+            max(1, len(plan.ranks))
+        node = RankScore([with_residual(source())],
+                         detail=f"{len(plan.ranks)} modalities (batched)",
+                         est_cost=est)
+        return finishers(node, with_topk=True)
+    if kind == "postfilter_nn":
+        r = plan.ranks[0] if plan.ranks else None
+        probe = IndexProbe(
+            detail=f"topk probe:{getattr(r, 'col', '?')}",
+            est_cost=catalog.index_probe_blocks(
+                q.VectorRange(r.col, r.q, float("inf"))) * C_VECTOR_BLOCK
+            if (have and r is not None) else 0.0)
+        return finishers(with_residual(probe), with_topk=True)
+    if kind == "nra":
+        leaves = [IndexProbe(
+            detail=f"sorted access:{getattr(r, 'col', '?')}",
+            est_cost=0.0) for r in plan.ranks]
+        node = NRAMerge(leaves,
+                        detail=f"{len(plan.ranks)} modalities",
+                        est_cost=C_MERGE * n_segs * max(1, len(plan.ranks)))
+        return finishers(node, with_topk=True)
+    # unknown kinds (baseline strategies): render the generic scan shape
+    node = with_residual(source())
+    if plan.ranks:
+        node = RankScore([node], detail=f"{len(plan.ranks)} modalities")
+    return finishers(node, with_topk=bool(plan.ranks))

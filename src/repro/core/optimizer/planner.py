@@ -32,14 +32,26 @@ class Plan:
     k: int = 0
     cost: float = 0.0
     note: str = ""
+    root: object = None            # operator tree (operators.PhysicalOp)
+
+    def operator_tree(self, catalog=None):
+        """The plan's physical-operator tree; built lazily (without cost
+        estimates) for hand-constructed plans."""
+        if self.root is None:
+            from repro.core import operators as ops_lib
+            self.root = ops_lib.build_tree(self, catalog)
+        return self.root
 
     def describe(self) -> str:
+        """EXPLAIN: one summary line followed by the operator tree with
+        per-operator cost estimates (block-read units)."""
         ix = ",".join(type(p).__name__ + ":" + getattr(p, "col", "?")
                       for p in self.indexed)
         rs = ",".join(type(p).__name__ + ":" + getattr(p, "col", "?")
                       for p in self.residual)
-        return (f"{self.kind}(indexed=[{ix}] residual=[{rs}] "
+        head = (f"{self.kind}(indexed=[{ix}] residual=[{rs}] "
                 f"ranks={len(self.ranks)} cost={self.cost:.1f})")
+        return head + "\n" + self.operator_tree().explain(1)
 
 
 def _index_supported(catalog: Catalog, p) -> bool:
@@ -102,7 +114,31 @@ def plan_hybrid_nn(catalog: Catalog, query: q.HybridQuery) -> Plan:
     return min(candidates, key=lambda p: p.cost)
 
 
+def plan_shared_scan(catalog: Catalog, query: q.HybridQuery) -> Plan:
+    """Batch-aware physical choice: when many structurally-identical exact
+    NN queries execute together, one shared segment sweep with batched
+    distance kernels beats N independent sorted-access (NRA) walks — the
+    per-segment scan and the ``l2_distances(Q, X)`` call are paid once for
+    the whole batch.  Returns the scan-shaped plan for one member."""
+    filters = list(query.filters)
+    if filters:
+        fplan = plan_hybrid_search(
+            catalog, q.HybridQuery(filters=filters, k=query.k))
+        c = cost_lib.prefilter_nn_cost(
+            catalog, filters, list(query.ranks),
+            cost_lib.PlanCost(blocks=fplan.cost, candidates=0))
+        return Plan(kind="prefilter_nn", indexed=fplan.indexed,
+                    residual=fplan.residual, ranks=list(query.ranks),
+                    k=query.k, cost=c.total, note="batched shared scan")
+    c = cost_lib.full_scan_cost(catalog, list(query.ranks))
+    return Plan(kind="full_scan_nn", ranks=list(query.ranks), k=query.k,
+                cost=c.total, note="batched shared scan")
+
+
 def plan(catalog: Catalog, query: q.HybridQuery) -> Plan:
     if query.is_nn:
-        return plan_hybrid_nn(catalog, query)
-    return plan_hybrid_search(catalog, query)
+        chosen = plan_hybrid_nn(catalog, query)
+    else:
+        chosen = plan_hybrid_search(catalog, query)
+    chosen.operator_tree(catalog)      # attach EXPLAIN tree with estimates
+    return chosen

@@ -57,6 +57,72 @@ def match(views: List, query: q.HybridQuery) -> Rewrite:
     return rw
 
 
+def _lookup_visible(store, pks: np.ndarray):
+    """Vectorized point lookup through the shared visibility index: pk ->
+    winning (segment, row), memtable included; absent/tombstoned pks are
+    dropped.  Returns (pks, sids, rows) in input order."""
+    from repro.core import visibility as vis_lib
+
+    pks = np.asarray(pks, np.int64)
+    if len(pks):
+        sids, rows, found = vis_lib.visibility_index(store).lookup_pks(pks)
+        return pks[found], sids[found], rows[found]
+    z = np.zeros(0, np.int64)
+    return z, z, z
+
+
+def _gather(store, sids: np.ndarray, rows: np.ndarray, cols) -> dict:
+    """Columnar gather of (segment|memtable, row) pairs, input order."""
+    if not len(sids):
+        return {c: np.zeros(0) for c in cols}
+    seg_by_id = {s.seg_id: s for s in store.segments}
+    idx_parts: List[np.ndarray] = []
+    val_parts = {c: [] for c in cols}
+    for sid in np.unique(sids):
+        sel = np.nonzero(sids == sid)[0]
+        src = store.memtable.scan_arrays()[3] if sid < 0 \
+            else seg_by_id[int(sid)].columns
+        idx_parts.append(sel)
+        for c in cols:
+            val_parts[c].append(np.asarray(src[c])[rows[sel]])
+    idx = np.concatenate(idx_parts)
+    inv = np.empty(len(idx), np.int64)
+    inv[idx] = np.arange(len(idx))
+    return {c: np.concatenate(val_parts[c])[inv] for c in cols}
+
+
+def _finish(store, query: q.HybridQuery, pks, sids, rows, preds, stats,
+            k=None):
+    """Shared tail of both rewrite paths: residual predicates and rank
+    scores evaluated columnar over only the needed columns, then the
+    (score, pk) sort/cut; full rows are materialized only for the ≤ k
+    returned results.  Returns (result_rows, n_survivors)."""
+    from repro.core import executor as ex
+
+    if len(pks):
+        need = sorted({p.col for p in preds} |
+                      {r.col for r in query.ranks})
+        vals = _gather(store, sids, rows, need)
+        keep = np.ones(len(pks), bool)
+        for pred in preds:
+            keep &= ex.eval_predicate_rows(vals, pred)
+        pks, sids, rows = pks[keep], sids[keep], rows[keep]
+        vals = {c: v[keep] for c, v in vals.items()}
+    if not len(pks):
+        return [], 0
+    stats.rows_scanned += int(len(pks))
+    scores = ex.combined_scores(vals, query.ranks) if query.ranks \
+        else np.zeros(len(pks), np.float32)
+    order = np.lexsort((pks, scores))
+    if k is not None:
+        order = order[:k]
+    out_cols = [c.name for c in store.schema.columns]
+    final = _gather(store, sids[order], rows[order], out_cols)
+    return ([ex.ResultRow(pk=int(pks[t]), score=float(scores[t]),
+                          values={c: final[c][j] for c in out_cols})
+             for j, t in enumerate(order)], int(len(pks)))
+
+
 def execute_with_views(executor, query: q.HybridQuery, rw: Rewrite):
     """Execute using the bound views; residual parts go to the base
     executor. Returns (results, stats, used_view: bool)."""
@@ -75,65 +141,25 @@ def execute_with_views(executor, query: q.HybridQuery, rw: Rewrite):
         rw.vector_view.hits += 1
         cand = rw.vector_view.topk_for(rw.vector_rank.q,
                                        max(query.k * 4, query.k))
-        rows = []
-        for dist, pk in cand:
-            row = store.get(pk)
-            if row is None:
-                continue
-            ok = True
-            for pred in query.filters:
-                vals = {c: np.asarray([row[c]]) for c in row
-                        if not c.startswith("_")}
-                if not ex.eval_predicate_rows(vals, pred)[0]:
-                    ok = False
-                    break
-            if not ok:
-                continue
-            # full weighted score (other rank terms exact from the row)
-            score = 0.0
-            for r in query.ranks:
-                vals = {r.col: np.asarray([row[r.col]])}
-                score += r.weight * float(
-                    ex.rank_distances(vals, r)[0])
-            rows.append(ex.ResultRow(pk=pk, score=score, values={
-                c: v for c, v in row.items() if not c.startswith("_")}))
-            stats.rows_scanned += 1
-        rows.sort(key=lambda r: (r.score, r.pk))
-        if len(rows) >= query.k:
-            return rows[:query.k], stats, True
+        pks, sids, seg_rows = _lookup_visible(
+            store, np.asarray([pk for _, pk in cand], np.int64))
+        res, n = _finish(store, query, pks, sids, seg_rows,
+                         query.filters, stats, k=query.k)
+        if n >= query.k:
+            return res, stats, True
         res, st = executor.execute(query)   # underfilled: fall back
         return res, st, False
 
     # Spatial-range rewrite: pks from the view replace the GeoWithin scan.
     if rw.spatial_view is not None:
         rw.spatial_view.hits += 1
-        pks = rw.spatial_view.pks_in(rw.spatial_pred.rect)
-        rows = []
+        pks, sids, seg_rows = _lookup_visible(
+            store, np.asarray(list(rw.spatial_view.pks_in(
+                rw.spatial_pred.rect)), np.int64))
         residual = [p for p in query.filters if p is not rw.spatial_pred]
-        for pk in pks:
-            row = store.get(pk)
-            if row is None:
-                continue
-            ok = True
-            for pred in residual:
-                vals = {c: np.asarray([row[c]]) for c in row
-                        if not c.startswith("_")}
-                if not ex.eval_predicate_rows(vals, pred)[0]:
-                    ok = False
-                    break
-            if not ok:
-                continue
-            score = 0.0
-            for r in query.ranks:
-                vals = {r.col: np.asarray([row[r.col]])}
-                score += r.weight * float(ex.rank_distances(vals, r)[0])
-            rows.append(ex.ResultRow(pk=pk, score=score, values={
-                c: v for c, v in row.items() if not c.startswith("_")}))
-            stats.rows_scanned += 1
-        rows.sort(key=lambda r: (r.score, r.pk))
-        if query.is_nn:
-            rows = rows[:query.k]
-        return rows, stats, True
+        res, _ = _finish(store, query, pks, sids, seg_rows, residual,
+                         stats, k=query.k if query.is_nn else None)
+        return res, stats, True
 
     res, st = executor.execute(query)
     return res, st, False

@@ -72,6 +72,7 @@ class VectorNNView:
         # sorted candidate list: (dist_to_center, pk, vector)
         self.cand: List[Tuple[float, int, np.ndarray]] = []
         self.hits = 0
+        self._arrays_cache = None      # stacked (vecs, pks), read path
 
     # coverage ---------------------------------------------------------
     def matches_query(self, qvec: np.ndarray) -> bool:
@@ -95,19 +96,37 @@ class VectorNNView:
         self.cand.insert(i, (d, int(pk), np.asarray(vec, np.float32)))
         if len(self.cand) > self.xk:
             self.cand.pop()
+        self._arrays_cache = None
 
     def remove(self, pk: int) -> None:
         self.cand = [c for c in self.cand if c[1] != pk]
+        self._arrays_cache = None
 
     # read ----------------------------------------------------------------
+    def _arrays(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Candidates as stacked arrays, cached between maintenance ops."""
+        if self._arrays_cache is None:
+            if self.cand:
+                vecs = np.stack([c[2] for c in self.cand])
+                pks = np.asarray([c[1] for c in self.cand], np.int64)
+            else:
+                vecs = np.zeros((0, len(self.center)), np.float32)
+                pks = np.zeros(0, np.int64)
+            self._arrays_cache = (vecs, pks)
+        return self._arrays_cache
+
     def topk_for(self, qvec: np.ndarray, k: int) -> List[Tuple[float, int]]:
         """Re-rank materialized candidates for the actual query vector."""
-        if not self.cand:
+        vecs, pks = self._arrays()
+        if not len(pks):
             return []
-        vecs = np.stack([c[2] for c in self.cand])
         d = np.sqrt(((vecs - qvec[None, :]) ** 2).sum(axis=1))
-        order = np.argsort(d)[:k]
-        return [(float(d[i]), self.cand[i][1]) for i in order]
+        if k < len(d):
+            idx = np.argpartition(d, k)[:k]
+            idx = idx[np.argsort(d[idx])]
+        else:
+            idx = np.argsort(d)
+        return [(float(d[i]), int(pks[i])) for i in idx]
 
     @property
     def size_bytes(self) -> int:

@@ -12,6 +12,17 @@ import jax
 import numpy as np
 
 
+def compat_make_mesh(shape, axes, *, devices=None):
+    """``jax.make_mesh`` across JAX versions: ``axis_types`` (and
+    ``jax.sharding.AxisType``) only exist in newer releases; Auto is the
+    default everywhere, so omit the argument when unsupported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes, devices=devices,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
@@ -21,16 +32,12 @@ def make_production_mesh(*, multi_pod: bool = False):
         raise RuntimeError(
             f"need {n} devices for {shape} mesh, have {len(devices)}; "
             "the dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512")
-    return jax.make_mesh(
-        shape, axes, devices=devices,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes, devices=devices)
 
 
 def make_host_mesh():
     """Degenerate 1x1 mesh for CPU tests/examples."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat_make_mesh((1, 1), ("data", "model"))
 
 
 # TPU v5e hardware constants (per chip) for the roofline model

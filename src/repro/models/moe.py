@@ -1,11 +1,24 @@
-"""Capacity-based grouped MoE (Switch/MaxText-style dense dispatch).
+"""Dropless grouped MoE (MaxText-style dense dispatch, no token dropping).
 
 Tokens are reshaped into groups of ``group_size``; per group a
 (S, E, C) dispatch/combine pair routes top-k tokens into per-expert
-capacity slots. The dispatch einsums keep the expert dim (logical axis
+buffer slots. The dispatch einsums keep the expert dim (logical axis
 "experts" -> mesh "model") and the group dim (logical "batch" -> mesh
 "data") sharded, which is EP x DP under GSPMD. Shared experts are a plain
 SwiGLU applied to every token (DeepSeek fine-grained design).
+
+Routing is dropless (DeepSeek-V3 style): every top-k assignment gets a
+slot.  Capacity-based dropping would silently make decode diverge from
+prefill — which tokens survive depends on the group they share, and a
+decode step's group is just that step's tokens.
+
+Dropless dense dispatch sizes the slot buffers at group_size (the worst
+case), which inflates the (G, S, E, C) tensors by ~E/top_k over a
+capacity-factor buffer at full production configs.  At that scale the
+dense (S, E, C) formulation itself is the wrong tool — a sorted /
+grouped-GEMM dispatch (MegaBlocks-style) is the production path; the
+dense form here favors correctness and GSPMD-sharding clarity at the
+reduced scales this repo executes.
 """
 from __future__ import annotations
 
@@ -22,8 +35,11 @@ from repro.sharding.partition import constrain
 
 def _capacity(group_size: int, top_k: int, num_experts: int,
               capacity_factor: float) -> int:
-    c = math.ceil(group_size * top_k / num_experts * capacity_factor)
-    return max(8, ((c + 7) // 8) * 8)
+    # dropless bound: top-k indices are distinct, so a group can send at
+    # most one assignment per token to any one expert — group_size slots
+    # always suffice, and nothing is ever cut by the ``pos < c`` gate
+    del top_k, num_experts, capacity_factor
+    return max(8, ((group_size + 7) // 8) * 8)
 
 
 def moe_init(key, d_model: int, moe) -> Tuple[Params, Axes]:

@@ -35,6 +35,27 @@ def embed_step(params: Pytree, cfg: ModelConfig,
     return model.encode(params, cfg, tokens)
 
 
+def serve_hybrid_queries(params: Pytree, cfg: ModelConfig,
+                         tokens: jnp.ndarray, executor,
+                         make_query) -> list:
+    """Serve a batch of hybrid queries end to end: embed all query token
+    sequences in one ``embed_step`` call, build a HybridQuery per request
+    via ``make_query(vector)``, and answer the whole batch with one
+    shared-scan ``Executor.execute_many`` pass (per-segment scans and
+    distance kernels are amortized across the request batch).
+
+    Returns ``[(results, stats), ...]`` aligned with the token batch.
+    """
+    import numpy as np
+    qvecs = np.asarray(_embed_jitted(params, cfg, tokens), np.float32)
+    queries = [make_query(qv) for qv in qvecs]
+    return executor.execute_many(queries)
+
+
+# jitted embed for the serving path (ModelConfig is hashable -> static)
+_embed_jitted = jax.jit(embed_step, static_argnums=(1,))
+
+
 def greedy_generate(params: Pytree, cfg: ModelConfig, prompt: jnp.ndarray,
                     max_new: int, max_seq: int,
                     memory: Optional[jnp.ndarray] = None) -> jnp.ndarray:

@@ -1,6 +1,8 @@
 """Property-based tests (hypothesis) on system invariants."""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

@@ -8,17 +8,16 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.launch.mesh import compat_make_mesh
 from repro.sharding import partition
 
 
 def _mesh22():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat_make_mesh((1, 1), ("data", "model"))
 
 
 def test_safe_spec_drops_indivisible():
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat_make_mesh((1,), ("model",))
     # 56 heads on 16-way model: must drop (simulated via mesh dict math)
     mesh16 = None
     # use a fake mesh via production rules math instead:
@@ -77,7 +76,8 @@ import numpy as np, jax, jax.numpy as jnp
 import sys
 sys.path.insert(0, "src")
 from repro.core import distributed as dist
-mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import compat_make_mesh
+mesh = compat_make_mesh((4,), ("data",))
 rng = np.random.default_rng(0)
 n, d, k = 1024, 16, 8
 vecs = rng.normal(size=(n, d)).astype(np.float32)

@@ -157,12 +157,18 @@ def test_engine_modes_speed_ordering():
                             1.0)], k=10), 1.0) for _ in range(5)]
     times = {}
     for mode in ("none", "views"):
-        store = _store(np.random.default_rng(7))
-        eng = ContinuousEngine(store, mode=mode, view_budget_bytes=2**23)
-        for d in decls:
-            eng.register(d)
-        t0 = time.perf_counter()
-        for t in range(4):
-            eng.advance(float(t))
-        times[mode] = time.perf_counter() - t0
+        # best-of-3: scheduler noise on a loaded machine dwarfs the
+        # single-digit-ms advance loop; min is the robust statistic
+        best = float("inf")
+        for _ in range(3):
+            store = _store(np.random.default_rng(7))
+            eng = ContinuousEngine(store, mode=mode,
+                                   view_budget_bytes=2**23)
+            for d in decls:
+                eng.register(d)
+            t0 = time.perf_counter()
+            for t in range(4):
+                eng.advance(float(t))
+            best = min(best, time.perf_counter() - t0)
+        times[mode] = best
     assert times["views"] < times["none"]

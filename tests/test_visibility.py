@@ -1,0 +1,187 @@
+"""Shared MVCC visibility (core/visibility.py): one scenario covering
+updates, deletes, memtable shadowing, and tombstones must read back
+identically through every read path — the filter pipeline, the batched
+NN scan, and NRA — since all three resolve against the same lexsort
+winner set.  Plus: ``execute_many`` equivalence (batch of N == N single
+executions) and EXPLAIN coverage for every plan kind."""
+import numpy as np
+import pytest
+
+from conftest import make_batch, tweet_schema
+from repro.core import query as q
+from repro.core import visibility as vis_lib
+from repro.core.executor import Executor
+from repro.core.lsm import LSMConfig, LSMStore
+from repro.core.optimizer import planner as pl
+
+
+@pytest.fixture(scope="module")
+def mvcc_store():
+    """A store exercising every visibility case:
+
+      pks   0-299  base rows (flushed, segment 1)
+      pks   0-49   updated, flushed       -> newer segment shadows seg 1
+      pks  50-79   deleted, flushed       -> segment tombstones
+      pks 100-119  updated, NOT flushed   -> memtable shadows segments
+      pks 120-129  deleted, NOT flushed   -> memtable tombstones
+      pks 300-319  inserted, NOT flushed  -> memtable-only rows
+    """
+    rng = np.random.default_rng(42)
+    store = LSMStore(tweet_schema(), LSMConfig(flush_rows=10_000))
+    ref = {}
+
+    def apply(pks, batch):
+        for j, pk in enumerate(pks):
+            ref[pk] = {c: batch[c][j] for c in batch}
+
+    pks, batch = make_batch(rng, 300, pk_start=0)
+    store.put(pks, batch)
+    apply(pks, batch)
+    store.flush()
+
+    pks, batch = make_batch(rng, 50, pk_start=0)          # update 0-49
+    store.put(pks, batch)
+    apply(pks, batch)
+    store.delete(list(range(50, 80)))                     # delete 50-79
+    for pk in range(50, 80):
+        ref.pop(pk)
+    store.flush()
+
+    pks, batch = make_batch(rng, 20, pk_start=100)        # shadow 100-119
+    store.put(pks, batch)
+    apply(pks, batch)
+    store.delete(list(range(120, 130)))                   # tombstone
+    for pk in range(120, 130):
+        ref.pop(pk)
+    pks, batch = make_batch(rng, 20, pk_start=300)        # memtable-only
+    store.put(pks, batch)
+    apply(pks, batch)
+
+    assert len(store.segments) >= 2 and len(store.memtable) > 0
+    cols = {c: np.stack([ref[pk][c] for pk in sorted(ref)])
+            for c in ("embedding", "coordinate", "time")}
+    return store, np.asarray(sorted(ref), np.int64), cols
+
+
+def _visible_filter(pks, cols, lo, hi):
+    return pks[(cols["time"] >= lo) & (cols["time"] <= hi)]
+
+
+@pytest.mark.parametrize("path", ["filter", "nn_scan", "nra"])
+def test_all_read_paths_agree_on_visibility(mvcc_store, path):
+    store, pks, cols = mvcc_store
+    ex = Executor(store)
+    lo, hi = 10.0, 90.0
+    filters = [q.Range("time", lo, hi)]
+    mask = (cols["time"] >= lo) & (cols["time"] <= hi)
+
+    if path == "filter":
+        plan = pl.Plan(kind="full_scan", residual=filters)
+        res, _ = ex.execute(q.HybridQuery(filters=filters), plan=plan)
+        assert set(r.pk for r in res) == set(pks[mask].tolist())
+        return
+
+    qv = np.random.default_rng(1).normal(size=16).astype(np.float32)
+    ranks = [q.VectorRank("embedding", qv, 1.0)]
+    k = 15
+    kind = "full_scan_nn" if path == "nn_scan" else "nra"
+    plan = pl.Plan(kind=kind, residual=filters, ranks=ranks, k=k)
+    res, _ = ex.execute(
+        q.HybridQuery(filters=filters, ranks=ranks, k=k), plan=plan)
+    score = np.sqrt(((cols["embedding"] - qv) ** 2).sum(1))
+    score[~mask] = np.inf
+    want = set(pks[np.argsort(score, kind="stable")[:k]].tolist())
+    assert set(r.pk for r in res) == want
+
+
+def test_updated_values_are_served_not_stale(mvcc_store):
+    """A shadowed row must never leak: the returned values for updated
+    pks are the newest version's, on every path."""
+    store, pks, cols = mvcc_store
+    ex = Executor(store)
+    by_pk = dict(zip(pks.tolist(), cols["time"]))
+    for plan in (pl.Plan(kind="full_scan",
+                         residual=[q.Range("time", 0, 100)]),):
+        res, _ = ex.execute(
+            q.HybridQuery(filters=[q.Range("time", 0, 100)]), plan=plan)
+        assert len(res) == len(pks)
+        for r in res:
+            assert float(r.values["time"]) == pytest.approx(
+                float(by_pk[r.pk]))
+
+
+def test_memtable_visible_newest_wins():
+    pk = np.asarray([1, 2, 1, 3, 2])
+    tomb = np.asarray([False, False, False, True, False])
+    keep = vis_lib.memtable_visible(pk, tomb)
+    # newest version per pk; pk 3's newest is a tombstone
+    assert keep.tolist() == [False, False, True, False, True]
+
+
+def test_resolve_drops_shadowed_rows(mvcc_store):
+    store, _, _ = mvcc_store
+    seg1 = store.segments[0]
+    out = store.resolve_visible(
+        {seg1.seg_id: np.arange(seg1.n_rows, dtype=np.int64)})
+    vis_pks = set(seg1.pk[out.get(seg1.seg_id, [])].tolist())
+    # updated (0-49), deleted (50-79), memtable-shadowed (100-129) rows
+    # of the base segment must all be gone
+    assert not vis_pks & set(range(0, 80))
+    assert not vis_pks & set(range(100, 130))
+    assert set(range(80, 100)) <= vis_pks
+
+
+def test_execute_many_matches_single_executions(mvcc_store):
+    store, _, _ = mvcc_store
+    ex = Executor(store)
+    rng = np.random.default_rng(5)
+    queries = [q.HybridQuery(filters=[q.Range("time", 0, 60)])]
+    for i in range(7):
+        queries.append(q.HybridQuery(
+            filters=[q.Range("time", 5.0 * i, 5.0 * i + 60)],
+            ranks=[q.VectorRank(
+                "embedding", rng.normal(size=16).astype(np.float32), 1.0)],
+            k=10))
+    single = [ex.execute(qq)[0] for qq in queries]
+    batched = [r for r, _ in ex.execute_many(queries)]
+    for a, b in zip(single, batched):
+        assert [r.pk for r in a] == [r.pk for r in b]
+        assert [r.score for r in a] == pytest.approx(
+            [r.score for r in b], rel=1e-4)
+
+
+EXPLAIN_KINDS = {
+    "full_scan": ["SegmentScan", "VisibilityResolve", "MemtableOverlay"],
+    "index_intersect": ["IndexProbe", "VisibilityResolve"],
+    "prefilter_nn": ["RankScore", "TopKMerge", "VisibilityResolve"],
+    "postfilter_nn": ["IndexProbe", "TopKMerge"],
+    "nra": ["NRAMerge", "TopKMerge"],
+}
+
+
+@pytest.mark.parametrize("kind", sorted(EXPLAIN_KINDS))
+def test_explain_tree_for_every_plan_kind(kind):
+    qv = np.zeros(16, np.float32)
+    plan = pl.Plan(kind=kind, k=5,
+                   indexed=[q.Range("time", 0, 1)]
+                   if kind == "index_intersect" else [],
+                   residual=[q.Range("time", 0, 1)]
+                   if kind != "index_intersect" else [],
+                   ranks=[] if kind in ("full_scan", "index_intersect")
+                   else [q.VectorRank("embedding", qv, 1.0)])
+    text = plan.describe()
+    assert text.startswith(kind + "(")
+    for node in EXPLAIN_KINDS[kind]:
+        assert node in text, f"{node} missing from EXPLAIN:\n{text}"
+    assert "cost=" in text
+
+
+def test_explain_carries_cost_estimates(mvcc_store):
+    store, _, _ = mvcc_store
+    ex = Executor(store)
+    query = q.HybridQuery(filters=[q.Range("time", 0, 50)])
+    plan = pl.plan(ex.catalog, query)
+    text = plan.describe()
+    # planner-built trees carry non-zero per-operator block estimates
+    assert any(float(tok.split("=")[1].rstrip(")")) > 0
+               for tok in text.split() if tok.startswith("cost="))
