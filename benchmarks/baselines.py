@@ -70,12 +70,23 @@ class GlobalIndexWriter:
         return np.sqrt(np.maximum(d, 0)), self.pks[cand[idx]]
 
 
+def _residuals(query) -> list:
+    """The query's filter as a residual list: flat literals when the
+    expression is a pure conjunction, else the whole expression tree as
+    one residual entry (these strategies have no DNF machinery — a
+    boolean shape beyond AND degenerates to scan-and-filter)."""
+    try:
+        return query.filters
+    except ValueError:
+        return [query.where]
+
+
 class SegmentFullLoadExecutor(Executor):
     """Vector queries read every segment's vectors in full (per-segment
     index must be memory-resident before use — no block-level reads)."""
 
     def _exec_nn(self, query, plan, stats):
-        forced = pl.Plan(kind="full_scan_nn", residual=query.filters,
+        forced = pl.Plan(kind="full_scan_nn", residual=_residuals(query),
                          ranks=query.ranks, k=query.k)
         # charge the full per-segment load the design implies
         for seg in self.store.segments:
@@ -90,29 +101,33 @@ class SingleIndexExecutor(Executor):
 
     def execute(self, query, plan=None):
         from repro.core.executor import ExecStats
+        try:
+            literals = query.filters       # pure conjunction?
+        except ValueError:
+            literals = None                # disjunctive: scan-and-filter
         if not query.is_nn:
             best = None
-            for p in query.filters:
+            for p in (literals or []):
                 col = getattr(p, "col", None)
                 if col and self.catalog.has_index(col):
                     cand = pl.Plan(
                         kind="index_intersect", indexed=[p],
-                        residual=[r for r in query.filters if r is not p])
+                        residual=[r for r in literals if r is not p])
                     from repro.core.optimizer import cost as cost_lib
                     cand.cost = cost_lib.intersect_cost(
                         self.catalog, [p], cand.residual).total
                     if best is None or cand.cost < best.cost:
                         best = cand
             if best is None:
-                best = pl.Plan(kind="full_scan", residual=query.filters)
+                best = pl.Plan(kind="full_scan", residual=_residuals(query))
             stats = ExecStats(plan="single:" + best.describe())
             return self._exec_filter(query, best, stats), stats
         vec = [r for r in query.ranks if isinstance(r, q.VectorRank)]
-        if len(query.ranks) == 1 and vec:
-            plan = pl.Plan(kind="postfilter_nn", residual=query.filters,
+        if len(query.ranks) == 1 and vec and literals is not None:
+            plan = pl.Plan(kind="postfilter_nn", residual=literals,
                            ranks=query.ranks, k=query.k)
         else:
-            plan = pl.Plan(kind="full_scan_nn", residual=query.filters,
+            plan = pl.Plan(kind="full_scan_nn", residual=_residuals(query),
                            ranks=query.ranks, k=query.k)
         stats = ExecStats(plan="single:" + plan.describe())
         return self._exec_nn(query, plan, stats), stats
@@ -124,11 +139,11 @@ class FullScanExecutor(Executor):
     def execute(self, query, plan=None):
         from repro.core.executor import ExecStats
         if query.is_nn:
-            plan = pl.Plan(kind="full_scan_nn", residual=query.filters,
+            plan = pl.Plan(kind="full_scan_nn", residual=_residuals(query),
                            ranks=query.ranks, k=query.k)
             stats = ExecStats(plan="fullscan")
             return self._exec_nn(query, plan, stats), stats
-        plan = pl.Plan(kind="full_scan", residual=query.filters)
+        plan = pl.Plan(kind="full_scan", residual=_residuals(query))
         stats = ExecStats(plan="fullscan")
         return self._exec_filter(query, plan, stats), stats
 

@@ -27,7 +27,7 @@ def _make_queries(data: tracy.TracyData, n: int) -> List[q.SyncQuery]:
                 k=10), interval_s=1.0))
         else:
             out.append(q.SyncQuery(q.HybridQuery(
-                filters=[q.GeoWithin("coordinate", data.rect(12))]),
+                where=q.GeoWithin("coordinate", data.rect(12))),
                 interval_s=1.0))
     return out
 

@@ -30,7 +30,7 @@ def _make_queries(data: tracy.TracyData, n: int) -> List[q.HybridQuery]:
     for _ in range(n):
         lo = float(data.rng.uniform(0, 800))
         out.append(q.HybridQuery(
-            filters=[q.Range("time", lo, lo + 200)],
+            where=q.Range("time", lo, lo + 200),
             ranks=[q.VectorRank("embedding", data.query_vec(), 1.0)],
             k=10))
     return out

@@ -104,31 +104,31 @@ def make_templates(data: TracyData):
     d = data
 
     def t1():   # vector range + text (Type 1 example in §2.2)
-        return q.HybridQuery(filters=[
+        return q.HybridQuery(where=q.And(
             q.VectorRange("embedding", d.query_vec(), 8.0),
-            q.TextContains("content", TOPICS[d.rng.integers(0, 10)])])
+            q.TextContains("content", TOPICS[d.rng.integers(0, 10)])))
 
     def t2():   # scalar range + spatial region
         lo = float(d.rng.uniform(0, 900))
-        return q.HybridQuery(filters=[
+        return q.HybridQuery(where=q.And(
             q.Range("time", lo, lo + 50),
-            q.GeoWithin("coordinate", d.rect(15))])
+            q.GeoWithin("coordinate", d.rect(15))))
 
     def t3():   # triple-modality filter
         lo = float(d.rng.uniform(0, 900))
-        return q.HybridQuery(filters=[
+        return q.HybridQuery(where=q.And(
             q.Range("time", lo, lo + 100),
             q.TextContains("content", TOPICS[d.rng.integers(0, 10)]),
-            q.GeoWithin("coordinate", d.rect(25))])
+            q.GeoWithin("coordinate", d.rect(25))))
 
     def t4():   # highly selective scalar
         lo = float(d.rng.uniform(0, 990))
-        return q.HybridQuery(filters=[q.Range("time", lo, lo + 2)])
+        return q.HybridQuery(where=q.Range("time", lo, lo + 2))
 
     def t5():   # popularity + region
-        return q.HybridQuery(filters=[
+        return q.HybridQuery(where=q.And(
             q.Range("likes", 5, 1e9),
-            q.GeoWithin("coordinate", d.rect(20))])
+            q.GeoWithin("coordinate", d.rect(20))))
 
     def t6():   # pure vector NN
         return q.HybridQuery(ranks=[
@@ -143,7 +143,7 @@ def make_templates(data: TracyData):
     def t8():   # vector NN with time filter
         lo = float(d.rng.uniform(0, 800))
         return q.HybridQuery(
-            filters=[q.Range("time", lo, lo + 200)],
+            where=q.Range("time", lo, lo + 200),
             ranks=[q.VectorRank("embedding", d.query_vec(), 1.0)], k=10)
 
     def t9():   # vector + text relevance joint ranking
@@ -155,8 +155,8 @@ def make_templates(data: TracyData):
     def t10():  # spatial NN with text filter
         x, y = d.rng.uniform(10, 90, 2)
         return q.HybridQuery(
-            filters=[q.TextContains("content",
-                                    TOPICS[d.rng.integers(0, 10)])],
+            where=q.TextContains("content",
+                                 TOPICS[d.rng.integers(0, 10)]),
             ranks=[q.SpatialRank("coordinate", (float(x), float(y)), 1.0)],
             k=10)
 
@@ -164,12 +164,27 @@ def make_templates(data: TracyData):
         x, y = d.rng.uniform(10, 90, 2)
         lo = float(d.rng.uniform(0, 800))
         return q.HybridQuery(
-            filters=[q.Range("time", lo, lo + 400)],
+            where=q.Range("time", lo, lo + 400),
             ranks=[q.VectorRank("embedding", d.query_vec(), 0.6),
                    q.SpatialRank("coordinate", (float(x), float(y)), 0.2),
                    q.TextRank("content",
                               (TOPICS[d.rng.integers(0, 10)],), 0.3)], k=10)
 
-    search = [t1, t2, t3, t4, t5]
-    nn = [t6, t7, t8, t9, t10, t11]
+    def t12():  # disjunctive hybrid search: hot region OR trending topic
+        lo = float(d.rng.uniform(0, 900))
+        return q.HybridQuery(where=q.Or(
+            q.And(q.Range("time", lo, lo + 100),
+                  q.GeoWithin("coordinate", d.rect(20))),
+            q.TextContains("content", TOPICS[d.rng.integers(0, 10)])))
+
+    def t13():  # disjunctive NN: (recent AND region) OR keyword, ranked
+        lo = float(d.rng.uniform(0, 800))
+        return q.HybridQuery(
+            where=q.Or(q.Range("time", lo, lo + 200),
+                       q.TextContains("content",
+                                      TOPICS[d.rng.integers(0, 10)])),
+            ranks=[q.VectorRank("embedding", d.query_vec(), 1.0)], k=10)
+
+    search = [t1, t2, t3, t4, t5, t12]
+    nn = [t6, t7, t8, t9, t10, t11, t13]
     return search, nn

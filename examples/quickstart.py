@@ -4,11 +4,9 @@
 """
 import numpy as np
 
-from repro.core import query as q
-from repro.core.continuous import ContinuousEngine
-from repro.core.executor import Executor
-from repro.core.lsm import LSMConfig, LSMStore
-from repro.core.types import Column, ColumnType, IndexKind, Schema
+from repro.core.api import (Column, ColumnType, Database, GeoWithin,
+                            IndexKind, LSMConfig, Not, Or, Range, Schema,
+                            SpatialRank, TextContains, VectorRank)
 
 # 1. declare a multimodal schema (paper §2.1): vector + spatial + text +
 #    scalar columns, each with its secondary index
@@ -18,57 +16,68 @@ schema = Schema([
     Column("content", ColumnType.TEXT, index=IndexKind.INVERTED),
     Column("time", ColumnType.SCALAR, index=IndexKind.BTREE),
 ])
-store = LSMStore(schema, LSMConfig(flush_rows=1024))
+db = Database(schema, LSMConfig(flush_rows=1024),
+              view_budget_bytes=4 * 2**20)
+t = db.table()
 
 # 2. high-throughput ingest — indexes are built at flush time, never on
 #    the write path
 rng = np.random.default_rng(0)
 for start in range(0, 4096, 512):
     n = 512
-    store.put(list(range(start, start + n)), {
+    t.put(list(range(start, start + n)), {
         "embedding": rng.normal(size=(n, 32)).astype(np.float32),
         "coordinate": rng.uniform(0, 10, (n, 2)).astype(np.float32),
         "content": np.asarray([f"tweet about topic{i % 7}"
                                for i in range(start, start + n)], object),
         "time": rng.uniform(0, 100, n),
     })
-store.flush()
-print(f"ingested {store.n_rows} rows, {len(store.segments)} segments, "
-      f"{store.metrics['compactions']} compactions")
+t.flush()
+print(f"ingested {t.n_rows} rows, {len(t.store.segments)} segments, "
+      f"{t.store.metrics['compactions']} compactions")
 
 # 3. hybrid search (Type 1): filters across three modalities; the
 #    cost-based optimizer picks the index combination
-ex = Executor(store)
-res, stats = ex.execute(q.HybridQuery(filters=[
-    q.Range("time", 20, 40),
-    q.TextContains("content", "topic3"),
-    q.GeoWithin("coordinate", (2, 2, 8, 8)),
-]))
+res, stats = (t.query()
+              .where(Range("time", 20, 40),
+                     TextContains("content", "topic3"),
+                     GeoWithin("coordinate", (2, 2, 8, 8)))
+              .execute())
 print(f"hybrid search: {len(res)} rows, plan={stats.plan}")
+
+# 3b. boolean expressions: OR/NOT normalize to DNF; per-conjunct index
+#     plans are OR-merged by the BitmapUnion operator
+disj = (t.query()
+        .where(Or(Range("time", 0, 5),
+                  Not(TextContains("content", "topic3")))))
+print(f"disjunctive search: {len(disj.all())} rows")
+print("EXPLAIN:\n" + disj.explain())
 
 # 4. hybrid NN (Type 2): joint vector+spatial ranking via NRA (Alg. 1)
 qv = rng.normal(size=32).astype(np.float32)
-res, stats = ex.execute(q.HybridQuery(
-    ranks=[q.VectorRank("embedding", qv, 0.5),
-           q.SpatialRank("coordinate", (5.0, 5.0), 1.5)], k=5))
+res, stats = (t.query()
+              .rank(VectorRank("embedding", qv, 0.5),
+                    SpatialRank("coordinate", (5.0, 5.0), 1.5))
+              .limit(5)
+              .execute())
 print(f"hybrid NN top-5: {[(r.pk, round(r.score, 3)) for r in res]}")
 print(f"  plan={stats.plan}")
 
 # 5. continuous queries (Types 3-4) over incremental materialized views
-eng = ContinuousEngine(store, mode="views", view_budget_bytes=4 * 2**20)
-rid = eng.register(q.SyncQuery(q.HybridQuery(
-    ranks=[q.VectorRank("embedding", qv, 1.0)], k=5), interval_s=60.0))
-out = eng.advance(now=0.0)
-print(f"continuous SYNC first tick: {[r.pk for r in out[rid]]} "
-      f"(view_hits={eng.metrics['view_hits']})")
+sub = (t.query()
+       .rank(VectorRank("embedding", qv, 1.0))
+       .limit(5)
+       .subscribe(interval_s=60.0))
+out = sub.poll(now=0.0)
+print(f"continuous SYNC first tick: {[r.pk for r in out]} "
+      f"(view_hits={t.engine.metrics['view_hits']})")
 
 # writes are visible at the next tick — freshness
-store.put([99999], {
+t.put([99999], {
     "embedding": qv[None, :], "coordinate": np.asarray([[5.0, 5.0]],
                                                        np.float32),
     "content": np.asarray(["exact match"], object),
     "time": np.asarray([50.0])})
-out = eng.advance(now=60.0)
-assert out[rid][0].pk == 99999
-print(f"after ingest, new top-1: {out[rid][0].pk} "
-      f"(score={out[rid][0].score:.4f})")
+out = sub.poll(now=60.0)
+assert out[0].pk == 99999
+print(f"after ingest, new top-1: {out[0].pk} (score={out[0].score:.4f})")

@@ -3,9 +3,9 @@
 Serves the arcade-embedder model with batched requests: incoming documents
 are embedded by `serve_step.embed_step` and ingested into the ARCADE
 store; incoming queries are embedded the same way, then answered with a
-hybrid NN query. This is the LLM(@query_text) -> L2_Distance(...) pipeline
-of the paper's §2.2 examples, with the model and the data system in one
-process.
+hybrid NN query through the ``Database`` facade. This is the
+LLM(@query_text) -> L2_Distance(...) pipeline of the paper's §2.2
+examples, with the model and the data system in one process.
 
   PYTHONPATH=src python examples/serve_hybrid.py [--requests 64]
 """
@@ -18,9 +18,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import query as q
-from repro.core.executor import Executor
-from repro.core.lsm import LSMConfig, LSMStore
-from repro.core.types import Column, ColumnType, IndexKind, Schema
+from repro.core.api import (Column, ColumnType, Database, IndexKind,
+                            LSMConfig, Range, Schema, VectorRank)
 from repro.models import model
 from repro.train import data as data_lib
 from repro.train import serve_step
@@ -54,14 +53,15 @@ def main():
                          for t in texts])
         return np.asarray(embed(params, jnp.asarray(toks)), np.float32)
 
-    # --- the ARCADE store ------------------------------------------------
+    # --- the ARCADE database ---------------------------------------------
     schema = Schema([
         Column("embedding", ColumnType.VECTOR, dim=128, index=IndexKind.IVF),
         Column("coordinate", ColumnType.SPATIAL, index=IndexKind.ZORDER),
         Column("content", ColumnType.TEXT, index=IndexKind.INVERTED),
         Column("time", ColumnType.SCALAR, index=IndexKind.BTREE),
     ])
-    store = LSMStore(schema, LSMConfig(flush_rows=256))
+    db = Database(schema, LSMConfig(flush_rows=256))
+    table = db.table()
     rng = np.random.default_rng(0)
 
     # --- serve batched ingest requests ----------------------------------
@@ -72,7 +72,7 @@ def main():
         texts = [DOCS[(r + i) % len(DOCS)] + f" v{r}_{i}"
                  for i in range(args.batch)]
         emb = embed_texts(texts)
-        store.put(list(range(pk, pk + args.batch)), {
+        table.put(list(range(pk, pk + args.batch)), {
             "embedding": emb,
             "coordinate": rng.uniform(0, 10,
                                       (args.batch, 2)).astype(np.float32),
@@ -81,23 +81,22 @@ def main():
         })
         pk += args.batch
         n_ingest += args.batch
-    store.flush()
+    table.flush()
     ingest_dt = time.perf_counter() - t0
     print(f"ingested {n_ingest} docs in {ingest_dt:.2f}s "
           f"({n_ingest / ingest_dt:.0f} docs/s incl. embedding)")
 
     # --- serve hybrid queries (batched: one embed call, one shared scan)
-    ex = Executor(store)
     queries = ["sports championship", "food dinner recipe",
                "tech stock earnings"]
     t0 = time.perf_counter()
     toks = np.stack([data_lib.text_to_tokens(t, cfg.vocab_size, seq)
                      for t in queries])
     answered = serve_step.serve_hybrid_queries(
-        params, cfg, jnp.asarray(toks), ex,
+        params, cfg, jnp.asarray(toks), table.executor,
         lambda qv: q.HybridQuery(
-            filters=[q.Range("time", 0, args.requests)],
-            ranks=[q.VectorRank("embedding", qv, 1.0)], k=3))
+            where=Range("time", 0, args.requests),
+            ranks=[VectorRank("embedding", qv, 1.0)], k=3))
     for text, (res, st) in zip(queries, answered):
         top = [(r.values["content"][:40], round(r.score, 3)) for r in res]
         print(f"query {text!r}: plan={st.plan.split('(')[0]}")

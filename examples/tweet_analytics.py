@@ -1,6 +1,7 @@
 """Tweet analytics scenario — the paper's running example (§2.2).
 
-Reproduces all four query types over the TRACY-style workload:
+Reproduces all four query types over the TRACY-style workload through the
+``Database`` facade:
   Type 1  hybrid search   (semantic + keyword + region)
   Type 2  hybrid NN       (weighted spatial proximity + vector similarity)
   Type 3  continuous SYNC (campaign monitoring at fixed interval)
@@ -14,56 +15,62 @@ import numpy as np
 
 sys.path.insert(0, ".")
 from benchmarks import tracy  # noqa: E402
-from repro.core import query as q  # noqa: E402
-from repro.core.continuous import ContinuousEngine  # noqa: E402
-from repro.core.executor import Executor  # noqa: E402
+from repro.core.api import (And, GeoWithin, Range,  # noqa: E402
+                            SpatialRank, TextContains, VectorRange,
+                            VectorRank)
+from repro.core.api import Database  # noqa: E402
 
 cfg = tracy.TracyConfig(n_rows=4000, dim=64, seed=3)
 store, data = tracy.build_store(cfg)
-ex = Executor(store)
-print(f"TRACY store: {store.n_rows} tweets, {len(store.segments)} segments")
+db = Database(view_budget_bytes=8 * 2**20)
+t = db.adopt_store("tweets", store)
+print(f"TRACY store: {t.n_rows} tweets, {len(store.segments)} segments")
 
 # -- Type 1: semantically relevant tweets mentioning a keyword in a region
 qv = data.query_vec()
-res, st = ex.execute(q.HybridQuery(filters=[
-    q.VectorRange("embedding", qv, 8.0),
-    q.TextContains("content", "sports"),
-    q.GeoWithin("coordinate", (10, 10, 60, 60))]))
+res, st = (t.query()
+           .where(VectorRange("embedding", qv, 8.0),
+                  TextContains("content", "sports"),
+                  GeoWithin("coordinate", (10, 10, 60, 60)))
+           .execute())
 print(f"\n[Type 1] {len(res)} tweets match; plan={st.plan}")
 
 # -- Type 2: weighted sum of spatial proximity and vector similarity
-res, st = ex.execute(q.HybridQuery(
-    filters=[q.Range("time", 100, 600)],
-    ranks=[q.VectorRank("embedding", qv, 0.6),
-           q.SpatialRank("coordinate", (50.0, 50.0), 0.3)], k=5))
+res, st = (t.query()
+           .where(Range("time", 100, 600))
+           .rank(VectorRank("embedding", qv, 0.6),
+                 SpatialRank("coordinate", (50.0, 50.0), 0.3))
+           .limit(5)
+           .execute())
 print(f"[Type 2] top-5 scores: {[round(r.score, 3) for r in res]}; "
       f"plan={st.plan.split('(')[0]}")
 
 # -- Type 3: SYNC 60 seconds — advertising campaign monitoring
-eng = ContinuousEngine(store, mode="views", view_budget_bytes=8 * 2**20)
-sync_id = eng.register(q.SyncQuery(q.HybridQuery(
-    ranks=[q.VectorRank("embedding", qv, 1.0)], k=10),
-    interval_s=60.0, name="campaign_monitor"))
+sync_sub = (t.query()
+            .rank(VectorRank("embedding", qv, 1.0))
+            .limit(10)
+            .subscribe(interval_s=60.0, name="campaign_monitor"))
 
 # -- Type 4: ASYNC — re-execute when new tweets arrive
-async_id = eng.register(q.AsyncQuery(q.HybridQuery(
-    filters=[q.Range("time", 900, 1000)]), name="investment_research"))
+async_sub = (t.query()
+             .where(Range("time", 900, 1000))
+             .subscribe(on_change=True, name="investment_research"))
 
 clock = 0.0
 for tick in range(4):
-    out = eng.advance(clock)
+    out = t.advance(clock)
     ran = sorted(out.keys())
     print(f"[t={clock:5.0f}s] ran queries {ran}; "
-          f"view_hits={eng.metrics['view_hits']}")
+          f"view_hits={t.engine.metrics['view_hits']}")
     # a burst of fresh tweets lands between ticks 1 and 2
     if tick == 1:
         pks, batch = data.batch(128)
         batch["time"] = np.full(128, 950.0)
-        store.put(pks, batch)
+        t.put(pks, batch)
         print("         ingested 128 fresh tweets (time=950)")
     clock += 60.0
 
-final = eng.registered[async_id].last_result
+final = async_sub.latest
 print(f"[Type 4] final async result rows: {len(final)} "
       f"(includes fresh tweets: "
       f"{sum(1 for r in final if r.values['time'] == 950.0)})")

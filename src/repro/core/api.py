@@ -1,0 +1,315 @@
+"""Unified public API facade (paper §2.2: one declarative surface for all
+four query types).
+
+ARCADE exposes its engine through a single SQL layer; this module is the
+repro's equivalent — a session object that owns the store, executor, and
+continuous engine, so callers never hand-wire the three:
+
+    from repro.core.api import (Database, Or, Not, Range, TextContains,
+                                VectorRank)
+
+    db = Database(schema)
+    t = db.table()
+    t.put(pks, batch)
+
+    rows = (t.query()
+             .where(Or(Range("time", 0, 5),
+                       Not(TextContains("body", "spam"))))
+             .rank(VectorRank("emb", qvec))
+             .limit(10)
+             .all())
+
+    print(t.query().where(...).explain())        # BitmapUnion cost tree
+    results = db.execute_many([builder1, builder2, ...])
+    sub = t.query().where(...).subscribe(interval_s=60.0)   # Type 3
+    sub2 = t.query().where(...).subscribe(on_change=True)   # Type 4
+    db.advance(now=60.0)                          # virtual-clock tick
+    sub.latest
+
+Filter expressions are arbitrary And/Or/Not trees over the leaf
+predicates; the planner normalizes them to DNF and OR-merges per-conjunct
+bitmaps with ``BitmapUnion`` (see core/optimizer/planner.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.core import query as q
+from repro.core.continuous import ContinuousEngine
+from repro.core.executor import Executor
+from repro.core.lsm import LSMConfig, LSMStore
+from repro.core.operators import ExecStats, ResultRow
+from repro.core.optimizer import planner as planner_lib
+# re-exported so `from repro.core.api import ...` is a one-stop import
+from repro.core.query import (And, AsyncQuery, GeoWithin,  # noqa: F401
+                              HybridQuery, Not, Or, Range, SpatialRank,
+                              SyncQuery, TextContains, TextRank,
+                              VectorRange, VectorRank)
+from repro.core.types import (Column, ColumnType, IndexKind,  # noqa: F401
+                              Schema)
+
+__all__ = [
+    "Database", "Table", "QueryBuilder", "Subscription",
+    "And", "Or", "Not", "Range", "GeoWithin", "TextContains", "VectorRange",
+    "VectorRank", "SpatialRank", "TextRank", "HybridQuery",
+    "Column", "ColumnType", "IndexKind", "Schema", "LSMConfig",
+]
+
+DEFAULT_TABLE = "default"
+
+
+class Subscription:
+    """Stream handle for a registered continuous query (Type 3/4).
+
+    ``poll(now)`` advances the table's virtual clock and returns this
+    subscription's fresh result if it ran at that tick (else None);
+    ``latest`` is the most recent result."""
+
+    def __init__(self, table: "Table", rid: int, decl):
+        self.table = table
+        self.rid = rid
+        self.decl = decl
+        self.active = True
+
+    @property
+    def latest(self) -> Optional[List[ResultRow]]:
+        reg = self.table._engine.registered.get(self.rid) \
+            if self.table._engine else None
+        return reg.last_result if reg else None
+
+    def poll(self, now: float) -> Optional[List[ResultRow]]:
+        return self.table.advance(now).get(self.rid)
+
+    def cancel(self) -> None:
+        if self.active and self.table._engine:
+            self.table._engine.registered.pop(self.rid, None)
+        self.active = False
+
+
+class QueryBuilder:
+    """Fluent builder for one hybrid query against a table.
+
+    ``where`` calls AND-combine; pass ``Or``/``Not`` trees for anything
+    richer.  Terminal methods: ``all()``, ``execute()``, ``explain()``,
+    ``subscribe()``, ``build()``."""
+
+    def __init__(self, table: "Table"):
+        self._table = table
+        self._where: Optional[q.BoolExpr] = None
+        self._ranks: List[q.RankTerm] = []
+        self._k = 10
+        self._select: Optional[Sequence[str]] = None
+
+    # ------------------------------------------------------------ clauses
+    def where(self, *exprs: q.BoolExpr) -> "QueryBuilder":
+        for e in exprs:
+            self._where = e if self._where is None else \
+                q.And((self._where, e))
+        return self
+
+    def rank(self, *terms: q.RankTerm) -> "QueryBuilder":
+        self._ranks.extend(terms)
+        return self
+
+    def limit(self, k: int) -> "QueryBuilder":
+        self._k = int(k)
+        return self
+
+    def select(self, *cols: str) -> "QueryBuilder":
+        self._select = list(cols)
+        return self
+
+    # ---------------------------------------------------------- terminals
+    def build(self) -> q.HybridQuery:
+        return q.HybridQuery(where=self._where, ranks=list(self._ranks),
+                             k=self._k, select=self._select)
+
+    def plan(self) -> planner_lib.Plan:
+        return planner_lib.plan(self._table.executor.catalog, self.build())
+
+    def explain(self) -> str:
+        """EXPLAIN text: plan summary + operator tree with cost
+        estimates (``BitmapUnion`` with per-conjunct costs for OR)."""
+        return self.plan().describe()
+
+    def execute(self) -> Tuple[List[ResultRow], ExecStats]:
+        return self._table.executor.execute(self.build())
+
+    def all(self) -> List[ResultRow]:
+        return self.execute()[0]
+
+    def subscribe(self, interval_s: Optional[float] = None,
+                  on_change: bool = False, name: str = "") -> Subscription:
+        return self._table.subscribe(self.build(), interval_s=interval_s,
+                                     on_change=on_change, name=name)
+
+
+class Table:
+    """One LSM-backed table: writes, queries, and continuous
+    subscriptions, with the executor and continuous engine owned
+    internally."""
+
+    def __init__(self, name: str, schema: Optional[Schema] = None,
+                 cfg: Optional[LSMConfig] = None, *,
+                 store: Optional[LSMStore] = None,
+                 continuous_mode: str = "views",
+                 view_budget_bytes: float = 64 * 2**20):
+        if (schema is None) == (store is None):
+            raise ValueError("pass exactly one of schema= or store=")
+        self.name = name
+        self.store = store if store is not None else LSMStore(schema, cfg)
+        self.executor = Executor(self.store)
+        self.continuous_mode = continuous_mode
+        self.view_budget_bytes = view_budget_bytes
+        self._engine: Optional[ContinuousEngine] = None
+
+    # -------------------------------------------------------------- write
+    def put(self, pks: Sequence[int], batch: Dict[str, Any]) -> None:
+        self.store.put(pks, batch)
+
+    def delete(self, pks: Sequence[int]) -> None:
+        self.store.delete(pks)
+
+    def flush(self) -> None:
+        self.store.flush()
+
+    # --------------------------------------------------------------- read
+    def get(self, pk: int) -> Optional[Dict[str, Any]]:
+        return self.store.get(pk)
+
+    def query(self) -> QueryBuilder:
+        return QueryBuilder(self)
+
+    def execute(self, query: q.HybridQuery
+                ) -> Tuple[List[ResultRow], ExecStats]:
+        return self.executor.execute(query)
+
+    def execute_many(self, queries: Sequence[Union[q.HybridQuery,
+                                                   QueryBuilder]]
+                     ) -> List[Tuple[List[ResultRow], ExecStats]]:
+        built = [qq.build() if isinstance(qq, QueryBuilder) else qq
+                 for qq in queries]
+        return self.executor.execute_many(built)
+
+    def explain(self, query: q.HybridQuery) -> str:
+        return planner_lib.plan(self.executor.catalog, query).describe()
+
+    # --------------------------------------------------------- continuous
+    @property
+    def engine(self) -> ContinuousEngine:
+        if self._engine is None:
+            self._engine = ContinuousEngine(
+                self.store, mode=self.continuous_mode,
+                view_budget_bytes=self.view_budget_bytes)
+        return self._engine
+
+    def subscribe(self, query: q.HybridQuery,
+                  interval_s: Optional[float] = None,
+                  on_change: bool = False, name: str = "") -> Subscription:
+        """Register a continuous query: ``interval_s`` => SYNC (Type 3),
+        ``on_change=True`` => ASYNC (Type 4)."""
+        if interval_s is not None and on_change:
+            raise ValueError("pass interval_s= OR on_change=True, not both")
+        if interval_s is not None:
+            decl: Union[q.SyncQuery, q.AsyncQuery] = \
+                q.SyncQuery(query, interval_s=float(interval_s), name=name)
+        elif on_change:
+            decl = q.AsyncQuery(query, name=name)
+        else:
+            raise ValueError("subscribe() needs interval_s= (SYNC) or "
+                             "on_change=True (ASYNC)")
+        rid = self.engine.register(decl)
+        return Subscription(self, rid, decl)
+
+    def advance(self, now: float) -> Dict[int, List[ResultRow]]:
+        """Run everything due at virtual time ``now`` (no-op when nothing
+        is subscribed)."""
+        if self._engine is None:
+            return {}
+        return self._engine.advance(now)
+
+    @property
+    def n_rows(self) -> int:
+        return self.store.n_rows
+
+    @property
+    def schema(self) -> Schema:
+        return self.store.schema
+
+
+class Database:
+    """Session facade: tables + batched cross-query execution + the
+    continuous virtual clock.  ``Database(schema)`` creates a default
+    table; ``create_table`` adds named ones."""
+
+    def __init__(self, schema: Optional[Schema] = None,
+                 cfg: Optional[LSMConfig] = None, *,
+                 continuous_mode: str = "views",
+                 view_budget_bytes: float = 64 * 2**20):
+        self.continuous_mode = continuous_mode
+        self.view_budget_bytes = view_budget_bytes
+        self._tables: Dict[str, Table] = {}
+        if schema is not None:
+            self.create_table(DEFAULT_TABLE, schema, cfg)
+
+    # -------------------------------------------------------------- tables
+    def create_table(self, name: str, schema: Schema,
+                     cfg: Optional[LSMConfig] = None) -> Table:
+        if name in self._tables:
+            raise ValueError(f"table {name!r} already exists")
+        self._tables[name] = Table(
+            name, schema, cfg, continuous_mode=self.continuous_mode,
+            view_budget_bytes=self.view_budget_bytes)
+        return self._tables[name]
+
+    def adopt_store(self, name: str, store: LSMStore) -> Table:
+        """Wrap an already-built ``LSMStore`` (workload builders,
+        benchmarks) as a table of this database."""
+        if name in self._tables:
+            raise ValueError(f"table {name!r} already exists")
+        self._tables[name] = Table(
+            name, store=store, continuous_mode=self.continuous_mode,
+            view_budget_bytes=self.view_budget_bytes)
+        return self._tables[name]
+
+    def table(self, name: str = DEFAULT_TABLE) -> Table:
+        if name not in self._tables:
+            raise KeyError(f"no table {name!r}; create_table() first "
+                           f"(have: {sorted(self._tables)})")
+        return self._tables[name]
+
+    @property
+    def tables(self) -> Dict[str, Table]:
+        return dict(self._tables)
+
+    # ----------------------------------------------------------- execution
+    def execute_many(self, queries: Sequence[Union[q.HybridQuery,
+                                                   QueryBuilder]]
+                     ) -> List[Tuple[List[ResultRow], ExecStats]]:
+        """Execute a batch in one shared-scan pass per table.  Builders
+        carry their table; bare ``HybridQuery`` objects run against the
+        default table.  Results come back in input order."""
+        resolved: List[Tuple[Table, q.HybridQuery]] = []
+        for item in queries:
+            if isinstance(item, QueryBuilder):
+                resolved.append((item._table, item.build()))
+            else:
+                name = DEFAULT_TABLE if DEFAULT_TABLE in self._tables or \
+                    len(self._tables) != 1 else next(iter(self._tables))
+                resolved.append((self.table(name), item))
+        by_table: Dict[str, List[int]] = {}
+        for i, (t, _) in enumerate(resolved):
+            by_table.setdefault(t.name, []).append(i)
+        out: List = [None] * len(resolved)
+        for name, idxs in by_table.items():
+            t = resolved[idxs[0]][0]
+            res = t.executor.execute_many([resolved[i][1] for i in idxs])
+            for i, r in zip(idxs, res):
+                out[i] = r
+        return out
+
+    # ----------------------------------------------------------- continuous
+    def advance(self, now: float) -> Dict[str, Dict[int, List[ResultRow]]]:
+        """Tick every table's continuous engine at virtual time ``now``."""
+        return {name: t.advance(now) for name, t in self._tables.items()
+                if t._engine is not None}

@@ -54,8 +54,13 @@ class _FullResultCache:
             if deleted or batch is None:
                 self.entries.pop(rid, None)
                 continue
-            affected = not query.filters
-            for pred in query.filters:
+            # conservative: a delta row touching ANY leaf predicate's
+            # region may move rows in OR out of the result (an update that
+            # fails the full expression can still evict its old version),
+            # so leaves are tested individually, never the combined tree
+            leaves = q.leaf_predicates(query.where)
+            affected = not leaves
+            for pred in leaves:
                 try:
                     if eval_predicate_rows(batch, pred).any():
                         affected = True

@@ -22,8 +22,9 @@ from repro.core import operators as ops
 from repro.core import query as q
 from repro.core.operators import (Candidates, ExecStats,  # noqa: F401
                                   PipelineContext, ResultRow,
-                                  combined_scores, eval_predicate_rows,
-                                  eval_predicate_seg, rank_distances)
+                                  combined_scores, eval_expr_rows,
+                                  eval_predicate_rows, eval_predicate_seg,
+                                  rank_distances)
 from repro.core.optimizer import planner as planner_lib
 from repro.core.optimizer.stats import Catalog
 
@@ -50,10 +51,10 @@ class Executor:
         """Execute a batch of queries with shared per-segment scans.
 
         Queries whose plans are scan-based (full_scan, index_intersect,
-        full_scan_nn, prefilter_nn) and — for NN queries — share a rank
-        signature are grouped into one pipeline pass; the rest (nra,
-        postfilter_nn) run individually but still share the batch-level
-        predicate-bitmap cache.
+        full_scan_nn, prefilter_nn, and the DNF union / union_nn kinds)
+        and — for NN queries — share a rank signature are grouped into one
+        pipeline pass; the rest (nra, postfilter_nn) run individually but
+        still share the batch-level predicate-bitmap cache.
         """
         given = list(plans) if plans is not None else [None] * len(queries)
 
@@ -82,9 +83,13 @@ class Executor:
 
         groups: Dict[tuple, List[int]] = {}
         solo: List[int] = []
+        empty: List[int] = []
         for i, (qq, plan) in enumerate(zip(queries, plans)):
-            if plan.kind in ("full_scan", "index_intersect",
-                             "full_scan_nn", "prefilter_nn"):
+            if plan.kind == "empty":
+                empty.append(i)
+            elif plan.kind in ("full_scan", "index_intersect",
+                               "full_scan_nn", "prefilter_nn",
+                               "union", "union_nn"):
                 # a group must share rank structure: NN members stack
                 # their query vectors into one kernel call
                 key = ("nn", ops.rank_signature(qq.ranks)) if qq.ranks \
@@ -111,6 +116,8 @@ class Executor:
 
         stats = [ExecStats(plan=p.describe()) for p in plans]
         pred_cache: Dict = {}
+        for i in empty:
+            results[i] = []
         for i in solo:
             results[i] = self._exec_nn(queries[i], plans[i], stats[i],
                                        pred_cache)
@@ -126,12 +133,16 @@ class Executor:
     # ----------------------------------------------------- plan dispatch
     def _exec_filter(self, query, plan, stats,
                      pred_cache: Optional[Dict] = None) -> List[ResultRow]:
+        if plan.kind == "empty":
+            return []
         return ops.run_scan_group(self.store, self.catalog, [query], [plan],
                                   [stats], pred_cache)[0]
 
     def _exec_nn(self, query, plan, stats,
                  pred_cache: Optional[Dict] = None) -> List[ResultRow]:
-        if plan.kind in ("full_scan", "index_intersect"):
+        if plan.kind == "empty":
+            return []
+        if plan.kind in ("full_scan", "index_intersect", "union"):
             return self._exec_filter(query, plan, stats, pred_cache)
         if plan.kind == "nra":
             from repro.core.nra import nra_topk
@@ -167,9 +178,7 @@ class Executor:
                 if not len(rows):
                     continue
                 vals = {c: seg.columns[c][rows] for c in seg.columns}
-                keep = np.ones(len(rows), bool)
-                for pred in query.filters:
-                    keep &= eval_predicate_rows(vals, pred)
+                keep = eval_expr_rows(vals, query.where)
                 stats.rows_scanned += len(rows)
                 n_survivors += int(keep.sum())
                 parts.append(Candidates(

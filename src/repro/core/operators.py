@@ -29,7 +29,8 @@ from repro.core import query as q
 from repro.core import visibility as vis_lib
 from repro.core.index.text import tokenize
 from repro.core.optimizer.cost import (C_FILTER_BLOCK, C_MERGE,
-                                       C_ROW_RESIDUAL, C_VECTOR_BLOCK)
+                                       C_ROW_RESIDUAL, C_VECTOR_BLOCK,
+                                       conjunct_passing)
 from repro.core.types import BLOCK_ROWS
 from repro.kernels import ops as kops
 
@@ -54,7 +55,27 @@ class ResultRow:
 
 def eval_predicate_seg(seg, pred, stats: ExecStats,
                        use_index: bool = True) -> np.ndarray:
-    """Bool mask over segment rows for one predicate."""
+    """Bool mask over segment rows for one predicate.  Accepts any filter
+    expression — And/Or recurse over their children's masks — so a
+    ``residual`` slot can hold a whole sub-expression (the degenerate
+    full-scan fallback for arbitrary boolean shapes)."""
+    if isinstance(pred, q.Not):
+        # complementing an APPROXIMATE bitmap (IVF probes a subset of
+        # lists) would re-admit rows the user excluded; the vector leaf
+        # must take the exact kernel path under negation
+        exact_needed = isinstance(pred.child, q.VectorRange)
+        return ~eval_predicate_seg(seg, pred.child, stats,
+                                   use_index=use_index and not exact_needed)
+    if isinstance(pred, q.And):
+        m = np.ones(seg.n_rows, bool)
+        for c in pred.children:
+            m &= eval_predicate_seg(seg, c, stats, use_index=use_index)
+        return m
+    if isinstance(pred, q.Or):
+        m = np.zeros(seg.n_rows, bool)
+        for c in pred.children:
+            m |= eval_predicate_seg(seg, c, stats, use_index=use_index)
+        return m
     idx = seg.indexes.get(getattr(pred, "col", None)) if use_index else None
     if idx is not None:
         try:
@@ -84,7 +105,12 @@ def eval_predicate_seg(seg, pred, stats: ExecStats,
 
 
 def eval_predicate_rows(row_values: Dict[str, np.ndarray], pred) -> np.ndarray:
-    """Predicate over materialized rows (memtable / residual eval)."""
+    """Predicate over materialized rows (memtable / residual eval).
+    Accepts any filter expression — And/Or recurse."""
+    if isinstance(pred, q.Not):
+        return ~eval_predicate_rows(row_values, pred.child)
+    if isinstance(pred, (q.And, q.Or)):
+        return eval_expr_rows(row_values, pred)
     if isinstance(pred, q.Range):
         v = np.asarray(row_values[pred.col], np.float64)
         return (v >= pred.lo) & (v <= pred.hi)
@@ -105,8 +131,40 @@ def eval_predicate_rows(row_values: Dict[str, np.ndarray], pred) -> np.ndarray:
     raise TypeError(f"unknown predicate {pred!r}")
 
 
+def eval_expr_rows(row_values: Dict[str, np.ndarray], expr) -> np.ndarray:
+    """Boolean filter expression tree over materialized rows.
+
+    ``row_values`` must contain every column the expression references
+    (``q.expr_cols``).  ``None`` means "no filter" (all rows pass)."""
+    n = len(next(iter(row_values.values()))) if row_values else 0
+    if expr is None:
+        return np.ones(n, bool)
+    if isinstance(expr, q.And):
+        out = np.ones(n, bool)
+        for c in expr.children:
+            out &= eval_expr_rows(row_values, c)
+            if not out.any():
+                break
+        return out
+    if isinstance(expr, q.Or):
+        out = np.zeros(n, bool)
+        for c in expr.children:
+            out |= eval_expr_rows(row_values, c)
+            if out.all():
+                break
+        return out
+    if isinstance(expr, q.Not):
+        return ~eval_expr_rows(row_values, expr.child)
+    return eval_predicate_rows(row_values, expr)
+
+
 def pred_cache_key(pred) -> Tuple:
     """Hashable identity for a predicate (VectorRange holds an ndarray)."""
+    if isinstance(pred, q.Not):
+        return ("not",) + pred_cache_key(pred.child)
+    if isinstance(pred, (q.And, q.Or)):
+        return (type(pred).__name__.lower(),) + tuple(
+            pred_cache_key(c) for c in pred.children)
     if isinstance(pred, q.Range):
         return ("range", pred.col, pred.lo, pred.hi)
     if isinstance(pred, q.GeoWithin):
@@ -216,6 +274,15 @@ class PipelineContext:
                 for p in preds:
                     segs = store.global_index.prune(segs, p)
                 self._allowed.append({s.seg_id for s in segs})
+            elif plan.kind == "union":
+                # a segment is needed if ANY conjunct may match in it
+                allowed: set = set()
+                for sub in plan.subplans:
+                    segs = store.segments
+                    for p in list(sub.indexed) + list(sub.residual):
+                        segs = store.global_index.prune(segs, p)
+                    allowed |= {s.seg_id for s in segs}
+                self._allowed.append(allowed)
             else:
                 self._allowed.append(None)
 
@@ -259,6 +326,28 @@ class PipelineContext:
             hit = eval_predicate_rows(cols, pred)
             self._mt_pred[key] = hit
         return hit
+
+    def memtable_expr_mask(self, expr) -> np.ndarray:
+        """Filter expression tree over the memtable, with per-literal
+        mask caching shared across the batch."""
+        pk, _, _, _ = self.memtable_arrays()
+        if expr is None:
+            return np.ones(len(pk), bool)
+        if q.is_literal(expr):
+            return self.memtable_pred_mask(expr)
+        if isinstance(expr, q.And):
+            out = np.ones(len(pk), bool)
+            for c in expr.children:
+                out &= self.memtable_expr_mask(c)
+            return out
+        if isinstance(expr, q.Or):
+            out = np.zeros(len(pk), bool)
+            for c in expr.children:
+                out |= self.memtable_expr_mask(c)
+            return out
+        if isinstance(expr, q.Not):
+            return ~self.memtable_expr_mask(expr.child)
+        raise TypeError(f"unknown filter expression {expr!r}")
 
 
 @dataclasses.dataclass
@@ -373,7 +462,8 @@ class FilterBitmap(PhysicalOp):
                 key = pred_cache_key(pred)
                 hit = evaluated.get(key)
                 if hit is None:
-                    vals = {pred.col: seg.columns[pred.col][rows]}
+                    vals = {c: seg.columns[c][rows]
+                            for c in q.expr_cols(pred)}
                     hit = np.zeros(seg.n_rows, bool)
                     hit[rows[eval_predicate_rows(vals, pred)]] = True
                     evaluated[key] = hit
@@ -387,6 +477,76 @@ class FilterBitmap(PhysicalOp):
                     mask[qi] &= residual_mask(pred)
                     if not mask[qi].any():
                         break
+            if mask.any():
+                yield seg, mask
+
+
+class BitmapUnion(PhysicalOp):
+    """OR-merge of per-conjunct candidate bitmaps — the DNF execution
+    operator.  A disjunctive query's plan carries one sub-plan per DNF
+    conjunct (``plan.subplans``); each conjunct is evaluated with the
+    conjunctive machinery (cached index-probe bitmaps, row-restricted
+    residual evaluation) and the per-conjunct ``(n_rows,)`` masks are
+    OR-merged into the query's row of the shared ``(nq, n_rows)`` batch
+    bitmap.  Conjunctive plans grouped into the same batch pass through
+    as single-conjunct unions, so mixed batches still share one segment
+    sweep."""
+    name = "BitmapUnion"
+
+    @staticmethod
+    def _conjunct_mask(ctx, seg, sub, stats, residual_mask) -> np.ndarray:
+        m = np.ones(seg.n_rows, bool)
+        for pred in sub.indexed:
+            pm, blocks = ctx.pred_mask(seg, pred, use_index=True)
+            stats.blocks_read += blocks
+            m &= pm
+            if not m.any():
+                return m
+        for pred in sub.residual:
+            rows = np.nonzero(m)[0]
+            if not len(rows):
+                break
+            stats.rows_scanned += len(rows)
+            m &= residual_mask(pred, rows)
+        return m
+
+    def batches(self, ctx):
+        for seg in ctx.store.segments:
+            if seg.n_rows == 0:
+                continue
+            # residual literals evaluated row-restricted but at most once
+            # per (segment, literal, row) across ALL queries and conjuncts
+            # in the batch: `done` tracks which rows a literal has been
+            # evaluated on, `vals` which of those passed
+            evaluated: Dict[Tuple, Tuple[np.ndarray, np.ndarray]] = {}
+
+            def residual_mask(pred, rows: np.ndarray) -> np.ndarray:
+                key = pred_cache_key(pred)
+                hit = evaluated.get(key)
+                if hit is None:
+                    hit = (np.zeros(seg.n_rows, bool),
+                           np.zeros(seg.n_rows, bool))
+                    evaluated[key] = hit
+                done, vals_mask = hit
+                todo = rows[~done[rows]]
+                if len(todo):
+                    vals = {c: seg.columns[c][todo]
+                            for c in q.expr_cols(pred)}
+                    vals_mask[todo[eval_predicate_rows(vals, pred)]] = True
+                    done[todo] = True
+                return vals_mask
+
+            mask = np.zeros((ctx.nq, seg.n_rows), bool)
+            for qi, plan in enumerate(ctx.plans):
+                if not ctx.allowed(qi, seg):
+                    continue
+                m = np.zeros(seg.n_rows, bool)
+                for sub in (plan.subplans or [plan]):
+                    m |= self._conjunct_mask(ctx, seg, sub, ctx.stats[qi],
+                                             residual_mask)
+                    if m.all():
+                        break
+                mask[qi] = m
             if mask.any():
                 yield seg, mask
 
@@ -412,7 +572,8 @@ class RankScore(PhysicalOp):
                 sel = mask[qi][rows]
                 if not sel.any():
                     continue
-                if not plan.indexed and not plan.residual:
+                if not plan.indexed and not plan.residual \
+                        and not plan.subplans:
                     ctx.stats[qi].blocks_read += \
                         seg.n_blocks * len(rank_lists[qi])
                 qrows = rows[sel]
@@ -454,9 +615,7 @@ class MemtableOverlay(PhysicalOp):
         base = vis_lib.memtable_visible(pk, tomb)
         out = []
         for qi, (qq, c) in enumerate(zip(ctx.queries, cands)):
-            keep = base.copy()
-            for pred in qq.filters:
-                keep &= ctx.memtable_pred_mask(pred)
+            keep = base & ctx.memtable_expr_mask(qq.where)
             rows = np.nonzero(keep)[0]
             if not len(rows):
                 out.append(c)
@@ -489,6 +648,11 @@ class NRAMerge(PhysicalOp):
     (paper Algorithm 1) — executed by core.nra over the merged ``Next()``
     iterators; appears here as the plan's EXPLAIN node."""
     name = "NRAMerge"
+
+
+class EmptyResult(PhysicalOp):
+    """The filter expression normalized to FALSE: nothing to scan."""
+    name = "EmptyResult"
 
 
 # ---------------------------------------------------------------------------
@@ -559,10 +723,15 @@ def run_scan_group(store, catalog, queries, plans, stats,
     full_scan_nn, prefilter_nn) in ONE shared pass over the segments."""
     ctx = PipelineContext(store, catalog, queries, plans, stats, pred_cache)
     is_nn = bool(queries[0].ranks)
-    source: PhysicalOp = IndexProbe() if any(p.indexed for p in plans) \
-        else SegmentScan()
-    if any(p.residual for p in plans):
-        source = FilterBitmap([source])
+    if any(p.kind in ("union", "union_nn") for p in plans):
+        # DNF plans in the batch: the union source evaluates every plan
+        # (conjunctive ones as single-conjunct unions) in one sweep
+        source: PhysicalOp = BitmapUnion()
+    else:
+        source = IndexProbe() if any(p.indexed for p in plans) \
+            else SegmentScan()
+        if any(p.residual for p in plans):
+            source = FilterBitmap([source])
     if is_nn:
         parts = RankScore([source]).collect(ctx)
         cands = [Candidates.concat(p) for p in parts]
@@ -589,8 +758,13 @@ def finish_candidates(ctx: PipelineContext, cands: List[Candidates]
 # ---------------------------------------------------------------------------
 
 def _pred_detail(preds) -> str:
-    return ",".join(type(p).__name__ + ":" + str(getattr(p, "col", "?"))
-                    for p in preds)
+    def one(p):
+        if isinstance(p, q.Not):
+            return "Not(" + one(p.child) + ")"
+        if isinstance(p, (q.And, q.Or)):
+            return f"{type(p).__name__}[{len(p.children)}]"
+        return type(p).__name__ + ":" + str(getattr(p, "col", "?"))
+    return ",".join(one(p) for p in preds)
 
 
 def build_tree(plan, catalog=None) -> PhysicalOp:
@@ -602,25 +776,31 @@ def build_tree(plan, catalog=None) -> PhysicalOp:
     total_blocks = catalog.total_blocks if have else 0.0
     mt_rows = len(catalog.store.memtable) if have else 0
 
-    sel = 1.0
-    for p in list(plan.indexed) + list(plan.residual):
-        sel *= catalog.selectivity(p) if have else 1.0
-    passing = sel * (catalog.total_rows if have else 0)
+    def conj_passing(pl_) -> float:
+        if not have:
+            return 0.0
+        return conjunct_passing(catalog,
+                                list(pl_.indexed) + list(pl_.residual))
 
-    def source() -> PhysicalOp:
-        if plan.indexed:
-            est = sum(catalog.index_probe_blocks(p) for p in plan.indexed) \
+    passing = conj_passing(plan)
+    if plan.subplans:                     # DNF: rows passing ANY conjunct
+        passing = min(sum(conj_passing(sp) for sp in plan.subplans),
+                      float(catalog.total_rows) if have else 0.0)
+
+    def source(pl_=plan) -> PhysicalOp:
+        if pl_.indexed:
+            est = sum(catalog.index_probe_blocks(p) for p in pl_.indexed) \
                 if have else 0.0
-            return IndexProbe(detail=_pred_detail(plan.indexed),
+            return IndexProbe(detail=_pred_detail(pl_.indexed),
                               est_cost=est)
         return SegmentScan(detail=f"{n_segs} segments",
                            est_cost=total_blocks * C_FILTER_BLOCK)
 
-    def with_residual(node: PhysicalOp) -> PhysicalOp:
-        if not plan.residual:
+    def with_residual(node: PhysicalOp, pl_=plan) -> PhysicalOp:
+        if not pl_.residual:
             return node
-        est = passing * C_ROW_RESIDUAL * len(plan.residual)
-        return FilterBitmap([node], detail=_pred_detail(plan.residual),
+        est = conj_passing(pl_) * C_ROW_RESIDUAL * len(pl_.residual)
+        return FilterBitmap([node], detail=_pred_detail(pl_.residual),
                             est_cost=est)
 
     def finishers(node: PhysicalOp, with_topk: bool) -> PhysicalOp:
@@ -633,6 +813,21 @@ def build_tree(plan, catalog=None) -> PhysicalOp:
         return node
 
     kind = plan.kind
+    if kind == "empty":
+        return EmptyResult(detail=plan.note or "unsatisfiable filter")
+    if kind in ("union", "union_nn"):
+        # one child subtree per DNF conjunct, each with its own costs
+        kids = [with_residual(source(sp), sp) for sp in plan.subplans]
+        node = BitmapUnion(kids,
+                           detail=f"{len(kids)} conjuncts (OR-merge)",
+                           est_cost=C_MERGE * n_segs * max(1, len(kids)))
+        if kind == "union_nn":
+            est = (passing / BLOCK_ROWS) * C_VECTOR_BLOCK * \
+                max(1, len(plan.ranks))
+            node = RankScore(
+                [node], detail=f"{len(plan.ranks)} modalities (batched)",
+                est_cost=est)
+        return finishers(node, with_topk=(kind == "union_nn"))
     if kind in ("full_scan", "index_intersect"):
         return finishers(with_residual(source()), with_topk=False)
     if kind in ("full_scan_nn", "prefilter_nn"):

@@ -35,9 +35,19 @@ def full_scan_cost(catalog, filters: List) -> PlanCost:
     nb = catalog.total_blocks
     per_block = C_FILTER_BLOCK * max(1, len(filters))
     for f in filters:
-        if isinstance(f, q.VectorRange):
+        leaf = f.child if isinstance(f, q.Not) else f
+        if isinstance(leaf, q.VectorRange):
             per_block += C_VECTOR_BLOCK
     return PlanCost(blocks=nb * per_block, candidates=0.0)
+
+
+def conjunct_passing(catalog, literals: List) -> float:
+    """Expected rows satisfying a conjunction of literals (independence
+    assumption — the same estimate the subset enumeration uses)."""
+    sel = 1.0
+    for p in literals:
+        sel *= catalog.selectivity(p)
+    return sel * catalog.total_rows
 
 
 def intersect_cost(catalog, indexed: List, residual: List) -> PlanCost:

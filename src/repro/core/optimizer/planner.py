@@ -1,37 +1,47 @@
 """Cost-based plan enumeration for hybrid queries (paper §5).
 
-Hybrid search (Type 1): enumerate every subset of index-supported
-predicates as the probe set (bitmap intersection), remaining predicates as
-residuals; compare against a full scan; pick min cost. This is exactly the
-"optimal combination of index access paths" claim — single-index
-pre-filter and post-filter plans are special cases of the enumeration.
+Filter expressions are normalized to DNF first (``query.where`` may be an
+arbitrary And/Or/Not tree over the four leaf predicates).  A single
+conjunct plans exactly as before; a disjunction plans every conjunct
+independently via the per-subset index enumeration and OR-merges the
+per-conjunct bitmaps with the ``BitmapUnion`` operator inside the shared
+scan pipeline (plan kinds ``union`` / ``union_nn``).
 
-Hybrid NN (Type 2): candidate plans are NRA (Algorithm 1 over unified
-sorted iterators), pre-filtered exact scan, post-filtered vector index
-probe (single vector rank only), and full-scan ranking.
+Hybrid search (Type 1, one conjunct): enumerate every subset of
+index-supported literals as the probe set (bitmap intersection), remaining
+literals as residuals; compare against a full scan; pick min cost. This is
+exactly the "optimal combination of index access paths" claim — single-
+index pre-filter and post-filter plans are special cases.
+
+Hybrid NN (Type 2, one conjunct): candidate plans are NRA (Algorithm 1
+over unified sorted iterators), pre-filtered exact scan, post-filtered
+vector index probe (single vector rank only), and full-scan ranking.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 from repro.core import query as q
 from repro.core.optimizer import cost as cost_lib
 from repro.core.optimizer.stats import Catalog
+from repro.core.types import BLOCK_ROWS
 
 
 @dataclasses.dataclass
 class Plan:
     kind: str                      # full_scan | index_intersect |
     #                                prefilter_nn | postfilter_nn | nra |
-    #                                full_scan_nn
+    #                                full_scan_nn | union | union_nn
     indexed: List = dataclasses.field(default_factory=list)
     residual: List = dataclasses.field(default_factory=list)
     ranks: List = dataclasses.field(default_factory=list)
     k: int = 0
     cost: float = 0.0
     note: str = ""
+    subplans: List["Plan"] = dataclasses.field(default_factory=list)
+    #                                one search-shaped plan per DNF conjunct
     root: object = None            # operator tree (operators.PhysicalOp)
 
     def operator_tree(self, catalog=None):
@@ -45,22 +55,31 @@ class Plan:
     def describe(self) -> str:
         """EXPLAIN: one summary line followed by the operator tree with
         per-operator cost estimates (block-read units)."""
-        ix = ",".join(type(p).__name__ + ":" + getattr(p, "col", "?")
-                      for p in self.indexed)
-        rs = ",".join(type(p).__name__ + ":" + getattr(p, "col", "?")
-                      for p in self.residual)
-        head = (f"{self.kind}(indexed=[{ix}] residual=[{rs}] "
-                f"ranks={len(self.ranks)} cost={self.cost:.1f})")
+        from repro.core.operators import _pred_detail
+        if self.subplans:
+            head = (f"{self.kind}(conjuncts={len(self.subplans)} "
+                    f"ranks={len(self.ranks)} cost={self.cost:.1f})")
+        else:
+            ix = _pred_detail(self.indexed)
+            rs = _pred_detail(self.residual)
+            head = (f"{self.kind}(indexed=[{ix}] residual=[{rs}] "
+                    f"ranks={len(self.ranks)} cost={self.cost:.1f})")
         return head + "\n" + self.operator_tree().explain(1)
 
 
 def _index_supported(catalog: Catalog, p) -> bool:
+    # negated literals are residual-only: a NOT probe would complement a
+    # bitmap whose cost/selectivity bookkeeping assumes positive matches
+    if isinstance(p, q.Not):
+        return False
     col = getattr(p, "col", None)
     return col is not None and catalog.has_index(col)
 
 
-def plan_hybrid_search(catalog: Catalog, query: q.HybridQuery) -> Plan:
-    filters = list(query.filters)
+def _plan_conjunct(catalog: Catalog, literals: Sequence) -> Plan:
+    """Best search-shaped plan (full_scan | index_intersect) for one
+    conjunction of literals — the per-subset index enumeration."""
+    filters = list(literals)
     supported = [p for p in filters if _index_supported(catalog, p)]
     best = Plan(kind="full_scan", residual=filters,
                 cost=cost_lib.full_scan_cost(catalog, filters).total,
@@ -76,8 +95,29 @@ def plan_hybrid_search(catalog: Catalog, query: q.HybridQuery) -> Plan:
     return best
 
 
+def _empty_plan(query: q.HybridQuery) -> Plan:
+    """DNF normalized to FALSE (e.g. ``And(p, Not(p))``): no row can
+    match — distinct from the no-filter case, which scans everything."""
+    return Plan(kind="empty", ranks=list(query.ranks), k=query.k,
+                cost=0.0, note="unsatisfiable filter (DNF = false)")
+
+
+def plan_hybrid_search(catalog: Catalog, query: q.HybridQuery) -> Plan:
+    conjuncts = q.to_dnf(query.where)
+    if not conjuncts:
+        return _empty_plan(query)
+    if len(conjuncts) > 1:
+        return plan_union(catalog, query, conjuncts)
+    return _plan_conjunct(catalog, conjuncts[0])
+
+
 def plan_hybrid_nn(catalog: Catalog, query: q.HybridQuery) -> Plan:
-    filters = list(query.filters)
+    conjuncts = q.to_dnf(query.where)
+    if not conjuncts:
+        return _empty_plan(query)
+    if len(conjuncts) > 1:
+        return plan_union(catalog, query, conjuncts)
+    filters = list(conjuncts[0])
     ranks = list(query.ranks)
     k = query.k
     candidates: List[Plan] = []
@@ -95,8 +135,7 @@ def plan_hybrid_nn(catalog: Catalog, query: q.HybridQuery) -> Plan:
 
     # pre-filter: best filter sub-plan, then exact ranking of survivors
     if filters:
-        fplan = plan_hybrid_search(
-            catalog, q.HybridQuery(filters=filters, k=k))
+        fplan = _plan_conjunct(catalog, filters)
         fcost = cost_lib.PlanCost(blocks=fplan.cost, candidates=0)
         pc = cost_lib.prefilter_nn_cost(catalog, filters, ranks, fcost)
         candidates.append(Plan(kind="prefilter_nn", indexed=fplan.indexed,
@@ -114,16 +153,44 @@ def plan_hybrid_nn(catalog: Catalog, query: q.HybridQuery) -> Plan:
     return min(candidates, key=lambda p: p.cost)
 
 
+def plan_union(catalog: Catalog, query: q.HybridQuery,
+               conjuncts: Optional[List] = None) -> Plan:
+    """Disjunctive plan: one search-shaped sub-plan per DNF conjunct,
+    OR-merged by ``BitmapUnion``; NN queries rank the merged bitmap
+    (prefilter shape), so batching and EXPLAIN work unchanged."""
+    if conjuncts is None:
+        conjuncts = q.to_dnf(query.where)
+    subs = [_plan_conjunct(catalog, list(c)) for c in conjuncts]
+    total = sum(s.cost for s in subs)
+    ranks = list(query.ranks)
+    if not ranks:
+        return Plan(kind="union", subplans=subs, cost=total,
+                    note=f"{len(subs)} conjuncts")
+    # rows passing ANY conjunct get exact-ranked (union selectivity bound)
+    passing = min(float(catalog.total_rows),
+                  sum(cost_lib.conjunct_passing(catalog, list(c))
+                      for c in conjuncts))
+    rank_blocks = (passing / BLOCK_ROWS) * cost_lib.C_VECTOR_BLOCK * \
+        max(1, len(ranks))
+    return Plan(kind="union_nn", subplans=subs, ranks=ranks, k=query.k,
+                cost=total + rank_blocks + passing * cost_lib.C_ROW_RESIDUAL,
+                note=f"{len(subs)} conjuncts")
+
+
 def plan_shared_scan(catalog: Catalog, query: q.HybridQuery) -> Plan:
     """Batch-aware physical choice: when many structurally-identical exact
     NN queries execute together, one shared segment sweep with batched
     distance kernels beats N independent sorted-access (NRA) walks — the
     per-segment scan and the ``l2_distances(Q, X)`` call are paid once for
     the whole batch.  Returns the scan-shaped plan for one member."""
-    filters = list(query.filters)
+    conjuncts = q.to_dnf(query.where)
+    if not conjuncts:
+        return _empty_plan(query)
+    if len(conjuncts) > 1:
+        return plan_union(catalog, query, conjuncts)
+    filters = list(conjuncts[0])
     if filters:
-        fplan = plan_hybrid_search(
-            catalog, q.HybridQuery(filters=filters, k=query.k))
+        fplan = _plan_conjunct(catalog, filters)
         c = cost_lib.prefilter_nn_cost(
             catalog, filters, list(query.ranks),
             cost_lib.PlanCost(blocks=fplan.cost, candidates=0))

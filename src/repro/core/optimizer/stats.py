@@ -23,7 +23,11 @@ class Catalog:
 
     # ------------------------------------------------------- selectivity
     def selectivity(self, predicate) -> float:
-        """Row-weighted average of per-segment index selectivity."""
+        """Row-weighted average of per-segment index selectivity.  A
+        negated literal's selectivity is the complement of its leaf's."""
+        if isinstance(predicate, q.Not):
+            return min(1.0, max(0.0,
+                                1.0 - self.selectivity(predicate.child)))
         col = getattr(predicate, "col", None)
         total, acc = 0, 0.0
         for seg in self.store.segments:

@@ -32,9 +32,19 @@ class Rewrite:
 
 def match(views: List, query: q.HybridQuery) -> Rewrite:
     """Greedy rule-based matching (used at registration for continuous
-    queries, at runtime for snapshot queries)."""
+    queries, at runtime for snapshot queries).
+
+    Spatial substitution requires the matched ``GeoWithin`` to be a
+    top-level conjunct (replacing a predicate nested under ``Or``/``Not``
+    with a view scan would change semantics), so it is attempted only for
+    pure-conjunction queries.  Vector-NN matching post-filters candidates
+    through the full expression tree and works for any ``where`` shape."""
     rw = Rewrite()
-    for p in query.filters:
+    try:
+        top_literals = q.conjunction_literals(query.where)
+    except ValueError:
+        top_literals = []              # disjunctive: no spatial rewrite
+    for p in top_literals:
         if isinstance(p, q.GeoWithin) and rw.spatial_view is None:
             best = None
             for v in views:
@@ -91,21 +101,24 @@ def _gather(store, sids: np.ndarray, rows: np.ndarray, cols) -> dict:
     return {c: np.concatenate(val_parts[c])[inv] for c in cols}
 
 
-def _finish(store, query: q.HybridQuery, pks, sids, rows, preds, stats,
+def _finish(store, query: q.HybridQuery, pks, sids, rows, where, stats,
             k=None):
-    """Shared tail of both rewrite paths: residual predicates and rank
-    scores evaluated columnar over only the needed columns, then the
-    (score, pk) sort/cut; full rows are materialized only for the ≤ k
-    returned results.  Returns (result_rows, n_survivors)."""
+    """Shared tail of both rewrite paths: the residual filter expression
+    and rank scores evaluated columnar over only the needed columns, then
+    the (score, pk) sort/cut; full rows are materialized only for the ≤ k
+    returned results.  ``where`` is a filter expression tree or a list of
+    literals (implicit conjunction).  Returns (result_rows, n_survivors)."""
     from repro.core import executor as ex
 
+    if isinstance(where, (list, tuple)):
+        where = None if not where else \
+            where[0] if len(where) == 1 else q.And(tuple(where))
     if len(pks):
-        need = sorted({p.col for p in preds} |
+        need = sorted(set(q.expr_cols(where)) |
                       {r.col for r in query.ranks})
         vals = _gather(store, sids, rows, need)
-        keep = np.ones(len(pks), bool)
-        for pred in preds:
-            keep &= ex.eval_predicate_rows(vals, pred)
+        keep = ex.eval_expr_rows(vals, where) if need else \
+            np.ones(len(pks), bool)
         pks, sids, rows = pks[keep], sids[keep], rows[keep]
         vals = {c: v[keep] for c, v in vals.items()}
     if not len(pks):
@@ -144,7 +157,7 @@ def execute_with_views(executor, query: q.HybridQuery, rw: Rewrite):
         pks, sids, seg_rows = _lookup_visible(
             store, np.asarray([pk for _, pk in cand], np.int64))
         res, n = _finish(store, query, pks, sids, seg_rows,
-                         query.filters, stats, k=query.k)
+                         query.where, stats, k=query.k)
         if n >= query.k:
             return res, stats, True
         res, st = executor.execute(query)   # underfilled: fall back

@@ -89,7 +89,9 @@ def build_candidates(store, queries: List[q.HybridQuery],
     spatial_rects, vector_qs, vec_col, sp_col = [], [], None, None
     ks = []
     for query in queries:
-        for p in query.filters:
+        # clustering hints only: every GeoWithin leaf counts, wherever it
+        # sits in the expression tree (matching stays semantics-checked)
+        for p in q.leaf_predicates(query.where):
             if isinstance(p, q.GeoWithin):
                 spatial_rects.append(p.rect)
                 sp_col = p.col

@@ -1,0 +1,355 @@
+"""Boolean filter expressions (And/Or/Not), DNF planning, and the
+Database facade: results must match a brute-force numpy reference across
+every plan kind, normalization must be idempotent, batching must group
+mixed expression shapes, and the legacy ``filters=[...]`` shim must warn.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from conftest import make_batch, tweet_schema
+from repro.core import query as q
+from repro.core.api import Database, LSMConfig
+from repro.core.continuous import ContinuousEngine
+from repro.core.executor import Executor
+from repro.core.index.text import tokenize
+from repro.core.lsm import LSMStore
+from repro.core.optimizer import planner as pl
+
+
+@pytest.fixture(scope="module")
+def db_ref():
+    rng = np.random.default_rng(21)
+    db = Database(tweet_schema(), LSMConfig(flush_rows=512))
+    t = db.table()
+    ref = {}
+    for i in range(0, 3000, 500):
+        pks, batch = make_batch(rng, 500, pk_start=i)
+        t.put(pks, batch)
+        for j, pk in enumerate(pks):
+            ref[pk] = {c: batch[c][j] for c in batch}
+    t.flush()
+    return db, ref
+
+
+def brute_expr(ref, expr):
+    """Row-at-a-time reference evaluation of a filter expression."""
+    def one(row, e):
+        if e is None:
+            return True
+        if isinstance(e, q.And):
+            return all(one(row, c) for c in e.children)
+        if isinstance(e, q.Or):
+            return any(one(row, c) for c in e.children)
+        if isinstance(e, q.Not):
+            return not one(row, e.child)
+        if isinstance(e, q.Range):
+            return e.lo <= row[e.col] <= e.hi
+        if isinstance(e, q.GeoWithin):
+            x, y = row[e.col]
+            return (e.rect[0] <= x <= e.rect[2]
+                    and e.rect[1] <= y <= e.rect[3])
+        if isinstance(e, q.TextContains):
+            return e.term in tokenize(row[e.col])
+        if isinstance(e, q.VectorRange):
+            return float(np.sqrt(((row[e.col] - e.q) ** 2).sum())) < e.thresh
+        raise TypeError(e)
+    return {pk for pk, row in ref.items() if one(row, expr)}
+
+
+EXPRS = [
+    q.Or(q.Range("time", 0, 25), q.Range("time", 75, 100)),
+    q.Or(q.Range("time", 10, 40), q.TextContains("content", "banana")),
+    q.Not(q.TextContains("content", "apple")),
+    q.And(q.Range("time", 5, 80),
+          q.Not(q.GeoWithin("coordinate", (0, 0, 5, 5)))),
+    q.Or(q.And(q.Range("time", 0, 30),
+               q.GeoWithin("coordinate", (2, 2, 8, 8))),
+         q.And(q.TextContains("content", "cherry"),
+               q.Not(q.Range("time", 50, 100)))),
+]
+
+
+@pytest.mark.parametrize("expr", EXPRS)
+def test_boolean_search_matches_brute(db_ref, expr):
+    db, ref = db_ref
+    got = {r.pk for r in db.table().query().where(expr).all()}
+    assert got == brute_expr(ref, expr)
+
+
+@pytest.mark.parametrize("expr", EXPRS)
+def test_boolean_nn_matches_brute(db_ref, expr):
+    db, ref = db_ref
+    qv = np.random.default_rng(3).normal(size=16).astype(np.float32)
+    k = 12
+    res = (db.table().query().where(expr)
+           .rank(q.VectorRank("embedding", qv, 1.0)).limit(k).all())
+    want = brute_expr(ref, expr)
+    score = {pk: float(np.sqrt(((ref[pk]["embedding"] - qv) ** 2).sum()))
+             for pk in want}
+    top = sorted(want, key=lambda pk: (score[pk], pk))[:k]
+    assert [r.pk for r in res] == top
+
+
+def test_or_query_correct_through_forced_full_scan(db_ref):
+    """The degenerate plan (full scan, whole expression as residual)
+    agrees with the planner-chosen BitmapUnion plan."""
+    db, ref = db_ref
+    t = db.table()
+    expr = EXPRS[1]
+    want = brute_expr(ref, expr)
+    forced = pl.Plan(kind="full_scan", residual=[expr])
+    res, _ = t.executor.execute(q.HybridQuery(where=expr), plan=forced)
+    assert {r.pk for r in res} == want
+    chosen = pl.plan(t.executor.catalog, q.HybridQuery(where=expr))
+    assert chosen.kind == "union"
+    res2, _ = t.executor.execute(q.HybridQuery(where=expr), plan=chosen)
+    assert {r.pk for r in res2} == want
+
+
+# ---------------------------------------------------------------------------
+# DNF normalization
+# ---------------------------------------------------------------------------
+
+def test_dnf_idempotent():
+    for expr in EXPRS:
+        d1 = q.to_dnf(expr)
+        d2 = q.to_dnf(q.from_dnf(d1))
+        assert d1 == d2
+
+
+def test_dnf_de_morgan_and_double_negation():
+    a, b = q.Range("time", 0, 1), q.TextContains("content", "x")
+    assert q.to_dnf(q.Not(q.Not(a))) == [(a,)]
+    # NOT(a AND b) == NOT a OR NOT b
+    assert q.to_dnf(q.Not(q.And(a, b))) == [(q.Not(a),), (q.Not(b),)]
+    # NOT(a OR b) == NOT a AND NOT b
+    assert q.to_dnf(q.Not(q.Or(a, b))) == [(q.Not(a), q.Not(b))]
+
+
+def test_dnf_simplifications():
+    a, b = q.Range("time", 0, 1), q.TextContains("content", "x")
+    # contradiction dropped
+    assert q.to_dnf(q.And(a, q.Not(a))) == []
+    # duplicate literal deduped
+    assert q.to_dnf(q.And(a, a)) == [(a,)]
+    # absorption: a OR (a AND b) == a
+    assert q.to_dnf(q.Or(a, q.And(a, b))) == [(a,)]
+    # duplicate conjuncts deduped
+    assert q.to_dnf(q.Or(a, a)) == [(a,)]
+
+
+def test_unsatisfiable_where_returns_no_rows(db_ref):
+    """DNF=false must stay distinct from DNF=no-filter: a contradictory
+    WHERE returns zero rows, not every row."""
+    db, _ = db_ref
+    t = db.table()
+    a = q.Range("time", 0, 10)
+    contradiction = q.And(a, q.Not(a))
+    assert t.query().where(contradiction).all() == []
+    plan = pl.plan(t.executor.catalog, q.HybridQuery(where=contradiction))
+    assert plan.kind == "empty"
+    assert "EmptyResult" in plan.describe()
+    # NN shape and batched execution agree
+    res = t.executor.execute_many([
+        q.HybridQuery(where=contradiction,
+                      ranks=[q.VectorRank("embedding",
+                                          np.zeros(16, np.float32), 1.0)],
+                      k=5),
+        q.HybridQuery(where=q.Range("time", 0, 100)),
+    ])
+    assert res[0][0] == [] and len(res[1][0]) > 0
+    # degenerate DNF values: TRUE is [()], FALSE is []
+    assert q.to_dnf(None) == [()]
+    assert q.to_dnf(contradiction) == []
+    with pytest.raises(ValueError):
+        q.from_dnf([])
+
+
+def test_not_vector_range_exact_under_index_paths(db_ref):
+    """Complementing an approximate IVF bitmap must not re-admit rows
+    inside the excluded distance ball (the NRA filter-mask path probes
+    indexes; negated vector leaves must take the exact kernel path)."""
+    db, ref = db_ref
+    t = db.table()
+    qv = np.random.default_rng(7).normal(size=16).astype(np.float32)
+    dists = {pk: float(np.sqrt(((row["embedding"] - qv) ** 2).sum()))
+             for pk, row in ref.items()}
+    ordered = sorted(dists.values())
+    thresh = (ordered[29] + ordered[30]) / 2   # margin from any boundary
+    expr = q.Not(q.VectorRange("embedding", qv, thresh))
+    ranks = [q.VectorRank("embedding", qv, 1.0)]
+    k = 10
+    plan = pl.Plan(kind="nra", residual=[expr], ranks=ranks, k=k)
+    res, _ = t.executor.execute(
+        q.HybridQuery(where=expr, ranks=ranks, k=k), plan=plan)
+    want = brute_expr(ref, expr)
+    top = sorted(want, key=lambda pk: (dists[pk], pk))[:k]
+    assert [r.pk for r in res] == top
+
+
+def test_fcache_invalidates_when_update_leaves_result():
+    """An update that moves a row OUT of a cached multi-predicate result
+    must invalidate the cache entry (leaf-level delta test)."""
+    from repro.core.lsm import LSMConfig as _Cfg
+    rng = np.random.default_rng(0)
+    store = LSMStore(tweet_schema(), _Cfg(flush_rows=10_000))
+    pks, batch = make_batch(rng, 50)
+    batch["time"] = np.linspace(0, 100, 50)
+    batch["content"] = np.asarray(["apple pie"] * 50, object)
+    store.put(pks, batch)
+    eng = ContinuousEngine(store, mode="fcache")
+    rid = eng.register(q.SyncQuery(q.HybridQuery(
+        where=q.And(q.Range("time", 0, 10),
+                    q.TextContains("content", "apple"))), interval_s=1.0))
+    first = eng.advance(0.0)[rid]
+    assert first
+    victim = first[0].pk
+    update = {c: np.asarray([batch[c][victim]]) for c in batch}
+    update["time"] = np.asarray([50.0])    # fails Range, still has "apple"
+    store.put([victim], update)
+    second = eng.advance(1.0)[rid]
+    assert victim not in {r.pk for r in second}
+
+
+def test_predicates_hashable():
+    v1 = q.VectorRange("embedding", np.ones(4), 2.0)
+    v2 = q.VectorRange("embedding", np.ones(4), 2.0)
+    assert v1 == v2 and hash(v1) == hash(v2)
+    r1 = q.VectorRank("embedding", np.zeros(4), 0.5)
+    r2 = q.VectorRank("embedding", np.zeros(4), 0.5)
+    assert r1 == r2 and len({r1, r2}) == 1
+    # whole expression trees are hashable (DNF dedup relies on it)
+    assert len({q.And(v1, q.Not(v1)), q.And(v2, q.Not(v2))}) == 1
+
+
+# ---------------------------------------------------------------------------
+# batching / EXPLAIN / shim
+# ---------------------------------------------------------------------------
+
+def test_execute_many_mixed_expression_shapes(db_ref):
+    db, ref = db_ref
+    t = db.table()
+    rng = np.random.default_rng(9)
+    queries = []
+    for i, expr in enumerate(EXPRS):
+        if i % 2:
+            queries.append(q.HybridQuery(where=expr))
+        else:
+            queries.append(q.HybridQuery(
+                where=expr,
+                ranks=[q.VectorRank("embedding",
+                                    rng.normal(size=16).astype(np.float32),
+                                    1.0)], k=8))
+    queries.append(q.HybridQuery(where=q.Range("time", 0, 50)))
+    single = [t.executor.execute(qq)[0] for qq in queries]
+    batched = [r for r, _ in t.executor.execute_many(queries)]
+    for a, b in zip(single, batched):
+        assert [r.pk for r in a] == [r.pk for r in b]
+        assert [r.score for r in a] == pytest.approx(
+            [r.score for r in b], rel=1e-4)
+
+
+def test_union_explain_has_per_conjunct_costs(db_ref):
+    db, _ = db_ref
+    text = (db.table().query()
+            .where(q.Or(q.Range("time", 0, 10),
+                        q.TextContains("content", "echo")))
+            .rank(q.VectorRank("embedding", np.zeros(16, np.float32), 1.0))
+            .explain())
+    assert text.startswith("union_nn(")
+    assert "BitmapUnion" in text and "2 conjuncts" in text
+    assert "RankScore" in text and "TopKMerge" in text
+    # per-conjunct children carry their own non-zero cost estimates
+    costs = [float(tok.split("=")[1].rstrip(")"))
+             for tok in text.split() if tok.startswith("cost=")]
+    assert sum(c > 0 for c in costs) >= 3
+
+
+def test_filters_kwarg_shim_warns_and_matches(db_ref):
+    db, ref = db_ref
+    preds = [q.Range("time", 10, 60), q.TextContains("content", "delta")]
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        legacy = q.HybridQuery(filters=list(preds))
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert legacy.where == q.And(tuple(preds))
+    res_a, _ = db.table().executor.execute(legacy)
+    res_b, _ = db.table().executor.execute(q.HybridQuery(where=preds))
+    assert [r.pk for r in res_a] == [r.pk for r in res_b]
+    # flat-conjunction view still exposed for conjunctive queries...
+    assert legacy.filters == list(preds)
+    # ...but refuses to flatten a disjunction
+    with pytest.raises(ValueError):
+        q.HybridQuery(where=q.Or(*preds)).filters
+
+
+# ---------------------------------------------------------------------------
+# facade: subscriptions match the hand-wired ContinuousEngine
+# ---------------------------------------------------------------------------
+
+def test_subscribe_matches_continuous_engine():
+    from benchmarks import tracy
+
+    cfg = tracy.TracyConfig(n_rows=2000, dim=32, seed=5, flush_rows=512)
+
+    # hand-wired: store + engine + register (the pre-facade three-object
+    # setup on the tweet_analytics workload)
+    store_a, data_a = tracy.build_store(cfg)
+    eng = ContinuousEngine(store_a, mode="views",
+                           view_budget_bytes=8 * 2**20)
+    qv = data_a.query_vec()
+    sync_id = eng.register(q.SyncQuery(q.HybridQuery(
+        ranks=[q.VectorRank("embedding", qv, 1.0)], k=10), interval_s=60.0))
+    async_id = eng.register(q.AsyncQuery(q.HybridQuery(
+        where=q.Range("time", 900, 1000))))
+
+    # facade: identical workload through Database/Table.subscribe
+    store_b, data_b = tracy.build_store(cfg)
+    db = Database(view_budget_bytes=8 * 2**20)
+    t = db.adopt_store("tweets", store_b)
+    sync_sub = (t.query().rank(q.VectorRank("embedding", qv, 1.0))
+                .limit(10).subscribe(interval_s=60.0))
+    async_sub = (t.query().where(q.Range("time", 900, 1000))
+                 .subscribe(on_change=True))
+
+    clock = 0.0
+    for tick in range(3):
+        out_a = eng.advance(clock)
+        out_b = t.advance(clock)
+        assert (sync_id in out_a) == (sync_sub.rid in out_b)
+        if sync_id in out_a:
+            assert [r.pk for r in out_a[sync_id]] == \
+                [r.pk for r in out_b[sync_sub.rid]]
+        if tick == 0:
+            pks, batch = data_a.batch(64)
+            batch["time"] = np.full(64, 950.0)
+            store_a.put(pks, batch)
+            pks_b, batch_b = data_b.batch(64)
+            batch_b["time"] = batch["time"]
+            batch_b["embedding"] = batch["embedding"]
+            t.put(pks_b, batch_b)
+        clock += 60.0
+
+    fin_a = eng.registered[async_id].last_result
+    fin_b = async_sub.latest
+    assert sorted(r.pk for r in fin_a) == sorted(r.pk for r in fin_b)
+    sync_sub.cancel()
+    assert sync_sub.rid not in t.engine.registered
+
+
+def test_database_multiple_tables(db_ref):
+    db2 = Database(tweet_schema())
+    t2 = db2.create_table("other", tweet_schema())
+    rng = np.random.default_rng(1)
+    pks, batch = make_batch(rng, 100)
+    db2.table().put(pks, batch)
+    t2.put(pks, batch)
+    out = db2.execute_many([
+        db2.table().query().where(q.Range("time", 0, 50)),
+        t2.query().where(q.Range("time", 0, 50)),
+    ])
+    assert {r.pk for r in out[0][0]} == {r.pk for r in out[1][0]}
+    with pytest.raises(KeyError):
+        db2.table("missing")

@@ -60,7 +60,7 @@ def test_hybrid_search_exact(store_ref):
     filters = [q.Range("time", 10, 30),
                q.TextContains("content", "banana"),
                q.GeoWithin("coordinate", (1, 1, 9, 9))]
-    res, st = ex.execute(q.HybridQuery(filters=filters))
+    res, st = ex.execute(q.HybridQuery(where=filters))
     want = set(np.nonzero(brute_filter(ref, filters))[0].tolist())
     assert set(r.pk for r in res) == want
 
@@ -72,17 +72,17 @@ def test_hybrid_search_all_plans_agree(store_ref):
     want = set(np.nonzero(brute_filter(ref, filters))[0].tolist())
     # full scan
     fs = pl.Plan(kind="full_scan", residual=filters)
-    res, _ = ex.execute(q.HybridQuery(filters=filters), plan=fs)
+    res, _ = ex.execute(q.HybridQuery(where=filters), plan=fs)
     assert set(r.pk for r in res) == want
     # every single-index choice
     for probe in filters:
         plan = pl.Plan(kind="index_intersect", indexed=[probe],
                        residual=[p for p in filters if p is not probe])
-        res, _ = ex.execute(q.HybridQuery(filters=filters), plan=plan)
+        res, _ = ex.execute(q.HybridQuery(where=filters), plan=plan)
         assert set(r.pk for r in res) == want
     # both indexes
     plan = pl.Plan(kind="index_intersect", indexed=filters, residual=[])
-    res, _ = ex.execute(q.HybridQuery(filters=filters), plan=plan)
+    res, _ = ex.execute(q.HybridQuery(where=filters), plan=plan)
     assert set(r.pk for r in res) == want
 
 
@@ -95,7 +95,7 @@ def test_hybrid_nn_plans_match_brute(store_ref, kind):
     ranks = [q.VectorRank("embedding", qv, 0.7),
              q.SpatialRank("coordinate", (4.0, 6.0), 1.3)]
     filters = [q.Range("time", 0, 60)]
-    query = q.HybridQuery(filters=filters, ranks=ranks, k=10)
+    query = q.HybridQuery(where=filters, ranks=ranks, k=10)
     plan = pl.Plan(kind=kind, residual=filters, ranks=ranks, k=10)
     if kind == "prefilter_nn":
         plan.indexed = filters
@@ -116,7 +116,7 @@ def test_postfilter_nn_high_recall(store_ref):
     qv = rng.normal(size=16).astype(np.float32)
     ranks = [q.VectorRank("embedding", qv, 1.0)]
     filters = [q.Range("time", 0, 80)]     # mild filter
-    query = q.HybridQuery(filters=filters, ranks=ranks, k=10)
+    query = q.HybridQuery(where=filters, ranks=ranks, k=10)
     plan = pl.Plan(kind="postfilter_nn", residual=filters, ranks=ranks, k=10)
     res, _ = ex.execute(query, plan=plan)
     mask = brute_filter(ref, filters)
@@ -133,7 +133,7 @@ def test_memtable_rows_visible_in_queries(store_ref):
     pks, batch = make_batch(rng, 5, pk_start=10_000)
     batch["time"] = np.full(5, 55.5)
     store.put(pks, batch)       # stays in memtable (below flush threshold)
-    res, _ = ex.execute(q.HybridQuery(filters=[q.Range("time", 55.4, 55.6)]))
+    res, _ = ex.execute(q.HybridQuery(where=[q.Range("time", 55.4, 55.6)]))
     assert set(r.pk for r in res) >= set(pks)
 
 
@@ -142,7 +142,7 @@ def test_planner_picks_cheap_plan(store_ref):
     ex = Executor(store)
     # highly selective indexed range: planner must not full-scan
     plan = pl.plan(ex.catalog, q.HybridQuery(
-        filters=[q.Range("time", 50.0, 50.5),
+        where=[q.Range("time", 50.0, 50.5),
                  q.TextContains("content", "golf")]))
     assert plan.kind == "index_intersect"
     # rank over indexed modalities: NRA or prefilter beats full scan

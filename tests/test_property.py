@@ -53,7 +53,7 @@ def test_lsm_every_put_visible(seed, n, flush):
 def test_range_query_matches_brute(seed, n, lo, width):
     store, vecs, pts, times = _mk_store(seed, n, 64)
     ex = Executor(store)
-    res, _ = ex.execute(q.HybridQuery(filters=[q.Range("time", lo,
+    res, _ = ex.execute(q.HybridQuery(where=[q.Range("time", lo,
                                                        lo + width)]))
     want = set(np.nonzero((times >= lo) & (times <= lo + width))[0].tolist())
     assert set(r.pk for r in res) == want
@@ -129,7 +129,7 @@ def test_delete_then_query_never_returns_deleted(seed, n, n_del):
     dels = [int(x) for x in rng.integers(0, n, n_del)]
     store.delete(dels)
     res, _ = Executor(store).execute(
-        q.HybridQuery(filters=[q.Range("time", -1, 101)]))
+        q.HybridQuery(where=[q.Range("time", -1, 101)]))
     got = set(r.pk for r in res)
     assert not (got & set(dels))
     assert got == set(range(n)) - set(dels)

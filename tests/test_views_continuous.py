@@ -26,7 +26,7 @@ def test_spatial_view_incremental_equals_rebuild():
     store = _store(rng)
     eng = ContinuousEngine(store, mode="views", view_budget_bytes=2**22)
     decl = q.SyncQuery(q.HybridQuery(
-        filters=[q.GeoWithin("coordinate", (2, 2, 5, 5))]), 1.0)
+        where=[q.GeoWithin("coordinate", (2, 2, 5, 5))]), 1.0)
     eng.register(decl)
     views = [v for v in eng.maintainer.views
              if isinstance(v, SpatialRangeView)]
@@ -96,7 +96,7 @@ def test_async_query_triggers_on_write_only():
     rng = np.random.default_rng(4)
     store = _store(rng)
     decl = q.AsyncQuery(q.HybridQuery(
-        filters=[q.Range("time", 0, 100)]))
+        where=[q.Range("time", 0, 100)]))
     eng = ContinuousEngine(store, mode="none")
     rid = eng.register(decl)
     out = eng.advance(0.0)
@@ -112,7 +112,7 @@ def test_async_query_triggers_on_write_only():
 def test_sync_interval_schedule():
     rng = np.random.default_rng(5)
     store = _store(rng, n=500)
-    decl = q.SyncQuery(q.HybridQuery(filters=[q.Range("time", 0, 10)]),
+    decl = q.SyncQuery(q.HybridQuery(where=[q.Range("time", 0, 10)]),
                        interval_s=10.0)
     eng = ContinuousEngine(store, mode="none")
     rid = eng.register(decl)
@@ -127,7 +127,7 @@ def test_knapsack_respects_budget():
     rng = np.random.default_rng(6)
     store = _store(rng)
     # disjoint rects -> one view candidate per query cluster
-    queries = [q.HybridQuery(filters=[q.GeoWithin(
+    queries = [q.HybridQuery(where=[q.GeoWithin(
         "coordinate", (3 * i, 3 * i, 3 * i + 2, 3 * i + 2))])
         for i in range(3)]
     cands = build_candidates(store, queries)

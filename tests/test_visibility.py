@@ -77,7 +77,7 @@ def test_all_read_paths_agree_on_visibility(mvcc_store, path):
 
     if path == "filter":
         plan = pl.Plan(kind="full_scan", residual=filters)
-        res, _ = ex.execute(q.HybridQuery(filters=filters), plan=plan)
+        res, _ = ex.execute(q.HybridQuery(where=filters), plan=plan)
         assert set(r.pk for r in res) == set(pks[mask].tolist())
         return
 
@@ -87,7 +87,7 @@ def test_all_read_paths_agree_on_visibility(mvcc_store, path):
     kind = "full_scan_nn" if path == "nn_scan" else "nra"
     plan = pl.Plan(kind=kind, residual=filters, ranks=ranks, k=k)
     res, _ = ex.execute(
-        q.HybridQuery(filters=filters, ranks=ranks, k=k), plan=plan)
+        q.HybridQuery(where=filters, ranks=ranks, k=k), plan=plan)
     score = np.sqrt(((cols["embedding"] - qv) ** 2).sum(1))
     score[~mask] = np.inf
     want = set(pks[np.argsort(score, kind="stable")[:k]].tolist())
@@ -103,7 +103,7 @@ def test_updated_values_are_served_not_stale(mvcc_store):
     for plan in (pl.Plan(kind="full_scan",
                          residual=[q.Range("time", 0, 100)]),):
         res, _ = ex.execute(
-            q.HybridQuery(filters=[q.Range("time", 0, 100)]), plan=plan)
+            q.HybridQuery(where=[q.Range("time", 0, 100)]), plan=plan)
         assert len(res) == len(pks)
         for r in res:
             assert float(r.values["time"]) == pytest.approx(
@@ -135,10 +135,10 @@ def test_execute_many_matches_single_executions(mvcc_store):
     store, _, _ = mvcc_store
     ex = Executor(store)
     rng = np.random.default_rng(5)
-    queries = [q.HybridQuery(filters=[q.Range("time", 0, 60)])]
+    queries = [q.HybridQuery(where=[q.Range("time", 0, 60)])]
     for i in range(7):
         queries.append(q.HybridQuery(
-            filters=[q.Range("time", 5.0 * i, 5.0 * i + 60)],
+            where=[q.Range("time", 5.0 * i, 5.0 * i + 60)],
             ranks=[q.VectorRank(
                 "embedding", rng.normal(size=16).astype(np.float32), 1.0)],
             k=10))
@@ -179,7 +179,7 @@ def test_explain_tree_for_every_plan_kind(kind):
 def test_explain_carries_cost_estimates(mvcc_store):
     store, _, _ = mvcc_store
     ex = Executor(store)
-    query = q.HybridQuery(filters=[q.Range("time", 0, 50)])
+    query = q.HybridQuery(where=[q.Range("time", 0, 50)])
     plan = pl.plan(ex.catalog, query)
     text = plan.describe()
     # planner-built trees carry non-zero per-operator block estimates
