@@ -1,49 +1,370 @@
-"""Ingestion-throughput study (paper §1: global in-memory vector index
-"caused the ingestion throughput to drop by as much as 75x").
+"""Ingestion study (paper §1/§3-§4: secondary-index maintenance never on
+the write critical path; global in-memory vector index "caused the
+ingestion throughput to drop by as much as 75x").
 
-ARCADE's background per-segment index build vs a synchronous global
-in-memory IVF on the write path.
+Four write-path designs over the same TRACY batches:
+
+  per_row       — the pre-refactor memtable: Python per-row/per-column
+                  appends on the critical path (kept here as the
+                  reference implementation the columnar rewrite is
+                  measured against).
+  columnar      — chunked columnar memtable, inline flush/compaction.
+  pipelined     — columnar + FlushScheduler: puts only append; sealed
+                  memtables flush and tiers compact from the work queue
+                  (deterministic drain; write stalls on compaction debt).
+  global_index  — Milvus/FAISS-style global IVF maintained synchronously
+                  with every put (the design the paper measured 75x
+                  slower).
+
+Workloads: write-heavy (pure ingest), mixed (interleaved puts + hybrid
+queries), and compaction index maintenance (merge vs rebuild).
+
+CLI:  python benchmarks/ingestion.py [--smoke] [--json PATH]
+                                     [--baseline PATH]
+With --baseline, machine-independent *ratios* are checked against the
+committed JSON (CI smoke job): fails if the columnar-vs-per-row put
+speedup regressed by more than 2x, or index merge stopped beating
+rebuild at compaction.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import sys
 import time
-from typing import Dict, List
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
+if __package__ in (None, ""):        # `python benchmarks/ingestion.py`
+    sys.path.insert(
+        0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
 from benchmarks import baselines as bl
 from benchmarks import tracy
+from repro.core import query as q
+from repro.core.executor import Executor
 from repro.core.lsm import LSMConfig, LSMStore
+from repro.core.types import ColumnType
 
 
-def run_ingestion(n_rows: int = 8000, batch: int = 256, mode: str = "arcade",
-                  seed: int = 0) -> Dict[str, float]:
-    cfg = tracy.TracyConfig(n_rows=0, seed=seed, dim=64)
-    data = tracy.TracyData(cfg)
-    store = LSMStore(tracy.tweet_schema(64), LSMConfig(flush_rows=2048))
-    writer = bl.GlobalIndexWriter(store, dim=64, rebuild_every=1024) \
-        if mode == "global_index" else None
+class PerRowMemTable:
+    """The seed's memtable, verbatim in spirit: Python lists, one loop
+    iteration per row *and* per column on the write path.  The benchmark
+    baseline — do not 'optimize'."""
+
+    def __init__(self, schema):
+        self.schema = schema
+        self._pk: List[int] = []
+        self._seqno: List[int] = []
+        self._tomb: List[bool] = []
+        self._cols: Dict[str, List[Any]] = {c.name: [] for c in
+                                            schema.columns}
+        self._latest: Dict[int, int] = {}
+        self._scan_cache = None
+
+    def __len__(self):
+        return len(self._pk)
+
+    @property
+    def approx_bytes(self):
+        n = len(self._pk)
+        per_row = 16
+        for c in self.schema.columns:
+            if c.ctype == ColumnType.VECTOR:
+                per_row += 4 * c.dim
+            elif c.ctype == ColumnType.SPATIAL:
+                per_row += 8
+            else:
+                per_row += 24
+        return n * per_row
+
+    def put_batch(self, pks, batch, seqno_start, tombstone=False):
+        self._scan_cache = None
+        seq = seqno_start
+        for i in range(len(pks)):
+            self._latest[int(pks[i])] = len(self._pk)
+            self._pk.append(int(pks[i]))
+            self._seqno.append(seq)
+            self._tomb.append(tombstone)
+            for c in self.schema.columns:
+                if tombstone:
+                    self._cols[c.name].append(
+                        np.zeros((c.dim,), np.float32)
+                        if c.ctype == ColumnType.VECTOR else
+                        np.zeros((2,), np.float32)
+                        if c.ctype == ColumnType.SPATIAL else
+                        0.0 if c.ctype == ColumnType.SCALAR else "")
+                else:
+                    self._cols[c.name].append(batch[c.name][i])
+            seq += 1
+        return seq
+
+    def get(self, key):
+        i = self._latest.get(int(key))
+        if i is None:
+            return None
+        row = {"_pk": self._pk[i], "_seqno": self._seqno[i],
+               "_tombstone": self._tomb[i]}
+        for name, vals in self._cols.items():
+            row[name] = vals[i]
+        return row
+
+    def scan_arrays(self):
+        if self._scan_cache is not None:
+            return self._scan_cache
+        pk = np.asarray(self._pk, np.int64)
+        seqno = np.asarray(self._seqno, np.int64)
+        tomb = np.asarray(self._tomb, bool)
+        cols = {}
+        for c in self.schema.columns:
+            vals = self._cols[c.name]
+            if c.ctype == ColumnType.VECTOR:
+                cols[c.name] = np.asarray(vals, np.float32).reshape(
+                    len(vals), c.dim) if vals else np.zeros((0, c.dim),
+                                                            np.float32)
+            elif c.ctype == ColumnType.SPATIAL:
+                cols[c.name] = np.asarray(vals, np.float32).reshape(
+                    len(vals), 2) if vals else np.zeros((0, 2), np.float32)
+            elif c.ctype == ColumnType.SCALAR:
+                cols[c.name] = np.asarray(vals, np.float64)
+            else:
+                cols[c.name] = np.asarray(vals, object)
+        self._scan_cache = (pk, seqno, tomb, cols)
+        return self._scan_cache
+
+
+def _make_store(mode: str, dim: int, flush_rows: int) -> LSMStore:
+    schema = tracy.tweet_schema(dim)
+    if mode == "per_row":
+        return LSMStore(schema, LSMConfig(flush_rows=flush_rows),
+                        memtable_factory=PerRowMemTable)
+    if mode == "pipelined":
+        return LSMStore(schema, LSMConfig(flush_rows=flush_rows,
+                                          pipeline=True))
+    if mode == "background":
+        return LSMStore(schema, LSMConfig(flush_rows=flush_rows,
+                                          pipeline=True, background=True))
+    return LSMStore(schema, LSMConfig(flush_rows=flush_rows))
+
+
+def run_ingestion(n_rows: int = 8000, batch: int = 256,
+                  mode: str = "columnar", seed: int = 0,
+                  flush_rows: int = 2048) -> Dict[str, float]:
+    """Write-heavy workload: pure ingest of ``n_rows`` in columnar
+    batches.  ``put_rows_per_s`` charges only the write critical path
+    (time inside ``put``, including any write stalls); ``rows_per_s`` is
+    end-to-end including the final drain/flush."""
+    data = tracy.TracyData(tracy.TracyConfig(n_rows=0, seed=seed, dim=64))
+    if mode == "global_index":
+        store = _make_store("columnar", 64, flush_rows)
+        writer = bl.GlobalIndexWriter(store, dim=64, rebuild_every=1024)
+    else:
+        store = _make_store(mode, 64, flush_rows)
+        writer = None
+    put_s = 0.0
     t0 = time.perf_counter()
     done = 0
     while done < n_rows:
         pks, b = data.batch(batch)
-        if writer is not None:
-            writer.put(pks, b)
-        else:
-            store.put(pks, b)
+        t1 = time.perf_counter()
+        (writer or store).put(pks, b)
+        put_s += time.perf_counter() - t1
         done += batch
+    store.flush()
+    if mode == "background":
+        store.scheduler.close()
     dt = time.perf_counter() - t0
-    return {"rows_per_s": n_rows / dt, "wall_s": dt}
+    return {"rows_per_s": n_rows / dt, "wall_s": dt,
+            "put_rows_per_s": n_rows / max(put_s, 1e-9), "put_s": put_s,
+            "stalls": float(store.metrics["stalls"]),
+            "flushes": float(store.metrics["flushes"]),
+            "compactions": float(store.metrics["compactions"])}
+
+
+def run_mixed(n_rows: int = 4000, n_ops: int = 120,
+              write_frac: float = 0.5, seed: int = 0) -> Dict[str, float]:
+    """Mixed read/write workload over the pipelined store: hybrid
+    queries (vector NN + scalar range) interleave with columnar puts;
+    reads see sealed-but-unflushed memtables, writes stall only on
+    compaction debt."""
+    cfg = tracy.TracyConfig(n_rows=n_rows, seed=seed, dim=64,
+                            flush_rows=1024)
+    data = tracy.TracyData(cfg)
+    store = LSMStore(tracy.tweet_schema(64),
+                     LSMConfig(flush_rows=1024, pipeline=True))
+    done = 0
+    while done < n_rows:
+        pks, b = data.batch(1024)
+        store.put(pks, b)
+        done += 1024
+    ex = Executor(store)
+    rng = np.random.default_rng(seed + 1)
+    reads = writes = rows = 0
+    t0 = time.perf_counter()
+    for _ in range(n_ops):
+        if rng.random() < write_frac:
+            pks, b = data.batch(128)
+            store.put(pks, b)
+            writes += 1
+            rows += 128
+        else:
+            lo = float(rng.uniform(0, 800))
+            qq = q.HybridQuery(
+                where=q.Range("time", lo, lo + 200),
+                ranks=[q.VectorRank("embedding", data.query_vec(), 1.0)],
+                k=10)
+            ex.execute(qq)
+            reads += 1
+    store.drain()
+    dt = time.perf_counter() - t0
+    return {"wall_s": dt, "ops_per_s": n_ops / dt,
+            "rows_per_s": rows / dt, "queries_per_s": reads / dt,
+            "reads": float(reads), "writes": float(writes),
+            "stalls": float(store.metrics["stalls"])}
+
+
+def run_merge_vs_rebuild(n_rows: int = 12000, seed: int = 0,
+                         repeats: int = 3) -> Dict[str, float]:
+    """Index maintenance at compaction: identical data ingested twice,
+    once with mergeable per-segment indexes, once with the pre-refactor
+    rebuild-from-scratch path; compares the compaction-time index cost.
+    Best-of-``repeats`` per path — single-compaction timings are noisy
+    at smoke scale."""
+    out: Dict[str, float] = {}
+    for label, merge in (("merge", True), ("rebuild", False)):
+        best = None
+        for rep in range(max(1, repeats)):
+            data = tracy.TracyData(tracy.TracyConfig(n_rows=0, seed=seed,
+                                                     dim=64))
+            store = LSMStore(tracy.tweet_schema(64),
+                             LSMConfig(flush_rows=1024, fanout=4,
+                                       merge_indexes=merge))
+            done = 0
+            while done < n_rows:
+                pks, b = data.batch(512)
+                store.put(pks, b)
+                done += 512
+            store.flush()
+            cost = store.metrics["index_merge_s"] + \
+                store.metrics["index_rebuild_s"]
+            best = cost if best is None else min(best, cost)
+            out[f"{label}_compactions"] = \
+                float(store.metrics["compactions"])
+        out[f"{label}_s"] = best
+    out["merge_speedup"] = out["rebuild_s"] / max(out["merge_s"], 1e-9)
+    return out
+
+
+def _warmup() -> None:
+    """Compile/trace the kernels once so the first timed section isn't
+    charged for JAX warm-up."""
+    run_ingestion(n_rows=1024, batch=256, flush_rows=512, mode="columnar")
+
+
+def bench_json(scale: float = 1.0) -> Dict[str, Any]:
+    """Structured results for --json / the CI smoke check."""
+    _warmup()
+    n = max(2048, int(8000 * scale))
+    wh: Dict[str, Any] = {}
+    for mode in ("per_row", "columnar", "pipelined", "global_index"):
+        wh[mode] = run_ingestion(n_rows=n, mode=mode)
+    wh["put_speedup_vs_per_row"] = (
+        wh["pipelined"]["put_rows_per_s"] / wh["per_row"]["put_rows_per_s"])
+    wh["e2e_speedup_vs_per_row"] = (
+        wh["columnar"]["rows_per_s"] / wh["per_row"]["rows_per_s"])
+    return {
+        "write_heavy": wh,
+        "mixed": run_mixed(n_rows=max(2048, int(4000 * scale)),
+                           n_ops=max(40, int(120 * scale))),
+        "compaction": run_merge_vs_rebuild(
+            n_rows=max(6144, int(12000 * scale))),
+    }
 
 
 def bench(scale: float = 1.0) -> List[str]:
-    n = int(8000 * scale)
+    """CSV rows for benchmarks/run.py."""
+    return csv_from_json(bench_json(scale))
+
+
+def csv_from_json(r: Dict[str, Any]) -> List[str]:
+    wh, mixed, comp = r["write_heavy"], r["mixed"], r["compaction"]
     rows = []
-    a = run_ingestion(n_rows=n, mode="arcade")
-    g = run_ingestion(n_rows=n, mode="global_index")
-    rows.append(f"ingest_arcade,{1e6 / a['rows_per_s']:.1f},"
-                f"rows_per_s={a['rows_per_s']:.0f}")
-    rows.append(f"ingest_global_index,{1e6 / g['rows_per_s']:.1f},"
-                f"rows_per_s={g['rows_per_s']:.0f};"
-                f"slowdown={a['rows_per_s'] / g['rows_per_s']:.1f}x")
+    for mode in ("per_row", "columnar", "pipelined", "global_index"):
+        m = wh[mode]
+        rows.append(
+            f"ingest_{mode},{1e6 / m['rows_per_s']:.1f},"
+            f"rows_per_s={m['rows_per_s']:.0f};"
+            f"put_rows_per_s={m['put_rows_per_s']:.0f}")
+    rows.append(f"ingest_put_speedup,0.0,"
+                f"{wh['put_speedup_vs_per_row']:.1f}x_vs_per_row")
+    rows.append(f"ingest_mixed,{1e6 / mixed['ops_per_s']:.1f},"
+                f"rows_per_s={mixed['rows_per_s']:.0f};"
+                f"queries_per_s={mixed['queries_per_s']:.1f}")
+    rows.append(f"ingest_index_merge,{comp['merge_s'] * 1e6:.0f},"
+                f"rebuild_us={comp['rebuild_s'] * 1e6:.0f};"
+                f"speedup={comp['merge_speedup']:.1f}x")
     return rows
+
+
+def check_baseline(result: Dict[str, Any], baseline: Dict[str, Any]
+                   ) -> List[str]:
+    """Machine-independent regression gate: ratios may not degrade by
+    more than 2x vs the committed baseline, and index merge must still
+    beat rebuild at compaction."""
+    errors = []
+    got = result["write_heavy"]["put_speedup_vs_per_row"]
+    want = baseline["write_heavy"]["put_speedup_vs_per_row"]
+    if got < want / 2.0:
+        errors.append(f"put speedup vs per-row regressed >2x: "
+                      f"{got:.1f}x (baseline {want:.1f}x)")
+    if got < 5.0:
+        errors.append(f"put speedup vs per-row below the 5x floor: "
+                      f"{got:.1f}x")
+    m = result["compaction"]
+    if m["merge_s"] >= m["rebuild_s"]:
+        errors.append(f"index merge no faster than rebuild: "
+                      f"{m['merge_s']:.4f}s vs {m['rebuild_s']:.4f}s")
+    base_spd = baseline["compaction"]["merge_speedup"]
+    if m["merge_speedup"] < base_spd / 2.0:
+        errors.append(f"index merge speedup regressed >2x: "
+                      f"{m['merge_speedup']:.1f}x (baseline "
+                      f"{base_spd:.1f}x)")
+    return errors
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fast run (CI)")
+    ap.add_argument("--json", default=None,
+                    help="write structured results to PATH ('-' = stdout)")
+    ap.add_argument("--baseline", default=None,
+                    help="committed baseline JSON to check ratios against")
+    args = ap.parse_args(argv)
+    scale = 0.33 if args.smoke else args.scale
+    result = bench_json(scale)
+    text = json.dumps(result, indent=2, sort_keys=True)
+    if args.json == "-":
+        print(text)
+    elif args.json:
+        with open(args.json, "w") as f:
+            f.write(text + "\n")
+    else:
+        print(text)
+    if args.baseline:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        errors = check_baseline(result, baseline)
+        for e in errors:
+            print(f"REGRESSION: {e}", file=sys.stderr)
+        if errors:
+            return 1
+        print("baseline check passed", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,12 +4,17 @@ Prints ``name,us_per_call,derived`` CSV (assignment contract).
   fig4_*   — dynamic workloads, write/read-heavy (paper Fig. 4)
   tab1_*   — hybrid query latency vs baseline strategies (paper Table 1)
   fig5a/b_* — continuous queries: budget / #queries sweeps (paper Fig. 5)
-  ingest_* — ingestion throughput vs global in-memory index (paper §1)
+  ingest_* — ingestion throughput: columnar/pipelined write path vs the
+             per-row baseline and the global in-memory index (paper §1),
+             mixed read/write, index merge-vs-rebuild at compaction
   mq_*     — batched execute_many vs sequential execute throughput
 
 ``--scale`` shrinks/grows the workload (CPU container default 1.0).
+``--json PATH`` additionally writes structured results for every section
+that exposes a ``bench_json(scale)`` hook (ingestion does).
 """
 import argparse
+import json
 import sys
 import time
 
@@ -19,6 +24,8 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--only", default=None,
                     help="comma list: fig4,tab1,fig5,ingest,mq")
+    ap.add_argument("--json", default=None,
+                    help="write structured per-section results to PATH")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -26,22 +33,34 @@ def main() -> None:
                             hybrid_latency, ingestion, multi_query,
                             pq_study)
     sections = [
-        ("tab1", hybrid_latency.bench),
-        ("fig4", dynamic_workload.bench),
-        ("fig5", continuous_bench.bench),
-        ("ingest", ingestion.bench),
-        ("pq", pq_study.bench),
-        ("mq", multi_query.bench),
+        ("tab1", hybrid_latency),
+        ("fig4", dynamic_workload),
+        ("fig5", continuous_bench),
+        ("ingest", ingestion),
+        ("pq", pq_study),
+        ("mq", multi_query),
     ]
+    structured = {}
     print("name,us_per_call,derived")
-    for name, fn in sections:
+    for name, mod in sections:
         if only and name not in only:
             continue
         t0 = time.time()
-        for row in fn(scale=args.scale):
+        if args.json and hasattr(mod, "bench_json") and \
+                hasattr(mod, "csv_from_json"):
+            structured[name] = mod.bench_json(scale=args.scale)
+            rows = mod.csv_from_json(structured[name])
+        else:
+            rows = mod.bench(scale=args.scale)
+        for row in rows:
             print(row, flush=True)
         print(f"# section {name} took {time.time() - t0:.1f}s",
               file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(structured, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# structured results -> {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -165,13 +165,23 @@ class Table:
 
     # -------------------------------------------------------------- write
     def put(self, pks: Sequence[int], batch: Dict[str, Any]) -> None:
+        """Ingest one columnar batch: dict of numpy arrays, forwarded to
+        the store whole — the write path never materializes rows."""
         self.store.put(pks, batch)
+
+    # ``insert`` is the SQL-flavored alias; both forward batches as-is
+    insert = put
 
     def delete(self, pks: Sequence[int]) -> None:
         self.store.delete(pks)
 
     def flush(self) -> None:
         self.store.flush()
+
+    def drain(self) -> None:
+        """Deterministically finish queued flush/compaction work (only
+        meaningful with ``LSMConfig(pipeline=True)``)."""
+        self.store.drain()
 
     # --------------------------------------------------------------- read
     def get(self, pk: int) -> Optional[Dict[str, Any]]:

@@ -112,12 +112,52 @@ class MergedSortedAccess(SortedAccess):
         return d[:cut], self._key_fn(sid, r[:cut])
 
 
+def merge_sorted_runs(vals_list: List[np.ndarray],
+                      rows_list: List[np.ndarray]
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """Vectorized k-way merge of pre-sorted (value, row) runs.
+
+    Each run is merged in via searchsorted rank arithmetic — the final
+    position of ``a[i]`` is ``i + #{b < a[i]}`` — which is O(n log m)
+    with no Python-level per-element loop (the sorted-run analog of the
+    LSM merge itself; used by the mergeable scalar index).
+    """
+    pairs = [(v, r) for v, r in zip(vals_list, rows_list) if len(v)]
+    if not pairs:
+        return np.zeros(0, np.float64), np.zeros(0, np.int64)
+    av, ar = pairs[0]
+    for bv, br in pairs[1:]:
+        pa = np.searchsorted(bv, av, side="left") + np.arange(len(av))
+        pb = np.searchsorted(av, bv, side="right") + np.arange(len(bv))
+        ov = np.empty(len(av) + len(bv), av.dtype)
+        orr = np.empty(len(ar) + len(br), ar.dtype)
+        ov[pa], ov[pb] = av, bv
+        orr[pa], orr[pb] = ar, br
+        av, ar = ov, orr
+    return av, ar
+
+
 class SecondaryIndex(abc.ABC):
     kind: str = "abstract"
 
     @abc.abstractmethod
     def build(self, segment, column) -> None:
         ...
+
+    def merge(self, parts: List["SecondaryIndex"], merged_seg, column,
+              row_maps: List[np.ndarray]) -> None:
+        """Compaction-aware construction (paper §4): populate this index
+        for ``merged_seg`` from the source segments' already-built
+        indexes instead of rebuilding from raw columns.
+
+        ``parts`` are the source indexes (one per merged segment, same
+        order as the merge) and ``row_maps[i]`` maps source segment i's
+        row ids to merged rows (-1 = dropped by the merge).  The default
+        falls back to a fresh ``build`` — subclasses override with a
+        cheaper structural merge (posting-list remap, sorted-run merge,
+        Z-order re-sort, centroid reuse).
+        """
+        self.build(merged_seg, column)
 
     def bitmap(self, segment, predicate) -> np.ndarray:
         raise NotImplementedError(f"{self.kind} has no bitmap access")

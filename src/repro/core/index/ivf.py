@@ -74,7 +74,16 @@ class IVFIndex(SecondaryIndex):
             return
         k = max(1, int(math.sqrt(n)))
         self.centroids = kmeans(vecs, k)
-        assign = kops.assign_nearest(vecs, self.centroids)
+        self._group(vecs, kops.assign_nearest(vecs, self.centroids))
+        if self.use_pq:
+            self._build_pq(vecs)
+
+    def _group(self, vecs: np.ndarray, assign: np.ndarray) -> None:
+        """Group vectors into posting lists by centroid assignment and
+        compute the per-centroid radii (triangle-inequality lower bound
+        d(q, v) >= d(q, c) - radius(c) for sorted NRA-exact access) — all
+        vectorized, no per-centroid kernel loop."""
+        n = len(vecs)
         order = np.argsort(assign, kind="stable")
         self.post_rows = order.astype(np.int64)
         self.post_vecs = vecs[order]
@@ -82,17 +91,76 @@ class IVFIndex(SecondaryIndex):
         self.post_offsets = np.zeros(len(self.centroids) + 1, np.int64)
         np.cumsum(counts, out=self.post_offsets[1:])
         self.blocks_total = (n + BLOCK_ROWS - 1) // BLOCK_ROWS
-        # per-centroid radius: enables the triangle-inequality lower bound
-        # d(q, v) >= d(q, c) - radius(c) for sorted (NRA-exact) access
+        diff = self.post_vecs - self.centroids[assign[order]]
+        d = np.sqrt(np.maximum((diff * diff).sum(axis=1), 0.0))
         self.radii = np.zeros(len(self.centroids), np.float32)
-        for c in range(len(self.centroids)):
-            s = slice(int(self.post_offsets[c]), int(self.post_offsets[c + 1]))
-            if s.stop > s.start:
-                d2 = kops.l2_distances(self.centroids[c][None, :],
-                                       self.post_vecs[s])[0]
-                self.radii[c] = float(np.sqrt(max(d2.max(), 0.0)))
+        nonempty = counts > 0
+        if nonempty.any():
+            starts = self.post_offsets[:-1][nonempty]
+            self.radii[nonempty] = np.maximum.reduceat(d, starts)
+
+    def merge(self, parts, merged_seg, column, row_maps) -> None:
+        """Compaction-aware merge (paper §4): reuse the parts' centroid
+        tables (their union) instead of re-running k-means, and reassign
+        only the surviving rows in one vectorized ``assign_nearest`` —
+        index maintenance cost at compaction is a single assignment pass,
+        not a full rebuild."""
+        vecs = np.asarray(merged_seg.columns[column.name], np.float32)
+        n = len(vecs)
+        if n == 0:
+            self.centroids = np.zeros((1, column.dim), np.float32)
+            self.post_rows = np.zeros((0,), np.int64)
+            self.post_vecs = np.zeros((0, column.dim), np.float32)
+            self.post_offsets = np.zeros((2,), np.int64)
+            self.radii = np.zeros(1, np.float32)
+            return
+        usable = [p for p in parts
+                  if getattr(p, "centroids", None) is not None
+                  and len(p.centroids)]
+        if not usable:
+            self.build(merged_seg, column)
+            return
+        # keep the centroid table at the rebuild-equivalent size so the
+        # n_probe/#lists ratio (and with it recall) is unchanged: each
+        # part contributes its highest-occupancy centroids, proportional
+        # to its share of the surviving rows
+        target_k = max(1, int(math.sqrt(n)))
+        total = sum(len(p.post_rows) for p in usable) or 1
+        kept_c, kept_n = [], []
+        for p in usable:
+            quota = max(1, round(target_k * len(p.post_rows) / total))
+            counts = np.diff(p.post_offsets)
+            top = np.sort(np.argsort(counts)[::-1][:quota])
+            kept_c.append(p.centroids[top])
+            kept_n.append(counts[top])
+        cents = np.concatenate(kept_c).astype(np.float32)
+        if len(cents) > target_k:
+            # quotas round up, so trim the lowest-occupancy centroids
+            # globally — never a positional tail (that would erase one
+            # part's whole contribution)
+            occ = np.concatenate(kept_n)
+            cents = cents[np.sort(np.argsort(occ)[::-1][:target_k])]
+        self.centroids = cents
+        self._group(vecs, kops.assign_nearest(vecs, self.centroids))
         if self.use_pq:
-            self._build_pq(vecs)
+            donor = max((p for p in parts
+                         if getattr(p, "codebooks", None) is not None),
+                        key=lambda p: len(p.post_rows), default=None)
+            if donor is None:
+                self._build_pq(vecs)
+            else:
+                self._reencode_pq(vecs, donor.codebooks)
+
+    def _reencode_pq(self, vecs: np.ndarray, codebooks: np.ndarray) -> None:
+        """PQ codebook reuse: keep a donor part's codebooks and re-encode
+        the merged vectors (one assignment per subspace, no k-means)."""
+        m, _, dsub = codebooks.shape
+        self.pq_m = m
+        self.codebooks = codebooks
+        codes = [kops.assign_nearest(vecs[:, j * dsub:(j + 1) * dsub],
+                                     codebooks[j]) for j in range(m)]
+        codes = np.stack(codes, axis=1).astype(np.uint8)
+        self.codes = codes[self.post_rows]
 
     def _build_pq(self, vecs: np.ndarray) -> None:
         n, d = vecs.shape

@@ -11,7 +11,8 @@ from typing import Any, Optional
 
 import numpy as np
 
-from repro.core.index.base import ExactSortedAccess, SecondaryIndex
+from repro.core.index.base import (ExactSortedAccess, SecondaryIndex,
+                                   merge_sorted_runs)
 from repro.core.types import BLOCK_ROWS
 
 
@@ -30,6 +31,26 @@ class ScalarIndex(SecondaryIndex):
         self.values = vals[order]
         self.rows = order.astype(np.int64)
         if len(vals):
+            self.vmin = float(self.values[0])
+            self.vmax = float(self.values[-1])
+
+    def merge(self, parts, merged_seg, column, row_maps) -> None:
+        """Sorted-run merge: each part's (value, row) mapping is already
+        value-sorted; remap rows through the compaction row maps, drop
+        shadowed entries, and merge the runs — no re-sort of the merged
+        column."""
+        vals_list, rows_list = [], []
+        for part, rmap in zip(parts, row_maps):
+            if part.values is None or not len(part.values):
+                continue
+            new_rows = rmap[part.rows]
+            keep = new_rows >= 0
+            vals_list.append(part.values[keep])
+            rows_list.append(new_rows[keep])
+        self.values, self.rows = merge_sorted_runs(vals_list, rows_list)
+        self.values = np.asarray(self.values, np.float64)
+        self.rows = np.asarray(self.rows, np.int64)
+        if len(self.values):
             self.vmin = float(self.values[0])
             self.vmax = float(self.values[-1])
 

@@ -41,6 +41,18 @@ def morton_codes(xy: np.ndarray, bbox: Tuple[float, float, float, float]
     return (spread(qx) | (spread(qy) << np.uint32(1))).astype(np.uint32)
 
 
+def _block_bboxes(points: np.ndarray) -> np.ndarray:
+    """Per-block (xmin, ymin, xmax, ymax) zone maps, vectorized via
+    ``reduceat`` over BLOCK_ROWS strides (no per-block Python loop)."""
+    n = len(points)
+    if n == 0:
+        return np.zeros((0, 4), np.float32)
+    starts = np.arange(0, n, BLOCK_ROWS)
+    mins = np.minimum.reduceat(points, starts, axis=0)
+    maxs = np.maximum.reduceat(points, starts, axis=0)
+    return np.concatenate([mins, maxs], axis=1).astype(np.float32)
+
+
 class ZOrderIndex(SecondaryIndex):
     kind = "zorder"
 
@@ -63,13 +75,35 @@ class ZOrderIndex(SecondaryIndex):
         order = np.argsort(z, kind="stable")
         self.rows = order.astype(np.int64)
         self.points = pts[order]
-        nb = (len(pts) + BLOCK_ROWS - 1) // BLOCK_ROWS
-        bbs = np.zeros((nb, 4), np.float32)
-        for b in range(nb):
-            blk = self.points[b * BLOCK_ROWS:(b + 1) * BLOCK_ROWS]
-            bbs[b] = (blk[:, 0].min(), blk[:, 1].min(),
-                      blk[:, 0].max(), blk[:, 1].max())
-        self.block_bbox = bbs
+        self.block_bbox = _block_bboxes(self.points)
+
+    def merge(self, parts, merged_seg, column, row_maps) -> None:
+        """Z-order array merge: gather the surviving (row, point) pairs
+        from the parts' already-materialized z-ordered arrays, re-quantize
+        under the union bounding box, and re-sort the codes — the raw
+        column is never re-read and the zone maps rebuild via reduceat."""
+        pts_list, rows_list = [], []
+        for part, rmap in zip(parts, row_maps):
+            if part.rows is None or not len(part.rows):
+                continue
+            new_rows = rmap[part.rows]
+            keep = new_rows >= 0
+            pts_list.append(part.points[keep])
+            rows_list.append(new_rows[keep])
+        if not pts_list:
+            self.rows = np.zeros((0,), np.int64)
+            self.points = np.zeros((0, 2), np.float32)
+            self.block_bbox = np.zeros((0, 4), np.float32)
+            return
+        pts = np.concatenate(pts_list)
+        rows = np.concatenate(rows_list)
+        self.bbox = (float(pts[:, 0].min()), float(pts[:, 1].min()),
+                     float(pts[:, 0].max()), float(pts[:, 1].max()))
+        z = morton_codes(pts, self.bbox)
+        order = np.argsort(z, kind="stable")
+        self.rows = rows[order].astype(np.int64)
+        self.points = pts[order]
+        self.block_bbox = _block_bboxes(self.points)
 
     # --------------------------------------------------------------- range
     def _overlapping_blocks(self, rect) -> np.ndarray:

@@ -54,6 +54,38 @@ class InvertedTextIndex(SecondaryIndex):
             order = np.argsort(rows)
             self.postings[term] = (rows[order], tfs[order])
 
+    def merge(self, parts, merged_seg, column, row_maps) -> None:
+        """Posting-list merge: remap each part's postings through the
+        compaction row maps (shadowed docs fall out as -1), concatenate
+        per term, and re-sort by row id.  No re-tokenization — the cost
+        is O(vocabulary + postings), not O(corpus tokens)."""
+        self.n_docs = merged_seg.n_rows
+        doc_len = np.zeros(self.n_docs, np.float32)
+        acc: Dict[str, List[Tuple[np.ndarray, np.ndarray]]] = {}
+        for part, rmap in zip(parts, row_maps):
+            if part.doc_len is not None and len(part.doc_len):
+                survived = rmap >= 0
+                # every merged row comes from exactly one part (the
+                # winning version), so this scatter never collides
+                doc_len[rmap[survived]] = part.doc_len[survived]
+            for term, (rows, tfs) in part.postings.items():
+                new_rows = rmap[rows]
+                keep = new_rows >= 0
+                if keep.any():
+                    acc.setdefault(term, []).append(
+                        (new_rows[keep], tfs[keep]))
+        self.doc_len = doc_len
+        self.avg_len = float(doc_len.mean()) if self.n_docs else 1.0
+        self.postings = {}
+        for term, chunks in acc.items():
+            if len(chunks) == 1:
+                rows, tfs = chunks[0]
+            else:
+                rows = np.concatenate([c[0] for c in chunks])
+                tfs = np.concatenate([c[1] for c in chunks])
+            order = np.argsort(rows)
+            self.postings[term] = (rows[order], tfs[order])
+
     # ------------------------------------------------------------- access
     def bitmap(self, segment, predicate) -> np.ndarray:
         mask = np.zeros(segment.n_rows, bool)

@@ -2,44 +2,56 @@
 compaction, with the unified secondary index framework built at flush /
 compaction time (paper §3-§4).
 
-Write path:  put/delete -> memtable (O(1)); at ``flush_rows`` the memtable
-becomes a level-0 Segment and all declared secondary indexes are built
-*with* the segment (never on the ingest critical path — the paper's
-central ingestion claim vs global in-memory vector indexes).
+Write path:  put/delete forward whole *columnar* batches to the chunked
+memtable (O(#columns) per batch); the FlushScheduler seals full memtables
+and turns them into level-0 Segments off the write critical path, building
+all declared secondary indexes *with* the segment (the paper's central
+ingestion claim vs global in-memory vector indexes).  Compaction *merges*
+the per-segment indexes of the input tier (posting remap / sorted-run
+merge / Z-order re-sort / centroid reuse) instead of rebuilding them.
 
-Read path:   point gets via memtable -> zone-map-pruned segments (newest
-seqno wins); query execution lives in core.executor / core.nra driven by
-the optimizer.
+Read path:   point gets via memtables (active + sealed) -> zone-map-pruned
+segments (newest seqno wins); query execution lives in core.executor /
+core.nra driven by the optimizer.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import memtable as mt
 from repro.core import segment as seg_lib
-from repro.core.types import Column, ColumnType, IndexKind, Schema
+from repro.core.flush import FlushScheduler
+from repro.core.types import Column, Schema
 
 
 @dataclasses.dataclass
 class LSMConfig:
     flush_rows: int = 4096
+    flush_bytes: int = 0          # optional byte threshold (0 = rows only)
     fanout: int = 4               # size-tiered: merge when a tier has this many
     max_levels: int = 6
     build_indexes: bool = True
+    merge_indexes: bool = True    # compaction merges indexes vs rebuilds
+    pipeline: bool = False        # decouple seal from flush/compaction
+    max_sealed: int = 4           # write-stall threshold (pipelined modes)
+    background: bool = False      # drain on a worker thread (benchmarks)
 
 
 class LSMStore:
     def __init__(self, schema: Schema, cfg: Optional[LSMConfig] = None,
-                 index_factory: Optional[Callable[[Column], Any]] = None):
+                 index_factory: Optional[Callable[[Column], Any]] = None,
+                 memtable_factory: Optional[Callable[[Schema], Any]] = None):
         from repro.core.index import (GlobalIndexSet,
                                       default_index_factory)  # lazy: no cycle
         self.schema = schema
         self.cfg = cfg or LSMConfig()
-        self.memtable = mt.MemTable(schema)
+        self._memtable_factory = memtable_factory or mt.MemTable
+        self.memtable = self._memtable_factory(schema)
+        self.sealed: List[Any] = []      # full memtables awaiting flush
         self.segments: List[seg_lib.Segment] = []
         self._seqno = 0
         self._index_factory = index_factory or default_index_factory
@@ -49,56 +61,154 @@ class LSMStore:
         self.unique_pks = True
         self._seen_max_pk = -1
         self.metrics = {"flushes": 0, "compactions": 0, "puts": 0,
-                        "deletes": 0, "flush_s": 0.0, "compact_s": 0.0,
-                        "index_build_s": 0.0}
+                        "deletes": 0, "noop_deletes": 0, "seals": 0,
+                        "stalls": 0, "flush_s": 0.0, "compact_s": 0.0,
+                        "index_build_s": 0.0, "index_merge_s": 0.0,
+                        "index_rebuild_s": 0.0, "index_merges": 0,
+                        "index_rebuilds": 0, "vis_extends": 0}
         self._on_delta: List[Callable] = []   # continuous-query hooks
+        self._mt_epoch = 0                    # bumps on any memtable change
+        self._mt_cache = None                 # (epoch, concat scan arrays)
+        self.scheduler = FlushScheduler(self)
 
     # ------------------------------------------------------------------ write
     def put(self, pks: Sequence[int], batch: Dict[str, Any]) -> None:
-        lo = min(pks) if len(pks) else 0
-        if lo <= self._seen_max_pk:
-            self.unique_pks = False
-        if len(pks):
-            self._seen_max_pk = max(self._seen_max_pk, max(pks))
+        """Ingest one columnar batch: O(#columns) array appends into the
+        active memtable; flush/compaction/indexing happen off this path
+        via the scheduler.  Empty batches are a complete no-op (no delta
+        hooks, no metrics)."""
+        pks = np.asarray(pks, np.int64)
+        if len(pks) == 0:
+            return
+        self._track_unique(pks)
         self._seqno = self.memtable.put_batch(pks, batch, self._seqno)
+        self._mt_epoch += 1
         self.metrics["puts"] += len(pks)
-        self._notify_delta(pks, batch, deleted=False)
-        self._maybe_flush()
+        if self._on_delta:
+            # hand hooks the memtable's canonical numpy chunk (zero-copy,
+            # already validated) — never per-row dicts
+            cbatch = {name: chunks[-1] for name, chunks
+                      in self.memtable._col_chunks.items()} \
+                if isinstance(self.memtable, mt.MemTable) else batch
+            self._notify_delta(pks, cbatch, deleted=False)
+        self.scheduler.on_write()
 
     def delete(self, pks: Sequence[int]) -> None:
+        """Tombstone the given pks.  Deletes of never-written keys are
+        no-ops: they write nothing and keep the ``unique_pks`` fast path
+        (visibility resolution stays skippable)."""
+        pks = np.asarray(pks, np.int64)
+        if len(pks) == 0:
+            return
+        exists = self._contains_any_version(pks)
+        if not exists.any():
+            self.metrics["noop_deletes"] += len(pks)
+            return
+        live = pks[exists]
         self.unique_pks = False
-        self._seqno = self.memtable.put_batch(pks, {}, self._seqno,
+        self._seqno = self.memtable.put_batch(live, {}, self._seqno,
                                               tombstone=True)
-        self.metrics["deletes"] += len(pks)
-        self._notify_delta(pks, None, deleted=True)
-        self._maybe_flush()
+        self._mt_epoch += 1
+        self.metrics["deletes"] += len(live)
+        self.metrics["noop_deletes"] += int(len(pks) - len(live))
+        self._notify_delta(live, None, deleted=True)
+        self.scheduler.on_write()
+
+    def _track_unique(self, pks: np.ndarray) -> None:
+        if self.unique_pks:
+            if int(pks.min()) <= self._seen_max_pk:
+                self.unique_pks = False
+            elif len(pks) > 1 and not (np.diff(pks) > 0).all() and \
+                    len(np.unique(pks)) != len(pks):
+                self.unique_pks = False
+        self._seen_max_pk = max(self._seen_max_pk, int(pks.max()))
+
+    def _contains_any_version(self, pks: np.ndarray) -> np.ndarray:
+        """Bool mask: does any version (including tombstones) of each pk
+        exist in the store?  Vectorized over segments; memtables checked
+        via their O(1) key maps."""
+        out = np.zeros(len(pks), bool)
+        if self._seen_max_pk < 0:
+            return out
+        cand = np.nonzero(pks <= self._seen_max_pk)[0]
+        if not len(cand):
+            return out
+        for m in (self.memtable, *self.sealed):
+            if len(m):
+                latest = m._latest
+                for i in cand:
+                    if int(pks[i]) in latest:
+                        out[i] = True
+        rest = cand[~out[cand]]
+        for seg in self.segments:
+            if not len(rest):
+                break
+            if seg.n_rows == 0:
+                continue
+            pos = np.minimum(np.searchsorted(seg.pk, pks[rest]),
+                             seg.n_rows - 1)
+            hit = seg.pk[pos] == pks[rest]
+            out[rest[hit]] = True
+            rest = rest[~hit]
+        return out
 
     def on_delta(self, fn: Callable) -> None:
-        """Register a hook called with (pks, batch|None, deleted) on writes
-        — drives incremental view maintenance and ASYNC queries."""
+        """Register a hook called with ``(pks, batch, deleted)`` on writes
+        — ``pks`` an int64 array and ``batch`` a columnar dict of numpy
+        arrays (None for deletes).  Drives incremental view maintenance
+        and ASYNC continuous queries."""
         self._on_delta.append(fn)
 
     def _notify_delta(self, pks, batch, deleted: bool) -> None:
         for fn in self._on_delta:
             fn(pks, batch, deleted)
 
-    def _maybe_flush(self) -> None:
-        if len(self.memtable) >= self.cfg.flush_rows:
-            self.flush()
+    # ------------------------------------------------- flush / compaction
+    def seal(self) -> bool:
+        """Move the active memtable onto the flush queue (O(1) swap)."""
+        if not len(self.memtable):
+            return False
+        self.sealed.append(self.memtable)
+        self.memtable = self._memtable_factory(self.schema)
+        self._mt_epoch += 1
+        self.metrics["seals"] += 1
+        return True
 
     def flush(self) -> Optional[seg_lib.Segment]:
-        if not len(self.memtable):
-            return None
+        """Seal the active memtable and drain all queued work; returns
+        the segment the active memtable became (None if it was empty)."""
+        sealed_now = self.seal()
+        segs = self.scheduler.drain()
+        return segs[-1] if (segs and sealed_now) else None
+
+    def drain(self) -> List[seg_lib.Segment]:
+        """Deterministically process all queued flushes + compactions
+        (pipelined mode); returns the segments flushed."""
+        return self.scheduler.drain()
+
+    def _flush_sealed(self) -> seg_lib.Segment:
+        """Turn the oldest sealed memtable into a level-0 segment with
+        its indexes, then extend the visibility cache incrementally (a
+        flush relocates versions without changing any pk's winner)."""
+        from repro.core import visibility as vis_lib
+        mtab = self.sealed[0]
         t0 = time.perf_counter()
-        pk, seqno, tomb, cols = self.memtable.scan_arrays()
+        pk, seqno, tomb, cols = mtab.scan_arrays()
         seg = seg_lib.Segment(self.schema, pk, seqno, tomb, cols, level=0)
         self._build_indexes(seg)
+        pre_key = (self._seqno, tuple(s.seg_id for s in self.segments))
         self.segments.append(seg)
+        self.sealed.pop(0)
+        self._mt_epoch += 1
+        # explicit invalidation too: `+= 1` from two threads can lose an
+        # update (background mode); a None cache always rebuilds
+        self._mt_cache = None
         self.global_index.on_new_segment(seg)
-        self.memtable = mt.MemTable(self.schema)
+        if vis_lib.extend_cache_on_flush(self, pre_key, seg, len(pk)):
+            self.metrics["vis_extends"] += 1
+        seg.sort_order = None          # one-shot; don't retain 8B/row
         self.metrics["flushes"] += 1
         self.metrics["flush_s"] += time.perf_counter() - t0
-        self._maybe_compact()
         return seg
 
     def _build_indexes(self, seg: seg_lib.Segment) -> None:
@@ -113,32 +223,70 @@ class LSMStore:
                 seg.indexes[col.name] = idx
         self.metrics["index_build_s"] += time.perf_counter() - t0
 
-    def _maybe_compact(self) -> None:
-        """Size-tiered compaction: when ``fanout`` segments accumulate at a
-        level, merge them into one segment at level+1 (rebuilding the
-        per-segment indexes for the merged run)."""
+    def _compactable_level(self) -> Optional[int]:
+        """Lowest level whose tier reached the size-tiered fanout."""
+        counts: Dict[int, int] = {}
+        for s in self.segments:
+            counts[s.level] = counts.get(s.level, 0) + 1
         for level in range(self.cfg.max_levels):
-            tier = [s for s in self.segments if s.level == level]
-            if len(tier) < self.cfg.fanout:
+            if counts.get(level, 0) >= self.cfg.fanout:
+                return level
+        return None
+
+    def _compact_level(self, level: int) -> seg_lib.Segment:
+        """Merge one full tier into a level+1 segment, *merging* the
+        per-segment indexes through the compaction row maps instead of
+        rebuilding them (paper §4's compaction-aware maintenance)."""
+        tier = [s for s in self.segments if s.level == level]
+        t0 = time.perf_counter()
+        bottom = level + 1 >= self.cfg.max_levels or not any(
+            s.level > level for s in self.segments)
+        merged, row_maps = seg_lib.merge_segments(
+            self.schema, tier, level + 1, drop_tombstones=bottom,
+            return_maps=True)
+        merged.sort_order = None       # identity by construction; drop it
+        if self.cfg.build_indexes:
+            self._merge_or_rebuild_indexes(tier, merged, row_maps)
+        self.segments = [s for s in self.segments if s not in tier]
+        self.segments.append(merged)
+        for s in tier:
+            self.global_index.on_drop_segment(s.seg_id)
+        self.global_index.on_new_segment(merged)
+        self.metrics["compactions"] += 1
+        self.metrics["compact_s"] += time.perf_counter() - t0
+        return merged
+
+    def _merge_or_rebuild_indexes(self, tier, merged, row_maps) -> None:
+        """Index maintenance at compaction: structural merge when every
+        input segment has a compatible built index, fresh rebuild
+        otherwise; both paths are timed separately in ``metrics`` so the
+        merge-vs-rebuild win is measurable."""
+        for col in self.schema.indexed_columns:
+            idx = self._index_factory(col)
+            if idx is None:
                 continue
+            parts = [s.indexes.get(col.name) for s in tier]
+            mergeable = self.cfg.merge_indexes and all(
+                p is not None and type(p) is type(idx) for p in parts)
             t0 = time.perf_counter()
-            bottom = level + 1 >= self.cfg.max_levels or not any(
-                s.level > level for s in self.segments)
-            merged = seg_lib.merge_segments(self.schema, tier, level + 1,
-                                            drop_tombstones=bottom)
-            self._build_indexes(merged)
-            self.segments = [s for s in self.segments if s not in tier]
-            self.segments.append(merged)
-            for s in tier:
-                self.global_index.on_drop_segment(s.seg_id)
-            self.global_index.on_new_segment(merged)
-            self.metrics["compactions"] += 1
-            self.metrics["compact_s"] += time.perf_counter() - t0
+            if mergeable:
+                idx.merge(parts, merged, col, row_maps)
+                self.metrics["index_merge_s"] += time.perf_counter() - t0
+                self.metrics["index_merges"] += 1
+            else:
+                idx.build(merged, col)
+                self.metrics["index_rebuild_s"] += time.perf_counter() - t0
+                self.metrics["index_rebuilds"] += 1
+            merged.indexes[col.name] = idx
 
     # ------------------------------------------------------------------- read
     def get(self, key: int) -> Optional[Dict[str, Any]]:
-        row = self.memtable.get(key)
-        best = row
+        best = None
+        # memtables newest-first: active, then sealed youngest->oldest
+        for m in (self.memtable, *reversed(self.sealed)):
+            best = m.get(key)
+            if best is not None:
+                break
         if best is None:
             # newest-first: segments are appended in time order
             for seg in reversed(self.segments):
@@ -155,13 +303,26 @@ class LSMStore:
 
     @property
     def n_rows(self) -> int:
-        return sum(s.n_rows for s in self.segments) + len(self.memtable)
+        return sum(s.n_rows for s in self.segments) + self.memtable_rows
+
+    @property
+    def memtable_rows(self) -> int:
+        """Rows buffered in RAM (active + sealed awaiting flush)."""
+        return len(self.memtable) + sum(len(m) for m in self.sealed)
 
     def all_segments(self) -> List[seg_lib.Segment]:
         return list(self.segments)
 
-    def memtable_arrays(self):
-        return self.memtable.scan_arrays()
+    def memtable_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                       Dict[str, np.ndarray]]:
+        """Columnar view over ALL RAM-resident rows (sealed memtables
+        oldest-first, then the active one) — the read paths' single
+        window onto unflushed data, cached per write epoch."""
+        if self._mt_cache is None or self._mt_cache[0] != self._mt_epoch:
+            parts = [m.scan_arrays() for m in (*self.sealed, self.memtable)]
+            self._mt_cache = (self._mt_epoch,
+                              mt.concat_memtable_arrays(parts, self.schema))
+        return self._mt_cache[1]
 
     # visible-version resolution across segments (newest seqno per pk wins)
     def resolve_visible(self, per_segment_rows: Dict[int, np.ndarray]

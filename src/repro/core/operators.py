@@ -315,7 +315,8 @@ class PipelineContext:
 
     def memtable_arrays(self):
         if self._mt is None:
-            self._mt = self.store.memtable.scan_arrays()
+            # sealed-aware: includes memtables queued for flush
+            self._mt = self.store.memtable_arrays()
         return self._mt
 
     def memtable_pred_mask(self, pred) -> np.ndarray:
@@ -609,7 +610,7 @@ class MemtableOverlay(PhysicalOp):
 
     def apply(self, ctx: PipelineContext,
               cands: List[Candidates]) -> List[Candidates]:
-        if not len(ctx.store.memtable):
+        if not ctx.store.memtable_rows:
             return cands
         pk, _, tomb, cols = ctx.memtable_arrays()
         base = vis_lib.memtable_visible(pk, tomb)
@@ -774,7 +775,7 @@ def build_tree(plan, catalog=None) -> PhysicalOp:
     have = catalog is not None
     n_segs = len(catalog.store.segments) if have else 0
     total_blocks = catalog.total_blocks if have else 0.0
-    mt_rows = len(catalog.store.memtable) if have else 0
+    mt_rows = catalog.store.memtable_rows if have else 0
 
     def conj_passing(pl_) -> float:
         if not have:

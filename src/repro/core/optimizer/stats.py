@@ -93,7 +93,7 @@ class Catalog:
     @property
     def total_blocks(self) -> float:
         return sum(s.n_blocks for s in self.store.segments) + \
-            max(1, len(self.store.memtable) / BLOCK_ROWS)
+            max(1, self.store.memtable_rows / BLOCK_ROWS)
 
     def index_probe_blocks(self, predicate) -> float:
         """Blocks touched probing the predicate's index across (global-

@@ -41,6 +41,9 @@ class Segment:
         self.schema = schema
         self.seg_id = next(_seg_counter) if seg_id is None else seg_id
         self.level = level
+        # input-row -> segment-row permutation; consumed exactly once (the
+        # flush path extends the visibility index with it) then released
+        self.sort_order: Optional[np.ndarray] = order
         self.pk = np.asarray(pk)[order]
         self.seqno = np.asarray(seqno)[order]
         self.tombstone = np.asarray(tombstone)[order]
@@ -87,10 +90,17 @@ class Segment:
 
 
 def merge_segments(schema: Schema, segments: Sequence[Segment],
-                   level: int, drop_tombstones: bool) -> Segment:
+                   level: int, drop_tombstones: bool,
+                   return_maps: bool = False):
     """K-way merge by primary key keeping the newest seqno per key
     (size-tiered compaction). Tombstones are dropped only when compacting
-    into the bottom tier (no older data can be shadowed)."""
+    into the bottom tier (no older data can be shadowed).
+
+    With ``return_maps`` also returns, per input segment, an int64 array
+    mapping each source row to its row in the merged segment (-1 when the
+    row was shadowed or tombstone-dropped) — the plumbing mergeable
+    per-segment indexes need to remap their entries without a rebuild.
+    """
     if not segments:
         raise ValueError("nothing to merge")
     pk = np.concatenate([s.pk for s in segments])
@@ -100,11 +110,23 @@ def merge_segments(schema: Schema, segments: Sequence[Segment],
             for c in schema.columns}
     # newest version per key: sort by (pk, -seqno), keep first
     order = np.lexsort((-seqno, pk))
-    pk, seqno, tomb = pk[order], seqno[order], tomb[order]
-    keep = np.ones(len(pk), bool)
-    keep[1:] = pk[1:] != pk[:-1]
+    spk, sseq, stomb = pk[order], seqno[order], tomb[order]
+    keep = np.ones(len(spk), bool)
+    keep[1:] = spk[1:] != spk[:-1]
     if drop_tombstones:
-        keep &= ~tomb
+        keep &= ~stomb
     cols = {k: v[order][keep] for k, v in cols.items()}
-    return Segment(schema, pk[keep], seqno[keep], tomb[keep], cols,
-                   level=level)
+    merged = Segment(schema, spk[keep], sseq[keep], stomb[keep], cols,
+                     level=level)
+    if not return_maps:
+        return merged
+    # surviving rows are already pk-sorted (strictly increasing after the
+    # dedup), so Segment's stable argsort is the identity and the merged
+    # row of the i-th kept sorted position is simply its rank
+    concat_to_new = np.full(len(pk), -1, np.int64)
+    concat_to_new[order[keep]] = np.arange(int(keep.sum()), dtype=np.int64)
+    maps, lo = [], 0
+    for s in segments:
+        maps.append(concat_to_new[lo:lo + s.n_rows])
+        lo += s.n_rows
+    return merged, maps

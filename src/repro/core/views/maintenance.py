@@ -103,51 +103,48 @@ class ViewMaintainer:
         self._backfill()
 
     def _backfill(self) -> None:
-        """Populate new views from current store contents (one scan)."""
-        for seg in self.store.segments:
-            for v in self.views:
-                if isinstance(v, SpatialRangeView):
-                    pts = np.asarray(seg.columns[v.col], np.float32)
-                    from repro.kernels import ops as kops
-                    inside = kops.rect_filter(pts, v.rect)
-                    for i in np.nonzero(inside)[0]:
-                        v.insert(int(seg.pk[i]), pts[i])
-                else:
-                    vecs = np.asarray(seg.columns[v.col], np.float32)
-                    for i in range(len(vecs)):
-                        v.insert(int(seg.pk[i]), vecs[i])
-        # memtable too
-        pk, seqno, tomb, cols = self.store.memtable.scan_arrays()
-        for v in self.views:
-            arr = cols.get(v.col)
-            if arr is None:
+        """Populate new views from current store contents — one columnar
+        pass per (source, view) pair, vectorized membership tests."""
+        from repro.kernels import ops as kops
+        mt_pk, _, mt_tomb, mt_cols = self.store.memtable_arrays()
+        sources = [(seg.pk, seg.tombstone, seg.columns)
+                   for seg in self.store.segments]
+        sources.append((mt_pk, mt_tomb, mt_cols))
+        for spk, stomb, scols in sources:
+            live = ~np.asarray(stomb, bool)
+            if not live.any():
                 continue
-            for i in range(len(pk)):
-                if tomb[i]:
+            lpks = np.asarray(spk, np.int64)[live]
+            for v in self.views:
+                arr = scols.get(v.col)
+                if arr is None:
                     continue
+                vals = np.asarray(arr, np.float32)[live]
                 if isinstance(v, SpatialRangeView):
-                    if v.covers_point(arr[i]):
-                        v.insert(int(pk[i]), arr[i])
+                    inside = kops.rect_filter(vals, v.rect)
+                    v.insert_many(lpks[inside], vals[inside])
                 else:
-                    v.insert(int(pk[i]), arr[i])
+                    v.insert_many(lpks, vals)
 
     # ------------------------------------------------------------- delta
     def _on_delta(self, pks, batch, deleted: bool) -> None:
+        """Apply one columnar write delta ``(pks, batch, deleted)`` to all
+        installed views — one vectorized membership test per view over the
+        whole batch, never a per-row Python loop."""
+        pks = np.asarray(pks, np.int64)
         if deleted:
             for v in self.views:
-                for pk in pks:
-                    v.remove(int(pk))
+                v.remove_many(pks)
             self.deltas_applied += len(pks)
             return
-        for v_idx, pk in enumerate(pks):
-            for v in self.coverage.spatial_views_for(
-                    batch[self.coverage.spatial[0].col][v_idx]) \
-                    if self.coverage.spatial else []:
-                v.insert(int(pk), batch[v.col][v_idx])
-        if self.coverage.vector:
-            col = self.coverage.vector[0].col
-            vecs = np.asarray(batch[col], np.float32)
-            for i, pk in enumerate(pks):
-                for v in self.coverage.vector_views_for(vecs[i]):
-                    v.insert(int(pk), vecs[i])
+        for v in self.coverage.spatial:
+            pts = np.asarray(batch[v.col], np.float32)
+            from repro.kernels import ops as kops
+            inside = kops.rect_filter(pts, v.rect)
+            v.insert_many(pks[inside], pts[inside])
+        for v in self.coverage.vector:
+            vecs = np.asarray(batch[v.col], np.float32)
+            d = np.sqrt(((vecs - v.center[None, :]) ** 2).sum(axis=1))
+            m = d <= v.coverage_radius()
+            v.insert_many(pks[m], vecs[m], d[m])
         self.deltas_applied += len(pks)

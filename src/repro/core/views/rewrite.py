@@ -90,7 +90,7 @@ def _gather(store, sids: np.ndarray, rows: np.ndarray, cols) -> dict:
     val_parts = {c: [] for c in cols}
     for sid in np.unique(sids):
         sel = np.nonzero(sids == sid)[0]
-        src = store.memtable.scan_arrays()[3] if sid < 0 \
+        src = store.memtable_arrays()[3] if sid < 0 \
             else seg_by_id[int(sid)].columns
         idx_parts.append(sel)
         for c in cols:

@@ -45,8 +45,18 @@ class SpatialRangeView:
     def insert(self, pk: int, xy) -> None:
         self.rows[int(pk)] = (float(xy[0]), float(xy[1]))
 
+    def insert_many(self, pks: np.ndarray, xys: np.ndarray) -> None:
+        """Columnar delta application: one C-level dict update."""
+        if len(pks):
+            self.rows.update(zip(np.asarray(pks, np.int64).tolist(),
+                                 map(tuple, np.asarray(xys).tolist())))
+
     def remove(self, pk: int) -> None:
         self.rows.pop(int(pk), None)
+
+    def remove_many(self, pks: np.ndarray) -> None:
+        for pk in np.asarray(pks, np.int64).tolist():
+            self.rows.pop(pk, None)
 
     # read --------------------------------------------------------------
     def pks_in(self, rect) -> List[int]:
@@ -98,8 +108,31 @@ class VectorNNView:
             self.cand.pop()
         self._arrays_cache = None
 
+    def insert_many(self, pks: np.ndarray, vecs: np.ndarray,
+                    dists: Optional[np.ndarray] = None) -> None:
+        """Columnar delta application: merge a whole batch into the sorted
+        candidate list with one argsort instead of per-row bisects."""
+        if not len(pks):
+            return
+        vecs = np.asarray(vecs, np.float32)
+        if dists is None:
+            dists = np.sqrt(((vecs - self.center[None, :]) ** 2).sum(axis=1))
+        cut = np.argsort(dists, kind="stable")
+        if len(cut) > self.xk:
+            cut = cut[:self.xk]
+        new = [(float(dists[i]), int(pks[i]), vecs[i]) for i in cut]
+        import heapq
+        merged = list(heapq.merge(self.cand, new, key=lambda c: c[0]))
+        self.cand = merged[:self.xk]
+        self._arrays_cache = None
+
     def remove(self, pk: int) -> None:
         self.cand = [c for c in self.cand if c[1] != pk]
+        self._arrays_cache = None
+
+    def remove_many(self, pks: np.ndarray) -> None:
+        gone = set(np.asarray(pks, np.int64).tolist())
+        self.cand = [c for c in self.cand if c[1] not in gone]
         self._arrays_cache = None
 
     # read ----------------------------------------------------------------

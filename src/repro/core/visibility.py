@@ -56,7 +56,7 @@ class VisibilityIndex:
             parts_sid.append(np.full(seg.n_rows, seg.seg_id, np.int64))
             parts_row.append(np.arange(seg.n_rows, dtype=np.int64))
             parts_tomb.append(np.asarray(seg.tombstone, bool))
-        mt_pk, mt_seq, mt_tomb, _ = store.memtable.scan_arrays()
+        mt_pk, mt_seq, mt_tomb, _ = store.memtable_arrays()
         if len(mt_pk):
             parts_pk.append(mt_pk)
             parts_seq.append(mt_seq)
@@ -87,6 +87,29 @@ class VisibilityIndex:
         self._win_row = row[win]
         seg_win = win & (sid >= 0)
         self._winners = np.sort(_encode(sid[seg_win], row[seg_win]))
+
+    def extend_on_flush(self, seg, n_flushed: int) -> None:
+        """Incremental update when the oldest ``n_flushed`` memtable rows
+        become segment ``seg``: a flush moves versions without changing
+        any pk's winner, so the winner set is *remapped* instead of
+        rebuilt — memtable winners in the flushed prefix point at their
+        new segment rows, remaining memtable winners shift down, and the
+        new segment winners merge into the sorted membership array.
+        O(winners) instead of O(total rows · log)."""
+        inv = np.empty(n_flushed, np.int64)
+        inv[seg.sort_order] = np.arange(n_flushed, dtype=np.int64)
+        mt = self._win_sid == -1
+        flushed = mt & (self._win_row < n_flushed)
+        later = mt & ~flushed
+        new_rows = inv[self._win_row[flushed]]
+        self._win_sid[flushed] = seg.seg_id
+        self._win_row[flushed] = new_rows
+        self._win_row[later] -= n_flushed
+        if len(new_rows):
+            enc = _encode(np.full(len(new_rows), seg.seg_id, np.int64),
+                          new_rows)
+            self._winners = np.sort(
+                np.concatenate([self._winners, enc]))
 
     def visible_mask(self, sids: np.ndarray, rows: np.ndarray) -> np.ndarray:
         """Vectorized membership test: is each (seg_id, row) the visible
@@ -140,3 +163,18 @@ def visibility_index(store) -> VisibilityIndex:
         cached = (key, VisibilityIndex(store))
         store._vis_cache = cached
     return cached[1]
+
+
+def extend_cache_on_flush(store, pre_key, seg, n_flushed: int) -> bool:
+    """Flush-time cache maintenance: if the store's cached index matches
+    the pre-flush state, remap it in place (``extend_on_flush``) and
+    re-key it for the post-flush state instead of discarding it.  Returns
+    whether the incremental path was taken."""
+    cached = getattr(store, "_vis_cache", None)
+    if cached is None or cached[0] != pre_key or n_flushed == 0:
+        return False
+    vis = cached[1]
+    vis.extend_on_flush(seg, n_flushed)
+    new_key = (store._seqno, tuple(s.seg_id for s in store.segments))
+    store._vis_cache = (new_key, vis)
+    return True

@@ -1,0 +1,364 @@
+"""Columnar write path: vectorized memtable, flush scheduler +
+backpressure, mergeable per-segment indexes, and compaction correctness.
+"""
+import numpy as np
+import pytest
+
+from conftest import make_batch, tweet_schema
+from repro.core import query as q
+from repro.core import visibility as vis_lib
+from repro.core.executor import Executor
+from repro.core.index import default_index_factory
+from repro.core.lsm import LSMConfig, LSMStore
+from repro.core.memtable import MemTable
+
+
+# --------------------------------------------------------------- memtable
+
+def test_columnar_memtable_roundtrip():
+    rng = np.random.default_rng(0)
+    m = MemTable(tweet_schema())
+    pks, batch = make_batch(rng, 100)
+    nxt = m.put_batch(pks, batch, seqno_start=7)
+    assert nxt == 107 and len(m) == 100
+    row = m.get(42)
+    assert row["_seqno"] == 49 and not row["_tombstone"]
+    np.testing.assert_allclose(row["embedding"], batch["embedding"][42])
+    pk, seqno, tomb, cols = m.scan_arrays()
+    assert pk.dtype == np.int64 and tomb.dtype == bool
+    assert cols["embedding"].shape == (100, 16)
+    assert cols["time"].dtype == np.float64
+    assert cols["content"].dtype == object
+    # chunked appends concatenate in order
+    pks2, batch2 = make_batch(rng, 50, pk_start=100)
+    m.put_batch(pks2, batch2, seqno_start=nxt)
+    pk, _, _, cols = m.scan_arrays()
+    assert len(pk) == 150
+    np.testing.assert_allclose(cols["coordinate"][100:],
+                               batch2["coordinate"])
+
+
+def test_approx_bytes_counts_text_payload():
+    rng = np.random.default_rng(1)
+    schema = tweet_schema()
+    small, big = MemTable(schema), MemTable(schema)
+    pks, batch = make_batch(rng, 64)
+    small.put_batch(pks, batch, 0)
+    batch_big = dict(batch)
+    batch_big["content"] = np.asarray(["x" * 10_000] * 64, object)
+    big.put_batch(pks, batch_big, 0)
+    # the old flat 24-bytes-per-TEXT-cell estimate made these equal
+    assert big.approx_bytes > small.approx_bytes + 64 * 9_000
+
+
+def test_flush_by_bytes_threshold():
+    rng = np.random.default_rng(2)
+    store = LSMStore(tweet_schema(), LSMConfig(flush_rows=10**9,
+                                               flush_bytes=200_000))
+    pks, batch = make_batch(rng, 100)
+    batch["content"] = np.asarray(["y" * 4_000] * 100, object)
+    store.put(pks, batch)
+    assert store.metrics["flushes"] >= 1          # bytes, not rows, tripped
+
+
+def test_put_empty_batch_is_noop():
+    store = LSMStore(tweet_schema(), LSMConfig(flush_rows=64))
+    calls = []
+    store.on_delta(lambda pks, batch, deleted: calls.append(len(pks)))
+    before = dict(store.metrics)
+    seq = store._seqno
+    store.put([], {c.name: [] for c in store.schema.columns})
+    assert calls == []
+    assert store.metrics == before and store._seqno == seq
+
+
+def test_delete_of_never_written_pks_keeps_fast_path():
+    rng = np.random.default_rng(3)
+    store = LSMStore(tweet_schema(), LSMConfig(flush_rows=64))
+    pks, batch = make_batch(rng, 64)
+    store.put(pks, batch)
+    calls = []
+    store.on_delta(lambda p, b, d: calls.append((list(map(int, p)), d)))
+    store.delete([500, 600])                      # never written: no-op
+    assert store.unique_pks is True
+    assert store.metrics["deletes"] == 0
+    assert store.metrics["noop_deletes"] == 2
+    assert calls == []
+    # partial overlap: only the existing pk is tombstoned
+    store.delete([6, 700])
+    assert store.unique_pks is False
+    assert store.get(6) is None and store.get(7) is not None
+    assert store.metrics["deletes"] == 1
+    assert store.metrics["noop_deletes"] == 3
+    assert calls == [([6], True)]
+
+
+# ------------------------------------------------- scheduler / pipelining
+
+def _fill(store, rng, n, pk_start=0, batch=128):
+    done = 0
+    while done < n:
+        m = min(batch, n - done)
+        pks, b = make_batch(rng, m, pk_start=pk_start + done)
+        store.put(pks, b)
+        done += m
+
+
+def test_pipelined_reads_see_sealed_memtables():
+    rng = np.random.default_rng(4)
+    store = LSMStore(tweet_schema(), LSMConfig(flush_rows=128,
+                                               pipeline=True))
+    _fill(store, rng, 400)
+    assert len(store.sealed) >= 1 and store.metrics["flushes"] == 0
+    # point reads and query paths cover sealed + active rows
+    assert store.get(5) is not None and store.get(399) is not None
+    ex = Executor(store)
+    res, _ = ex.execute(q.HybridQuery(where=[q.Range("time", 0, 100)],
+                                      k=500))
+    assert len(res) == 400
+
+
+def test_drain_visibility_equivalence():
+    rng = np.random.default_rng(5)
+    store = LSMStore(tweet_schema(), LSMConfig(flush_rows=100, fanout=3,
+                                               pipeline=True))
+    _fill(store, rng, 350)
+    _, upd = make_batch(rng, 30, pk_start=40)
+    store.put(list(range(40, 70)), upd)           # updates
+    store.delete(list(range(10, 20)))             # deletes
+    assert len(store.sealed) >= 1
+    ex = Executor(store)
+    query = q.HybridQuery(where=[q.Range("time", 0, 100)], k=1000)
+    before_rows = {r.pk: r.values["time"] for r in ex.execute(query)[0]}
+    before_gets = {pk: store.get(pk) and store.get(pk)["time"]
+                   for pk in range(0, 350, 7)}
+    flushed = store.drain()
+    assert flushed and store.metrics["flushes"] >= 3
+    after_rows = {r.pk: r.values["time"] for r in ex.execute(query)[0]}
+    after_gets = {pk: store.get(pk) and store.get(pk)["time"]
+                  for pk in range(0, 350, 7)}
+    assert before_rows == after_rows
+    assert before_gets == after_gets
+    for pk in range(10, 20):
+        assert store.get(pk) is None
+
+
+def test_flush_extends_visibility_cache_incrementally():
+    rng = np.random.default_rng(6)
+    store = LSMStore(tweet_schema(), LSMConfig(flush_rows=10**9))
+    _fill(store, rng, 200)
+    _, upd = make_batch(rng, 10, pk_start=50)
+    store.put(list(range(50, 60)), upd)
+    vis_before = vis_lib.visibility_index(store)   # build + cache
+    store.flush()
+    assert store.metrics["vis_extends"] == 1
+    vis_after = vis_lib.visibility_index(store)
+    assert vis_after is vis_before                 # remapped, not rebuilt
+    # equivalence vs a from-scratch rebuild
+    fresh = vis_lib.VisibilityIndex(store)
+    np.testing.assert_array_equal(vis_after._winners, fresh._winners)
+    np.testing.assert_array_equal(vis_after._win_pk, fresh._win_pk)
+    np.testing.assert_array_equal(vis_after._win_sid, fresh._win_sid)
+    np.testing.assert_array_equal(vis_after._win_row, fresh._win_row)
+
+
+def test_backpressure_write_stall():
+    rng = np.random.default_rng(7)
+    store = LSMStore(tweet_schema(), LSMConfig(flush_rows=64, fanout=4,
+                                               pipeline=True,
+                                               max_sealed=2))
+    _fill(store, rng, 1500, batch=64)
+    # the stall threshold bounds queued memtables even with no drain()
+    assert len(store.sealed) <= 2
+    assert store.metrics["stalls"] > 0
+    assert store.metrics["flushes"] > 0            # writer self-drained
+    store.drain()
+    assert store.n_rows == 1500
+
+
+def test_background_scheduler_smoke():
+    rng = np.random.default_rng(8)
+    store = LSMStore(tweet_schema(), LSMConfig(flush_rows=128,
+                                               pipeline=True,
+                                               background=True))
+    _fill(store, rng, 600)
+    store.drain()
+    store.scheduler.close()
+    assert store.metrics["flushes"] >= 4
+    assert store.n_rows == 600
+    assert all(store.get(pk) is not None for pk in range(0, 600, 53))
+
+
+def test_pipelined_store_matches_inline_store():
+    def build(pipeline):
+        rng = np.random.default_rng(9)
+        store = LSMStore(tweet_schema(), LSMConfig(flush_rows=100,
+                                                   fanout=3,
+                                                   pipeline=pipeline))
+        _fill(store, rng, 500)
+        _, upd = make_batch(rng, 20, pk_start=100)
+        store.put(list(range(100, 120)), upd)
+        store.delete(list(range(200, 215)))
+        store.flush()
+        return store
+
+    a, b = build(False), build(True)
+    # physical version counts may differ (compaction timing), the
+    # *visible* state may not
+    assert {pk for pk in range(520) if a.get(pk) is not None} == \
+        {pk for pk in range(520) if b.get(pk) is not None}
+    ex_a, ex_b = Executor(a), Executor(b)
+    for where in ([q.Range("time", 10, 60)],
+                  [q.TextContains("content", "apple")]):
+        ra, _ = ex_a.execute(q.HybridQuery(where=where, k=1000))
+        rb, _ = ex_b.execute(q.HybridQuery(where=where, k=1000))
+        assert {r.pk for r in ra} == {r.pk for r in rb}
+
+
+# -------------------------------------------------- compaction correctness
+
+def test_interleaved_put_update_delete_across_tiers():
+    rng = np.random.default_rng(10)
+    store = LSMStore(tweet_schema(), LSMConfig(flush_rows=80, fanout=3,
+                                               max_levels=4))
+    model = {}
+    for round_ in range(12):
+        base = round_ * 60
+        pks, batch = make_batch(rng, 60, pk_start=base)
+        store.put(pks, batch)
+        for i, pk in enumerate(pks):
+            model[pk] = batch["time"][i]
+        if round_ % 2 == 1:                      # update an older stripe
+            upd_pks = list(range(base - 30, base))
+            _, upd = make_batch(rng, 30)
+            store.put(upd_pks, upd)
+            for i, pk in enumerate(upd_pks):
+                model[pk] = upd["time"][i]
+        if round_ % 3 == 2:                      # delete a scattered set
+            dels = list(range(base, base + 10))
+            store.delete(dels)
+            for pk in dels:
+                model.pop(pk, None)
+    store.flush()
+    assert store.metrics["compactions"] >= 2
+    assert {s.level for s in store.segments} != {0}
+    for pk in range(0, 720, 3):
+        want = model.get(pk)
+        got = store.get(pk)
+        if want is None:
+            assert got is None, pk
+        else:
+            assert got is not None and got["time"] == want, pk
+    assert store.n_rows >= len(model)
+
+
+def test_tombstones_dropped_only_at_bottom_level():
+    rng = np.random.default_rng(11)
+    store = LSMStore(tweet_schema(), LSMConfig(flush_rows=10**9, fanout=3,
+                                               max_levels=5))
+    # deep tier first: three flushes -> one level-1 segment
+    for start in (0, 100, 200):
+        pks, batch = make_batch(rng, 100, pk_start=start)
+        store.put(pks, batch)
+        store.flush()
+    assert [s.level for s in store.segments] == [1]
+    # tombstones for pks living in the deep tier + two filler flushes
+    store.delete(list(range(0, 25)))
+    store.flush()
+    for start in (300, 400):
+        pks, batch = make_batch(rng, 50, pk_start=start)
+        store.put(pks, batch)
+        store.flush()                   # third L0 -> compact over deep L1
+    upper = [s for s in store.segments if s.level == 1 and
+             s.tombstone.any()]
+    assert upper, "tombstones must survive non-bottom compaction"
+    for pk in (0, 10, 24):
+        assert store.get(pk) is None
+    # force the bottom merge: level-1 tier reaches fanout
+    for start in (500, 600, 700):
+        pks, batch = make_batch(rng, 50, pk_start=start)
+        store.put(pks, batch)
+        store.flush()
+    assert any(s.level >= 2 for s in store.segments)
+    assert all(not s.tombstone.any() for s in store.segments
+               if s.level >= 2), "bottom merge must drop tombstones"
+    for pk in (0, 10, 24):
+        assert store.get(pk) is None
+    assert store.get(25) is not None
+
+
+def _compacted_store(merge_indexes: bool):
+    rng = np.random.default_rng(12)
+    store = LSMStore(tweet_schema(), LSMConfig(flush_rows=150, fanout=3,
+                                               merge_indexes=merge_indexes))
+    _fill(store, rng, 450, batch=150)
+    _, upd = make_batch(rng, 40, pk_start=60)
+    store.put(list(range(60, 100)), upd)
+    store.delete(list(range(20, 35)))
+    store.flush()
+    return store
+
+
+def test_merged_indexes_equal_rebuilt_indexes():
+    store = _compacted_store(merge_indexes=True)
+    assert store.metrics["index_merges"] > 0
+    rng = np.random.default_rng(13)
+    merged = [s for s in store.segments if s.level >= 1]
+    assert merged
+    for seg in merged:
+        rebuilt = {}
+        for col in store.schema.indexed_columns:
+            idx = default_index_factory(col)
+            idx.build(seg, col)
+            rebuilt[col.name] = idx
+        # scalar: range bitmaps identical
+        for _ in range(5):
+            lo = float(rng.uniform(0, 80))
+            pred = q.Range("time", lo, lo + 15)
+            np.testing.assert_array_equal(
+                seg.indexes["time"].bitmap(seg, pred),
+                rebuilt["time"].bitmap(seg, pred))
+        # text: term bitmaps + BM25 stats identical
+        t_merged, t_rebuilt = seg.indexes["content"], rebuilt["content"]
+        assert set(t_merged.postings) == set(t_rebuilt.postings)
+        assert t_merged.n_docs == t_rebuilt.n_docs
+        np.testing.assert_allclose(t_merged.doc_len, t_rebuilt.doc_len)
+        for term in ("apple", "golf", "hotel"):
+            pred = q.TextContains("content", term)
+            np.testing.assert_array_equal(t_merged.bitmap(seg, pred),
+                                          t_rebuilt.bitmap(seg, pred))
+            sm, rm = t_merged._bm25([term]), t_rebuilt._bm25([term])
+            assert dict(zip(sm[1].tolist(), sm[0].tolist())) == \
+                pytest.approx(dict(zip(rm[1].tolist(), rm[0].tolist())))
+        # spatial: rect bitmaps identical
+        for _ in range(5):
+            x, y = rng.uniform(0, 8, 2)
+            pred = q.GeoWithin("coordinate",
+                               (float(x), float(y), float(x + 2),
+                                float(y + 2)))
+            np.testing.assert_array_equal(
+                seg.indexes["coordinate"].bitmap(seg, pred),
+                rebuilt["coordinate"].bitmap(seg, pred))
+        # vector: full-probe search is exact for both -> identical top-k
+        iv_m, iv_r = seg.indexes["embedding"], rebuilt["embedding"]
+        assert set(iv_m.post_rows.tolist()) == set(iv_r.post_rows.tolist())
+        for _ in range(3):
+            qv = rng.normal(size=16).astype(np.float32)
+            dm, rm_, _ = iv_m.search(qv, 10, n_probe=len(iv_m.centroids))
+            dr, rr, _ = iv_r.search(qv, 10, n_probe=len(iv_r.centroids))
+            np.testing.assert_allclose(dm, dr, rtol=1e-5)
+            assert rm_.tolist() == rr.tolist()
+
+
+def test_merge_results_match_rebuild_results_end_to_end():
+    a = _compacted_store(merge_indexes=True)
+    b = _compacted_store(merge_indexes=False)
+    assert a.metrics["index_merges"] > 0 and b.metrics["index_merges"] == 0
+    ex_a, ex_b = Executor(a), Executor(b)
+    rng = np.random.default_rng(14)
+    for _ in range(4):
+        lo = float(rng.uniform(0, 70))
+        where = [q.Range("time", lo, lo + 20)]
+        ra, _ = ex_a.execute(q.HybridQuery(where=where, k=1000))
+        rb, _ = ex_b.execute(q.HybridQuery(where=where, k=1000))
+        assert {r.pk for r in ra} == {r.pk for r in rb}
