@@ -1,14 +1,42 @@
-"""Table 1 reproduction: average hybrid-query latency, ARCADE vs the
-baseline strategies (each implementing one competitor's design point)."""
+"""Table 1 reproduction (hybrid-query latency vs baseline strategies)
+plus the fused-vs-staged read-path dispatch study.
+
+``run_fused_vs_staged`` executes the TRACY NN templates twice over an
+8+-segment store — once with the planner's fused packed kernel path
+(``kernels/fused_scan.py``: one dispatch per query batch, ``(nq, k)``
+bytes back) and once with the staged per-segment fallback (one dispatch
+per segment per batch, full distance rows back) — and checks that both
+return IDENTICAL results while counting kernel launches and
+device->host bytes via ``kernels.ops.STATS``.
+
+CLI:  python benchmarks/hybrid_latency.py [--smoke] [--json PATH]
+                                          [--baseline PATH]
+With ``--baseline``, machine-independent ratios are gated against the
+committed JSON (CI smoke job): fails if fused stops returning identical
+results, launches more kernels than staged, or the launch/bytes
+advantage on the NN-heavy (fused-eligible) templates drops below the
+floors recorded in the baseline.
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import sys
 import time
 from typing import Dict, List
 
 import numpy as np
 
+if __package__ in (None, ""):        # `python benchmarks/hybrid_latency.py`
+    sys.path.insert(
+        0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
 from benchmarks import baselines as bl
 from benchmarks import tracy
+from repro.core.executor import Executor
+from repro.core.optimizer import planner as planner_lib
+from repro.kernels import ops as kops
 
 
 def run_latency(n_rows: int = 6000, n_queries: int = 30,
@@ -37,6 +65,90 @@ def run_latency(n_rows: int = 6000, n_queries: int = 30,
             "blocks_per_q": blocks / n_queries}
 
 
+# ---------------------------------------------------------------------------
+# fused vs staged dispatch study
+# ---------------------------------------------------------------------------
+
+NN_TEMPLATE_NAMES = ["t6", "t7", "t8", "t9", "t10", "t11", "t13"]
+
+
+def run_fused_vs_staged(n_rows: int = 6000, n_segments: int = 8,
+                        batch: int = 8, n_batches: int = 2,
+                        dim: int = 64, seed: int = 0) -> Dict:
+    """Execute every TRACY NN template in both dispatch modes over an
+    ``n_segments``-segment store and compare results + kernel traffic.
+
+    Queries run through ``execute_many`` in batches of ``batch``
+    structurally-identical instances — the regime the packed fused path
+    targets (the batch shares one superbatch scan).  Multi-rank
+    templates are not fused-eligible and act as controls (identical
+    plans, identical traffic in both modes)."""
+    cfg = tracy.TracyConfig(n_rows=n_rows, dim=dim, seed=seed,
+                            flush_rows=max(1, n_rows // n_segments),
+                            fanout=4 * n_segments)
+    store, data = tracy.build_store(cfg)
+    _, nn_t = tracy.make_templates(data)
+    ex = Executor(store)
+    out: Dict = {"config": {"n_rows": n_rows, "dim": dim, "batch": batch,
+                            "n_segments": len(store.segments),
+                            "n_batches": n_batches},
+                 "templates": {}}
+    prev = planner_lib.FUSED_ENABLED
+    try:
+        for name, tmpl in zip(NN_TEMPLATE_NAMES, nn_t):
+            rec: Dict = {"identical": True}
+            per_mode: Dict[str, Dict] = {}
+            results: Dict[str, List] = {}
+            for mode in ("staged", "fused"):
+                planner_lib.FUSED_ENABLED = mode == "fused"
+                res: List = []
+                before = kops.stats_snapshot()
+                t0 = time.perf_counter()
+                for b in range(n_batches):
+                    # identical query parameters in both modes
+                    data.rng = np.random.default_rng(seed + 1000 + b)
+                    res.extend(ex.execute_many([tmpl()
+                                                for _ in range(batch)]))
+                dt = time.perf_counter() - t0
+                after = kops.stats_snapshot()
+                per_mode[mode] = {
+                    "launches": after[0] - before[0],
+                    "bytes_to_host": after[1] - before[1],
+                    "jit_shape_misses": after[2] - before[2],
+                    "ms": dt * 1e3,
+                }
+                results[mode] = [[(r.pk, float(r.score)) for r in rows]
+                                 for rows, _ in res]
+                if mode == "fused":
+                    rec["kind"] = res[0][1].plan.splitlines()[0].split(
+                        "(")[0]
+                    rec["fused_chosen"] = "dispatch=fused" in res[0][1].plan
+            rec["identical"] = results["staged"] == results["fused"]
+            rec.update(per_mode)
+            out["templates"][name] = rec
+    finally:
+        planner_lib.FUSED_ENABLED = prev
+    heavy = [n for n, r in out["templates"].items() if r["fused_chosen"]]
+    sl = sum(out["templates"][n]["staged"]["launches"] for n in heavy)
+    fl = sum(out["templates"][n]["fused"]["launches"] for n in heavy)
+    sb = sum(out["templates"][n]["staged"]["bytes_to_host"] for n in heavy)
+    fb = sum(out["templates"][n]["fused"]["bytes_to_host"] for n in heavy)
+    out["nn_heavy"] = {
+        "templates": heavy,
+        "staged_launches": sl, "fused_launches": fl,
+        "staged_bytes": sb, "fused_bytes": fb,
+        "launch_ratio": sl / max(1, fl),
+        "bytes_ratio": sb / max(1, fb),
+    }
+    out["identical_all"] = all(r["identical"]
+                               for r in out["templates"].values())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# harness hooks (run.py) and CLI
+# ---------------------------------------------------------------------------
+
 def bench(scale: float = 1.0) -> List[str]:
     rows = []
     n_rows = int(6000 * scale)
@@ -49,4 +161,102 @@ def bench(scale: float = 1.0) -> List[str]:
             rows.append(
                 f"tab1_{kind}_{engine},{r['avg_ms'] * 1e3:.0f},"
                 f"p95_ms={r['p95_ms']:.1f};blocks={r['blocks_per_q']:.0f}")
+    rows.extend(csv_from_json(
+        {"fused_vs_staged": run_fused_vs_staged(n_rows=int(6000 * scale))}))
     return rows
+
+
+def bench_json(scale: float = 1.0) -> Dict:
+    out: Dict = {"tab1": {}}
+    n_rows = int(6000 * scale)
+    nq = max(10, int(25 * scale))
+    for kind in ("search", "nn"):
+        for engine in ("arcade", "single_index", "segment_full_load",
+                       "full_scan"):
+            out["tab1"][f"{kind}_{engine}"] = run_latency(
+                n_rows=n_rows, n_queries=nq, kind=kind, engine=engine)
+    out["fused_vs_staged"] = run_fused_vs_staged(n_rows=n_rows)
+    return out
+
+
+def csv_from_json(data: Dict) -> List[str]:
+    rows = []
+    for key, r in data.get("tab1", {}).items():
+        rows.append(f"tab1_{key},{r['avg_ms'] * 1e3:.0f},"
+                    f"p95_ms={r['p95_ms']:.1f};"
+                    f"blocks={r['blocks_per_q']:.0f}")
+    fs = data.get("fused_vs_staged")
+    if fs:
+        h = fs["nn_heavy"]
+        rows.append(
+            f"fused_nn_heavy,{h['launch_ratio'] * 1e3:.0f},"
+            f"launch_ratio={h['launch_ratio']:.1f};"
+            f"bytes_ratio={h['bytes_ratio']:.1f};"
+            f"identical={int(fs['identical_all'])}")
+        for name, r in fs["templates"].items():
+            rows.append(
+                f"fused_{name},{r['fused']['ms'] * 1e3:.0f},"
+                f"kind={r['kind']};fused={int(r['fused_chosen'])};"
+                f"launches={r['fused']['launches']}v"
+                f"{r['staged']['launches']};"
+                f"bytes={r['fused']['bytes_to_host']}v"
+                f"{r['staged']['bytes_to_host']}")
+    return rows
+
+
+def _check_against_baseline(result: Dict, baseline: Dict) -> List[str]:
+    """Machine-independent gates: identical results, fused never
+    launches more than staged, and the NN-heavy launch/bytes advantage
+    holds at no worse than half the committed baseline ratios."""
+    failures = []
+    if not result["identical_all"]:
+        broken = [n for n, r in result["templates"].items()
+                  if not r["identical"]]
+        failures.append(f"fused != staged results on {broken}")
+    h = result["nn_heavy"]
+    if h["fused_launches"] > h["staged_launches"]:
+        failures.append(
+            f"fused launches {h['fused_launches']} > staged "
+            f"{h['staged_launches']}")
+    base = baseline.get("nn_heavy", {})
+    for key, floor in (("launch_ratio", 3.0), ("bytes_ratio", 5.0)):
+        want = max(floor, base.get(key, floor) / 2.0)
+        if h[key] < want:
+            failures.append(
+                f"{key} {h[key]:.2f} < required {want:.2f} "
+                f"(baseline {base.get(key)})")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small workload + baseline ratio gates")
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--baseline", default=None)
+    args = ap.parse_args()
+    if args.smoke:
+        result = {"fused_vs_staged": run_fused_vs_staged(
+            n_rows=3200, n_segments=8, batch=8, n_batches=1)}
+    else:
+        result = bench_json()
+    for row in csv_from_json(result):
+        print(row)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=2, sort_keys=True)
+            f.write("\n")
+    if args.baseline:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        failures = _check_against_baseline(
+            result["fused_vs_staged"], baseline["fused_vs_staged"])
+        if failures:
+            for msg in failures:
+                print(f"SMOKE FAIL: {msg}", file=sys.stderr)
+            sys.exit(1)
+        print("smoke gates passed", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

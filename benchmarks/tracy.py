@@ -35,6 +35,8 @@ class TracyConfig:
     dim: int = 128
     seed: int = 0
     flush_rows: int = 2048
+    fanout: int = 4              # LSM tier width (large = no compaction,
+    #                              so flush_rows controls segment count)
     # topic centers give embeddings cluster structure (semantic search)
     n_topics: int = 10
 
@@ -83,10 +85,13 @@ def build_store(cfg: TracyConfig,
                 ) -> Tuple[LSMStore, TracyData]:
     data = TracyData(cfg)
     store = LSMStore(tweet_schema(cfg.dim, vector_index),
-                     LSMConfig(flush_rows=cfg.flush_rows))
+                     LSMConfig(flush_rows=cfg.flush_rows,
+                               fanout=cfg.fanout))
     done = 0
     while done < cfg.n_rows:
-        n = min(2048, cfg.n_rows - done)
+        # never out-batch the flush threshold: small flush_rows configs
+        # rely on it to control the resulting segment count
+        n = min(cfg.flush_rows, 2048, cfg.n_rows - done)
         pks, batch = data.batch(n)
         store.put(pks, batch)
         done += n

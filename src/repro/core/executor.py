@@ -27,6 +27,19 @@ from repro.core.operators import (Candidates, ExecStats,  # noqa: F401
                                   rank_distances)
 from repro.core.optimizer import planner as planner_lib
 from repro.core.optimizer.stats import Catalog
+from repro.kernels import ops as kops
+
+
+def _charge_kernel_stats(stats_list, before) -> None:
+    """Attribute the kernel-dispatch delta since ``before`` (a
+    ``kops.stats_snapshot()``) to every query in the executed unit —
+    the same full-delta sharing policy blocks_read uses for cached
+    bitmaps, so per-query stats stay comparable across batch sizes."""
+    launches, byts, misses = kops.stats_snapshot()
+    for st in stats_list:
+        st.kernel_launches += launches - before[0]
+        st.bytes_to_host += byts - before[1]
+        st.jit_shape_misses += misses - before[2]
 
 
 # a group of this many structurally-identical exact NN queries is executed
@@ -74,8 +87,10 @@ class Executor:
             out = []
             for qq, plan in zip(queries, plans):
                 st = ExecStats(plan=plan.describe())
+                before = kops.stats_snapshot()
                 res = self._exec_nn(qq, plan, st) if qq.is_nn \
                     else self._exec_filter(qq, plan, st)
+                _charge_kernel_stats([st], before)
                 out.append((res, st))
             return out
 
@@ -90,10 +105,11 @@ class Executor:
             elif plan.kind in ("full_scan", "index_intersect",
                                "full_scan_nn", "prefilter_nn",
                                "union", "union_nn"):
-                # a group must share rank structure: NN members stack
-                # their query vectors into one kernel call
-                key = ("nn", ops.rank_signature(qq.ranks)) if qq.ranks \
-                    else ("filter",)
+                # a group must share rank structure (NN members stack
+                # their query vectors into one kernel call) AND dispatch
+                # mode (fused vs staged take different operators)
+                key = ("nn", ops.rank_signature(qq.ranks), plan.fused) \
+                    if qq.ranks else ("filter",)
                 groups.setdefault(key, []).append(i)
             elif plan.kind == "nra" and given[i] is None:
                 # planner-chosen NRA may be re-planned batch-aware below
@@ -110,7 +126,8 @@ class Executor:
                 for i in idxs:
                     plans[i] = planner_lib.plan_shared_scan(
                         self.catalog, queries[i])
-                groups.setdefault(("nn", key[1]), []).extend(idxs)
+                    groups.setdefault(("nn", key[1], plans[i].fused),
+                                      []).append(i)
             else:
                 solo.extend(idxs)
 
@@ -119,13 +136,17 @@ class Executor:
         for i in empty:
             results[i] = []
         for i in solo:
+            before = kops.stats_snapshot()
             results[i] = self._exec_nn(queries[i], plans[i], stats[i],
                                        pred_cache)
+            _charge_kernel_stats([stats[i]], before)
         for idxs in groups.values():
+            before = kops.stats_snapshot()
             group_res = ops.run_scan_group(
                 self.store, self.catalog,
                 [queries[i] for i in idxs], [plans[i] for i in idxs],
                 [stats[i] for i in idxs], pred_cache)
+            _charge_kernel_stats([stats[i] for i in idxs], before)
             for i, res in zip(idxs, group_res):
                 results[i] = res
         return list(zip(results, stats))

@@ -224,16 +224,20 @@ class IVFIndex(SecondaryIndex):
         """VectorRange: dist(col, q) < thresh — probe lists, exact check."""
         q = np.asarray(predicate.q, np.float32)
         # distance filters need high recall: probe ~half the lists
+        mask = np.zeros(segment.n_rows, bool)
+        if predicate.thresh <= 0:          # admits nothing: skip the probe
+            return mask
+        t2 = float(predicate.thresh) ** 2
         n_probe = max(self.n_probe, len(self.centroids) // 2)
         probe = self._probe_order(q)[:n_probe]
-        mask = np.zeros(segment.n_rows, bool)
         for c in probe:
             s = slice(int(self.post_offsets[c]), int(self.post_offsets[c + 1]))
             if s.stop == s.start:
                 continue
-            d = self._euclid(kops.l2_distances(q[None, :],
-                                               self.post_vecs[s])[0])
-            hit = d < predicate.thresh
+            # compare squared distances against thresh^2: same admitted
+            # rows, one less full-posting-list sqrt pass
+            d2 = kops.l2_distances(q[None, :], self.post_vecs[s])[0]
+            hit = d2 < t2
             mask[self.post_rows[s][hit]] = True
         return mask
 

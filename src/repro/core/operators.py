@@ -40,6 +40,15 @@ class ExecStats:
     blocks_read: float = 0.0
     rows_scanned: int = 0
     plan: str = ""
+    # kernel-dispatch accounting (deltas of kernels.ops.stats_snapshot()
+    # around this query's execution; batched queries in one scan group
+    # share kernel calls, so — like blocks_read for shared bitmaps — each
+    # member is charged the group's full delta to stay comparable with
+    # sequential execution; benchmarks measuring fleet totals diff
+    # stats_snapshot() themselves)
+    kernel_launches: int = 0
+    bytes_to_host: int = 0
+    jit_shape_misses: int = 0
 
 
 @dataclasses.dataclass
@@ -52,6 +61,16 @@ class ResultRow:
 # ---------------------------------------------------------------------------
 # predicate evaluation (segment bitmaps + materialized rows)
 # ---------------------------------------------------------------------------
+
+def vrange_mask(d2: np.ndarray, thresh: float) -> np.ndarray:
+    """VectorRange admission from SQUARED distances: d < r compared as
+    d2 < r*r — same rows, no full-matrix sqrt pass.  (sqrt is monotone
+    and d2 is clamped >= 0 by construction; r <= 0 admits nothing, as
+    sqrt(d2) >= 0 > r did before.)"""
+    if thresh <= 0:
+        return np.zeros(d2.shape, bool)
+    return d2 < float(thresh) * float(thresh)
+
 
 def eval_predicate_seg(seg, pred, stats: ExecStats,
                        use_index: bool = True) -> np.ndarray:
@@ -97,10 +116,10 @@ def eval_predicate_seg(seg, pred, stats: ExecStats,
         return np.asarray([term in tokenize(t)
                            for t in seg.columns[pred.col]], bool)
     if isinstance(pred, q.VectorRange):
-        d = np.sqrt(np.maximum(kops.l2_distances(
+        d2 = kops.l2_distances(
             pred.q[None, :], np.asarray(seg.columns[pred.col],
-                                        np.float32))[0], 0))
-        return d < pred.thresh
+                                        np.float32))[0]
+        return vrange_mask(d2, pred.thresh)
     raise TypeError(f"unknown predicate {pred!r}")
 
 
@@ -125,9 +144,8 @@ def eval_predicate_rows(row_values: Dict[str, np.ndarray], pred) -> np.ndarray:
         vecs = np.asarray(row_values[pred.col], np.float32)
         if len(vecs) == 0:
             return np.zeros((0,), bool)
-        d = np.sqrt(np.maximum(
-            kops.l2_distances(pred.q[None, :], vecs)[0], 0))
-        return d < pred.thresh
+        return vrange_mask(kops.l2_distances(pred.q[None, :], vecs)[0],
+                           pred.thresh)
     raise TypeError(f"unknown predicate {pred!r}")
 
 
@@ -585,6 +603,61 @@ class RankScore(PhysicalOp):
         return out
 
 
+class FusedScanTopK(PhysicalOp):
+    """Fused masked scan -> top-k over the packed cross-segment
+    superbatch (kernels/fused_scan.py).  Drains the source's per-segment
+    bitmaps, packs every surviving segment's rank column (plus bitmaps,
+    pks and row-provenance maps) into ONE bucket-padded matrix, and makes
+    a single kernel dispatch for the whole query batch — only ``(nq, k)``
+    distances + row ids return to the host, instead of per-segment
+    ``(nq, n)`` matrices.
+
+    Sound only under the planner's ``_fusable`` gate: unique pks (the
+    device-side cut precedes visibility resolution and the memtable
+    overlay, so no candidate may be shadowed) and exactly one
+    positive-weight vector/spatial rank term (a monotone transform of the
+    kernel's squared-L2 order, so the device (distance, pk) tie-break
+    equals the host merge's lexsort by (score, pk))."""
+    name = "FusedScanTopK"
+
+    def collect(self, ctx: PipelineContext) -> List[List[Candidates]]:
+        from repro.core import segment as seg_lib
+        out: List[List[Candidates]] = [[] for _ in range(ctx.nq)]
+        r0 = ctx.queries[0].ranks[0]
+        segs, masks = [], []
+        for seg, mask in self.children[0].batches(ctx):
+            segs.append(seg)
+            masks.append(mask)
+        if not segs:
+            return out
+        packed = seg_lib.pack_segments(segs, r0.col)
+        mask_all = np.concatenate(masks, axis=1)
+        Q = np.stack([np.asarray(
+            t.q if isinstance(t, q.VectorRank) else t.point, np.float32)
+            for t in (qq.ranks[0] for qq in ctx.queries)])
+        k = max(qq.k for qq in ctx.queries)
+        d2, rows = kops.fused_scan_topk(Q, packed.x, mask_all,
+                                        packed.pks, k)
+        unfiltered_blocks = sum(s.n_blocks for s in segs)
+        for qi, (qq, plan) in enumerate(zip(ctx.queries, ctx.plans)):
+            # stats parity with the staged RankScore operator: candidate
+            # rows ranked, and full scan blocks charged to filterless plans
+            ctx.stats[qi].rows_scanned += int(mask_all[qi].sum())
+            if not plan.indexed and not plan.residual and not plan.subplans:
+                ctx.stats[qi].blocks_read += \
+                    unfiltered_blocks * len(qq.ranks)
+            keep = rows[qi] >= 0
+            rr = rows[qi][keep]
+            if not len(rr):
+                continue
+            w = np.float32(qq.ranks[0].weight)
+            scores = w * np.sqrt(np.maximum(d2[qi][keep], 0)
+                                 ).astype(np.float32)
+            out[qi].append(Candidates(packed.sids[rr], packed.rows[rr],
+                                      scores))
+        return out
+
+
 class VisibilityResolve(PhysicalOp):
     """Drop candidates shadowed by a newer version of their pk anywhere in
     the store (shared lexsort winner set — core/visibility.py)."""
@@ -734,7 +807,12 @@ def run_scan_group(store, catalog, queries, plans, stats,
         if any(p.residual for p in plans):
             source = FilterBitmap([source])
     if is_nn:
-        parts = RankScore([source]).collect(ctx)
+        # planner-chosen dispatch: fused packed kernel (one launch per
+        # batch) vs staged per-segment RankScore; the executor groups by
+        # the fused flag so a group is always homogeneous
+        ranker = FusedScanTopK if all(
+            getattr(p, "fused", False) for p in plans) else RankScore
+        parts = ranker([source]).collect(ctx)
         cands = [Candidates.concat(p) for p in parts]
     else:
         cands = collect_rows(ctx, source)
@@ -813,6 +891,22 @@ def build_tree(plan, catalog=None) -> PhysicalOp:
                              est_cost=C_MERGE * n_segs)
         return node
 
+    def ranker(node: PhysicalOp) -> PhysicalOp:
+        """RankScore (staged per-segment kernels) or FusedScanTopK (one
+        packed launch) per the plan's dispatch choice."""
+        est = (passing / BLOCK_ROWS) * C_VECTOR_BLOCK * \
+            max(1, len(plan.ranks))
+        if plan.fused:
+            return FusedScanTopK(
+                [node],
+                detail=(f"packed {n_segs} segments, k={plan.k}, "
+                        f"1 launch (est_launches=1 vs {max(1, n_segs)} "
+                        "staged)"),
+                est_cost=est)
+        return RankScore(
+            [node], detail=f"{len(plan.ranks)} modalities (batched)",
+            est_cost=est)
+
     kind = plan.kind
     if kind == "empty":
         return EmptyResult(detail=plan.note or "unsatisfiable filter")
@@ -823,20 +917,12 @@ def build_tree(plan, catalog=None) -> PhysicalOp:
                            detail=f"{len(kids)} conjuncts (OR-merge)",
                            est_cost=C_MERGE * n_segs * max(1, len(kids)))
         if kind == "union_nn":
-            est = (passing / BLOCK_ROWS) * C_VECTOR_BLOCK * \
-                max(1, len(plan.ranks))
-            node = RankScore(
-                [node], detail=f"{len(plan.ranks)} modalities (batched)",
-                est_cost=est)
+            node = ranker(node)
         return finishers(node, with_topk=(kind == "union_nn"))
     if kind in ("full_scan", "index_intersect"):
         return finishers(with_residual(source()), with_topk=False)
     if kind in ("full_scan_nn", "prefilter_nn"):
-        est = (passing / BLOCK_ROWS) * C_VECTOR_BLOCK * \
-            max(1, len(plan.ranks))
-        node = RankScore([with_residual(source())],
-                         detail=f"{len(plan.ranks)} modalities (batched)",
-                         est_cost=est)
+        node = ranker(with_residual(source()))
         return finishers(node, with_topk=True)
     if kind == "postfilter_nn":
         r = plan.ranks[0] if plan.ranks else None

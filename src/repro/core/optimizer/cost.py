@@ -20,6 +20,12 @@ C_VECTOR_BLOCK = 3.0       # ivf_scan distance kernel over one block
 C_ROW_RESIDUAL = 1.0 / BLOCK_ROWS   # fetch+eval one row's residual preds
 C_MERGE = 0.5              # per-segment top-k merge overhead
 
+# kernel dispatch model (fused vs staged read-path choice)
+C_LAUNCH = 5.0             # fixed overhead per kernel dispatch
+C_FUSED_BLOCK = 3.4        # fused scan + on-chip top-k merge per block
+#                            (C_VECTOR_BLOCK plus the sort network)
+C_D2H_ROW = 1.0 / BLOCK_ROWS   # ship one row of distances device->host
+
 
 @dataclasses.dataclass
 class PlanCost:
@@ -85,6 +91,23 @@ def postfilter_nn_cost(catalog, vector_rank, filters: List, k: int
     cand = min(catalog.total_rows, k * inflation)
     return PlanCost(blocks=probe * C_VECTOR_BLOCK,
                     candidates=cand * max(1, len(filters)))
+
+
+def staged_dispatch_cost(catalog, passing_rows: float) -> float:
+    """Dispatch + device->host overhead of the staged NN scan path: one
+    distance-kernel launch per segment, and the full per-candidate
+    distance matrix shipped back for the host top-k cut."""
+    n_segs = max(1, len(catalog.store.segments))
+    return C_LAUNCH * n_segs + passing_rows * C_D2H_ROW
+
+
+def fused_dispatch_cost(catalog, passing_rows: float, k: int) -> float:
+    """Dispatch + device->host overhead of the fused packed path: ONE
+    launch for the whole batch, only (k) rows shipped back, plus the
+    on-chip top-k maintenance surcharge over the scanned blocks."""
+    merge_extra = (passing_rows / BLOCK_ROWS) * (C_FUSED_BLOCK
+                                                 - C_VECTOR_BLOCK)
+    return C_LAUNCH + k * C_D2H_ROW + merge_extra
 
 
 def nra_cost(catalog, ranks: List, filters: List, k: int) -> PlanCost:

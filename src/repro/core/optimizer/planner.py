@@ -27,6 +27,11 @@ from repro.core import query as q
 from repro.core.optimizer import cost as cost_lib
 from repro.core.optimizer.stats import Catalog
 from repro.core.types import BLOCK_ROWS
+from repro.kernels import fused_scan as fs_kernel
+
+# global kill switch for the fused kernel path (benchmarks/tests compare
+# against the staged per-segment fallback by flipping this)
+FUSED_ENABLED = True
 
 
 @dataclasses.dataclass
@@ -42,6 +47,8 @@ class Plan:
     note: str = ""
     subplans: List["Plan"] = dataclasses.field(default_factory=list)
     #                                one search-shaped plan per DNF conjunct
+    fused: bool = False            # scan-NN dispatch: fused packed kernel
+    #                                (one launch) vs staged per-segment
     root: object = None            # operator tree (operators.PhysicalOp)
 
     def operator_tree(self, catalog=None):
@@ -56,14 +63,15 @@ class Plan:
         """EXPLAIN: one summary line followed by the operator tree with
         per-operator cost estimates (block-read units)."""
         from repro.core.operators import _pred_detail
+        disp = " dispatch=fused" if self.fused else ""
         if self.subplans:
             head = (f"{self.kind}(conjuncts={len(self.subplans)} "
-                    f"ranks={len(self.ranks)} cost={self.cost:.1f})")
+                    f"ranks={len(self.ranks)} cost={self.cost:.1f}{disp})")
         else:
             ix = _pred_detail(self.indexed)
             rs = _pred_detail(self.residual)
             head = (f"{self.kind}(indexed=[{ix}] residual=[{rs}] "
-                    f"ranks={len(self.ranks)} cost={self.cost:.1f})")
+                    f"ranks={len(self.ranks)} cost={self.cost:.1f}{disp})")
         return head + "\n" + self.operator_tree().explain(1)
 
 
@@ -177,6 +185,57 @@ def plan_union(catalog: Catalog, query: q.HybridQuery,
                 note=f"{len(subs)} conjuncts")
 
 
+def _fusable(catalog: Catalog, query: q.HybridQuery) -> bool:
+    """Can this query take the fused packed scan->top-k kernel path?
+
+    The fused kernel cuts to k ON DEVICE, before visibility resolution,
+    so it is only sound when no candidate can be shadowed by a newer
+    version (``unique_pks``).  It ranks by a single monotone distance —
+    one positive-weight vector/spatial term — and tie-breaks by pk in
+    int32 registers."""
+    if not FUSED_ENABLED or len(query.ranks) != 1:
+        return False
+    r = query.ranks[0]
+    if not isinstance(r, (q.VectorRank, q.SpatialRank)) or not r.weight > 0:
+        return False
+    if not 0 < query.k <= fs_kernel.KMAX:
+        return False
+    store = catalog.store
+    if not store.unique_pks or not store.segments:
+        return False
+    return max(s.pk_max for s in store.segments) < int(fs_kernel.SENTINEL)
+
+
+def _choose_dispatch(catalog: Catalog, plan: Plan,
+                     query: q.HybridQuery) -> Plan:
+    """Physical dispatch choice for scan-shaped NN plans: fused packed
+    kernel (one launch, (nq, k) back to host) vs staged per-segment
+    kernels (one launch per segment, full distance rows back).  Both
+    costs are charged ON TOP of the already-chosen logical plan so the
+    kind selection above is undisturbed; EXPLAIN surfaces the choice."""
+    if plan.kind not in ("full_scan_nn", "prefilter_nn", "union_nn"):
+        return plan
+    if plan.subplans:
+        passing = min(float(catalog.total_rows),
+                      sum(cost_lib.conjunct_passing(
+                          catalog, list(sp.indexed) + list(sp.residual))
+                          for sp in plan.subplans))
+    else:
+        passing = cost_lib.conjunct_passing(
+            catalog, list(plan.indexed) + list(plan.residual))
+    staged = cost_lib.staged_dispatch_cost(catalog, passing)
+    if not _fusable(catalog, query):
+        plan.cost += staged
+        return plan
+    fused = cost_lib.fused_dispatch_cost(catalog, passing, query.k)
+    if fused < staged:
+        plan.fused = True
+        plan.cost += fused
+    else:
+        plan.cost += staged
+    return plan
+
+
 def plan_shared_scan(catalog: Catalog, query: q.HybridQuery) -> Plan:
     """Batch-aware physical choice: when many structurally-identical exact
     NN queries execute together, one shared segment sweep with batched
@@ -187,24 +246,29 @@ def plan_shared_scan(catalog: Catalog, query: q.HybridQuery) -> Plan:
     if not conjuncts:
         return _empty_plan(query)
     if len(conjuncts) > 1:
-        return plan_union(catalog, query, conjuncts)
+        return _choose_dispatch(catalog,
+                                plan_union(catalog, query, conjuncts),
+                                query)
     filters = list(conjuncts[0])
     if filters:
         fplan = _plan_conjunct(catalog, filters)
         c = cost_lib.prefilter_nn_cost(
             catalog, filters, list(query.ranks),
             cost_lib.PlanCost(blocks=fplan.cost, candidates=0))
-        return Plan(kind="prefilter_nn", indexed=fplan.indexed,
-                    residual=fplan.residual, ranks=list(query.ranks),
-                    k=query.k, cost=c.total, note="batched shared scan")
-    c = cost_lib.full_scan_cost(catalog, list(query.ranks))
-    return Plan(kind="full_scan_nn", ranks=list(query.ranks), k=query.k,
-                cost=c.total, note="batched shared scan")
+        chosen = Plan(kind="prefilter_nn", indexed=fplan.indexed,
+                      residual=fplan.residual, ranks=list(query.ranks),
+                      k=query.k, cost=c.total, note="batched shared scan")
+    else:
+        c = cost_lib.full_scan_cost(catalog, list(query.ranks))
+        chosen = Plan(kind="full_scan_nn", ranks=list(query.ranks),
+                      k=query.k, cost=c.total, note="batched shared scan")
+    return _choose_dispatch(catalog, chosen, query)
 
 
 def plan(catalog: Catalog, query: q.HybridQuery) -> Plan:
     if query.is_nn:
-        chosen = plan_hybrid_nn(catalog, query)
+        chosen = _choose_dispatch(catalog, plan_hybrid_nn(catalog, query),
+                                  query)
     else:
         chosen = plan_hybrid_search(catalog, query)
     chosen.operator_tree(catalog)      # attach EXPLAIN tree with estimates

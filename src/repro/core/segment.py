@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -87,6 +88,49 @@ class Segment:
         for name, arr in self.columns.items():
             out[name] = arr[i]
         return out
+
+
+@dataclasses.dataclass
+class PackedColumn:
+    """Cross-segment superbatch: one column of every visible segment
+    stacked into a single matrix, with parallel row-provenance arrays —
+    the unit the fused scan->top-k kernel consumes (one launch per query
+    batch instead of one per segment)."""
+    x: np.ndarray            # (N, d) fp32 stacked column values
+    pks: np.ndarray          # (N,) int64 primary keys
+    sids: np.ndarray         # (N,) int64 owning segment id per row
+    rows: np.ndarray         # (N,) int64 row index inside the segment
+    offsets: np.ndarray      # (n_segs + 1,) int64 segment start offsets
+
+
+# segments are immutable, so a packed column is valid for as long as its
+# exact (col, seg_id...) combination is queried; a small LRU bounds the
+# memory pinned by superbatches that outlive compaction (each entry is a
+# full fp32 copy of the packed column, so the cap is deliberately tight)
+_pack_cache: "OrderedDict[Tuple, PackedColumn]" = OrderedDict()
+_PACK_CACHE_CAP = 4
+
+
+def pack_segments(segments: Sequence[Segment], col: str) -> PackedColumn:
+    """Concatenate ``col`` across ``segments`` into one superbatch."""
+    key = (col,) + tuple(s.seg_id for s in segments)
+    hit = _pack_cache.get(key)
+    if hit is not None:
+        _pack_cache.move_to_end(key)
+        return hit
+    xs = [np.asarray(s.columns[col], np.float32) for s in segments]
+    ns = [s.n_rows for s in segments]
+    packed = PackedColumn(
+        x=np.concatenate(xs) if xs else np.zeros((0, 0), np.float32),
+        pks=np.concatenate([s.pk for s in segments]),
+        sids=np.concatenate([np.full(n, s.seg_id, np.int64)
+                             for s, n in zip(segments, ns)]),
+        rows=np.concatenate([np.arange(n, dtype=np.int64) for n in ns]),
+        offsets=np.cumsum([0] + ns).astype(np.int64))
+    while len(_pack_cache) >= _PACK_CACHE_CAP:
+        _pack_cache.popitem(last=False)           # evict least-recent
+    _pack_cache[key] = packed
+    return packed
 
 
 def merge_segments(schema: Schema, segments: Sequence[Segment],

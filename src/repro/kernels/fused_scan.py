@@ -1,0 +1,133 @@
+"""Pallas TPU kernel: fused filter-aware distance scan → per-query top-k.
+
+The staged read path launches one ``ivf_scan`` per segment per query
+batch and ships the full ``(nq, n)`` distance matrix back to the host,
+where numpy does the top-k cut.  This kernel fuses all three stages —
+predicate masking, distance scan, top-k selection — into ONE launch over
+the cross-segment *packed* superbatch (see ``ops.fused_scan_topk`` for
+the host-side packing/compaction layer):
+
+  * grid = (nq / BLOCK_Q, n / BLOCK_N); the inner (posting) dimension is
+    sequential on TPU, so the output block doubles as the per-query-tile
+    running top-k accumulator (the canonical revisited-block pattern);
+  * per tile, squared-L2 distances use the MXU via
+    ||q - v||^2 = ||q||^2 - 2 q.v + ||v||^2; the predicate bitmap is
+    applied INSIDE the scan (masked lanes get +inf) so staged
+    filter -> rank round trips disappear;
+  * each tile merges its BLOCK_N candidates into the running (BLOCK_Q, K)
+    top-k with one ``lax.sort`` over K + BLOCK_N lanes (a sorting network
+    on TPU; K <= 128 keeps it a small fraction of the matmul cost).
+    Sort keys are (distance, pk) so ties break identically to the host
+    merge's ``lexsort((pk, score))``; the packed row id rides along as a
+    payload;
+  * fully-masked (query-tile, block) pairs are skipped via a per-block
+    occupancy grid the host derives from zone maps + bitmaps — the
+    compute predicate costs one SMEM scalar read.
+
+Only ``(nq, K)`` distances + row ids + pks leave the device instead of
+``(nq, n)`` distances: device->host traffic is k/n of the staged path,
+and dispatches drop from O(segments x predicates) to 1 per query batch.
+
+The bitmap is uint8 (0/1) here for interpret-mode simplicity; a
+production TPU build would pack it 8 rows/byte and unpack in-register.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_Q = 8          # query rows per tile (sublane-aligned)
+BLOCK_N = 512        # packed posting vectors per tile (lane-aligned)
+KMAX = 128           # top-k capacity: one lane register row per query
+
+# int32 sentinel for "no candidate" slots: +inf distance partners with the
+# largest pk/id so sentinels sort after every real candidate
+SENTINEL = np.int32(np.iinfo(np.int32).max)
+
+
+def _fused_scan_topk_kernel(occ_ref, q_ref, x_ref, mask_ref, pk_ref,
+                            out_d_ref, out_p_ref, out_i_ref):
+    """One (query-tile, posting-block) grid step.
+
+    occ_ref:  (1, 1) SMEM — 0 when every lane of this tile is masked
+    q_ref:    (BLOCK_Q, d) queries        (resident across the inner dim)
+    x_ref:    (BLOCK_N, d) packed vectors
+    mask_ref: (BLOCK_Q, BLOCK_N) uint8 predicate bitmap
+    pk_ref:   (1, BLOCK_N) int32 primary keys (tie-break sort key)
+    out_*:    (BLOCK_Q, KMAX) running top-k — same block for every j, so
+              it accumulates across the sequential inner dimension
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_d_ref[...] = jnp.full((BLOCK_Q, KMAX), jnp.inf, jnp.float32)
+        out_p_ref[...] = jnp.full((BLOCK_Q, KMAX), SENTINEL, jnp.int32)
+        out_i_ref[...] = jnp.full((BLOCK_Q, KMAX), SENTINEL, jnp.int32)
+
+    @pl.when(occ_ref[0, 0] != 0)
+    def _scan_and_merge():
+        q = q_ref[...].astype(jnp.float32)
+        x = x_ref[...].astype(jnp.float32)
+        qn = jnp.sum(q * q, axis=1, keepdims=True)            # (BQ, 1)
+        xn = jnp.sum(x * x, axis=1)[None, :]                  # (1, BN)
+        # MXU matmul: (BQ, d) x (d, BN)
+        dots = jax.lax.dot_general(
+            q, x, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m = mask_ref[...] != 0
+        d = jnp.where(m, qn - 2.0 * dots + xn, jnp.inf)
+        ids = j * BLOCK_N + jax.lax.broadcasted_iota(
+            jnp.int32, (BLOCK_Q, BLOCK_N), 1)
+        ids = jnp.where(m, ids, SENTINEL)
+        pks = jnp.where(m, pk_ref[...], SENTINEL)             # (BQ, BN)
+        # merge the block into the running top-k: lexicographic sort by
+        # (distance, pk), packed row id as payload
+        cat_d = jnp.concatenate([out_d_ref[...], d], axis=1)
+        cat_p = jnp.concatenate([out_p_ref[...], pks], axis=1)
+        cat_i = jnp.concatenate([out_i_ref[...], ids], axis=1)
+        sd, sp, si = jax.lax.sort((cat_d, cat_p, cat_i), dimension=1,
+                                  num_keys=2)
+        out_d_ref[...] = sd[:, :KMAX]
+        out_p_ref[...] = sp[:, :KMAX]
+        out_i_ref[...] = si[:, :KMAX]
+
+
+def fused_scan_topk(q: jnp.ndarray, x: jnp.ndarray, mask: jnp.ndarray,
+                    pks: jnp.ndarray, occ: jnp.ndarray,
+                    interpret: bool = True):
+    """q (nq, d); x (n, d); mask (nq, n) uint8; pks (1, n) int32;
+    occ (nq/BLOCK_Q, n/BLOCK_N) int32.  All padded to tile multiples by
+    ``ops.fused_scan_topk``.  Returns ((nq, KMAX) fp32 squared-L2 sorted
+    ascending, (nq, KMAX) int32 pks, (nq, KMAX) int32 packed row ids);
+    empty slots hold (+inf, SENTINEL, SENTINEL)."""
+    nq, d = q.shape
+    n, _ = x.shape
+    assert nq % BLOCK_Q == 0 and n % BLOCK_N == 0, (nq, n)
+    grid = (nq // BLOCK_Q, n // BLOCK_N)
+    return pl.pallas_call(
+        _fused_scan_topk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (i, j),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((BLOCK_Q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((BLOCK_N, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((BLOCK_Q, BLOCK_N), lambda i, j: (i, j)),
+            pl.BlockSpec((1, BLOCK_N), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_Q, KMAX), lambda i, j: (i, 0)),
+            pl.BlockSpec((BLOCK_Q, KMAX), lambda i, j: (i, 0)),
+            pl.BlockSpec((BLOCK_Q, KMAX), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, KMAX), jnp.float32),
+            jax.ShapeDtypeStruct((nq, KMAX), jnp.int32),
+            jax.ShapeDtypeStruct((nq, KMAX), jnp.int32),
+        ],
+        interpret=interpret,
+    )(occ, q, x, mask, pks)

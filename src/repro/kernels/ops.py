@@ -10,8 +10,10 @@ distance scans, PQ ADC, predicate bitmaps, top-k merges.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import os
+import threading
 from typing import Tuple
 
 import jax
@@ -19,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import bitmap_filter as bf_kernel
+from repro.kernels import fused_scan as fs_kernel
 from repro.kernels import ivf_scan as ivf_kernel
 from repro.kernels import pq_adc as pq_kernel
 from repro.kernels import ref
@@ -26,6 +29,64 @@ from repro.kernels import topk_merge as tk_kernel
 
 # global backend switch (tests flip it); env override for benchmarks
 USE_PALLAS = os.environ.get("REPRO_USE_PALLAS", "0") == "1"
+
+
+# ---------------------------------------------------------------------------
+# dispatch accounting
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class KernelStats:
+    """Per-THREAD dispatch counters (monotonic; consumers diff
+    ``stats_snapshot()`` values around a region of interest).  Thread-
+    local so a background flush/compaction worker's index-build kernel
+    dispatches are never attributed to the query thread it races.
+
+    launches       — op dispatches.  The host numpy fast path under
+                     ``HOST_FLOP_CUTOFF`` counts too: at production scale
+                     the cutoff vanishes and every dispatch is a device
+                     launch, so ratios stay machine-independent.
+    bytes_to_host  — bytes of results handed back to the host engine
+                     (device->host traffic when a device backend is
+                     active).  Operand upload is not counted.
+    shape_misses   — first sighting of a (op, bucketed shape) pair, i.e.
+                     jit compile-cache misses caused by ``_bucket``-padded
+                     ragged inputs (the shape-cache itself is process-
+                     wide, like jax's jit cache).
+    """
+    launches: int = 0
+    bytes_to_host: int = 0
+    shape_misses: int = 0
+
+
+_tls = threading.local()
+_seen_shapes: set = set()
+
+
+def thread_stats() -> KernelStats:
+    """The calling thread's dispatch counters."""
+    stats = getattr(_tls, "stats", None)
+    if stats is None:
+        stats = _tls.stats = KernelStats()
+    return stats
+
+
+def stats_snapshot() -> Tuple[int, int, int]:
+    s = thread_stats()
+    return (s.launches, s.bytes_to_host, s.shape_misses)
+
+
+def _dispatched(out_bytes: int, tag: str = None, shape: Tuple = ()) -> None:
+    """Record one op dispatch; with a ``tag`` also track the jit shape
+    cache (host-path calls pass no tag — numpy has no shape cache)."""
+    s = thread_stats()
+    s.launches += 1
+    s.bytes_to_host += int(out_bytes)
+    if tag is not None:
+        key = (tag,) + tuple(shape)
+        if key not in _seen_shapes:
+            _seen_shapes.add(key)
+            s.shape_misses += 1
 
 
 def _pad_to(x: np.ndarray, mult: int, axis: int, value=0.0) -> np.ndarray:
@@ -95,17 +156,21 @@ def l2_distances(q: np.ndarray, x: np.ndarray,
             < HOST_FLOP_CUTOFF:
         qn = (q * q).sum(1)[:, None]
         xn = (x * x).sum(1)[None, :]
-        return qn - 2.0 * (q @ x.T) + xn
+        out = qn - 2.0 * (q @ x.T) + xn
+        _dispatched(out.nbytes)
+        return out
     if use_pallas:
         qp = _pad_to(q, ivf_kernel.BLOCK_Q, 0)
         xp = _pad_bucket(_pad_to(x, ivf_kernel.BLOCK_N, 0, value=1e30),
                          0, value=1e30, floor=ivf_kernel.BLOCK_N)
         out = np.asarray(ivf_kernel.ivf_scan(jnp.asarray(qp),
                                              jnp.asarray(xp)))
+        _dispatched(out.nbytes, "ivf_scan.pallas", qp.shape + xp.shape)
         return out[:len(q), :len(x)]
     qp = _pad_bucket(q, 0, floor=8)
     xp = _pad_bucket(x, 0)
     out = np.asarray(_jit_ivf_ref()(jnp.asarray(qp), jnp.asarray(xp)))
+    _dispatched(out.nbytes, "ivf_scan.ref", qp.shape + xp.shape)
     return out[:len(q), :len(x)]
 
 
@@ -145,19 +210,23 @@ def pq_adc_distances(q: np.ndarray, codes: np.ndarray,
     if len(codes) == 0:
         return np.zeros((0,), np.float32)
     if not use_pallas and codes.size < HOST_FLOP_CUTOFF:
-        return np.take_along_axis(
+        out = np.take_along_axis(
             lut.T, codes.astype(np.int64), axis=0).sum(axis=1) \
             .astype(np.float32)
+        _dispatched(out.nbytes)
+        return out
     if use_pallas:
         cp = _pad_bucket(_pad_to(codes.astype(np.int32),
                                  pq_kernel.BLOCK_N, 0), 0,
                          floor=pq_kernel.BLOCK_N)
         out = np.asarray(pq_kernel.pq_adc(jnp.asarray(cp),
                                           jnp.asarray(lut, jnp.float32)))
+        _dispatched(out.nbytes, "pq_adc.pallas", cp.shape)
         return out[:len(codes)]
     cp = _pad_bucket(codes.astype(np.int32), 0)
     out = np.asarray(_jit_pq_ref()(jnp.asarray(cp),
                                    jnp.asarray(lut, jnp.float32)))
+    _dispatched(out.nbytes, "pq_adc.ref", cp.shape)
     return out[:len(codes)]
 
 
@@ -174,17 +243,21 @@ def range_bitmap(cols: np.ndarray, bounds: np.ndarray,
     if len(cols) == 0:
         return np.zeros((0,), bool)
     if not use_pallas and cols.size < HOST_FLOP_CUTOFF:
-        return np.all((cols >= bounds[:, 0][None])
-                      & (cols <= bounds[:, 1][None]), axis=1)
+        out = np.all((cols >= bounds[:, 0][None])
+                     & (cols <= bounds[:, 1][None]), axis=1)
+        _dispatched(out.nbytes)
+        return out
     if use_pallas:
         cp = _pad_bucket(_pad_to(cols, bf_kernel.BLOCK_N, 0, value=np.inf),
                          0, value=np.inf, floor=bf_kernel.BLOCK_N)
         out = np.asarray(bf_kernel.bitmap_filter(jnp.asarray(cp),
                                                  jnp.asarray(bounds)))
+        _dispatched(out.nbytes, "bitmap.pallas", cp.shape)
         return out[:len(cols)].astype(bool)
     cp = _pad_bucket(cols, 0, value=np.inf)
     out = np.asarray(_jit_bitmap_ref()(jnp.asarray(cp),
                                        jnp.asarray(bounds)))
+    _dispatched(out.nbytes, "bitmap.ref", cp.shape)
     return out[:len(cols)]
 
 
@@ -195,6 +268,120 @@ def rect_filter(points: np.ndarray, rect,
     bounds = np.stack([[r[0], r[2]], [r[1], r[3]]])       # (2, 2)
     return range_bitmap(np.asarray(points, np.float32), bounds,
                         use_pallas=use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# fused masked scan -> top-k (packed cross-segment path)
+# ---------------------------------------------------------------------------
+
+def fused_scan_topk(q: np.ndarray, x: np.ndarray, mask: np.ndarray,
+                    pks: np.ndarray, k: int,
+                    use_pallas: bool = None
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Fused filter-aware scan -> per-query top-k over a packed matrix.
+
+    q (nq, d) queries; x (n, d) packed vectors (all visible segments
+    concatenated); mask (nq, n) bool predicate bitmap; pks (n,) primary
+    keys (< 2^31: the device tie-break key).  Returns (d2 (nq, k) fp32
+    squared-L2 ascending, rows (nq, k) int64 row indices into ``x``; -1
+    marks slots beyond the query's candidate count).  Ties break by
+    (distance, pk) — the host merge's lexsort comparator.  The
+    non-pallas backend SIMULATES the fused kernel: it reproduces the
+    staged path's distance arithmetic at this size (numpy expansion
+    below ``HOST_FLOP_CUTOFF``, the jit'd scan above) and the host
+    merge's (sqrt-distance, pk) comparator exactly, so fused and staged
+    results are bitwise equal backend-for-backend; the Pallas kernel
+    compares squared distances (a monotone transform — same rows except
+    where f32 sqrt rounds two distinct squared distances together).
+
+    ONE dispatch for the whole batch, whatever the segment or predicate
+    count.  Host-side prep: rows are tiled into BLOCK_N blocks; blocks
+    masked out for EVERY query (zone-map/bitmap holes) are compacted away
+    before upload, and the kept-block count is bucket-padded to a power
+    of two so ragged stores hit O(log n) jit shapes.  A per-(query-tile,
+    block) occupancy grid lets the kernel skip tiles that survive
+    compaction but are empty for this query tile.
+    """
+    use_pallas = USE_PALLAS if use_pallas is None else use_pallas
+    q = np.asarray(q, np.float32)
+    x = np.asarray(x, np.float32)
+    mask = np.asarray(mask, bool)
+    nq = len(q)
+    k = int(min(k, fs_kernel.KMAX))
+    empty = (np.full((nq, k), np.inf, np.float32),
+             np.full((nq, k), -1, np.int64))
+    if len(x) == 0 or k == 0 or not mask.any():
+        return empty
+    if not use_pallas:
+        # simulated fused kernel: ONE counted dispatch, with the exact
+        # arithmetic the staged path uses at this size (numpy expansion
+        # below the FLOP cutoff, the same jit'd scan kernel above it)
+        # and the host merge's (score, pk) comparator — so fused and
+        # staged return bitwise-equal results on matching backends
+        if q.shape[0] * x.shape[0] * x.shape[1] < HOST_FLOP_CUTOFF:
+            qn = (q * q).sum(1)[:, None]
+            xn = (x * x).sum(1)[None, :]
+            d2 = qn - 2.0 * (q @ x.T) + xn
+            shape_tag = None
+        else:
+            qp = _pad_bucket(q, 0, floor=8)
+            xp = _pad_bucket(x, 0)
+            d2 = np.asarray(_jit_ivf_ref()(jnp.asarray(qp),
+                                           jnp.asarray(xp)))[:nq, :len(x)]
+            shape_tag = qp.shape + xp.shape
+        s = np.where(mask, np.sqrt(np.maximum(d2, 0),
+                                   dtype=np.float32), np.inf)
+        pks64 = np.asarray(pks, np.int64)
+        out_d = np.full((nq, k), np.inf, np.float32)
+        out_r = np.full((nq, k), -1, np.int64)
+        for qi in range(nq):
+            order = np.lexsort((pks64, s[qi]))[:k]
+            order = order[np.isfinite(s[qi][order])]
+            out_d[qi, :len(order)] = d2[qi][order]
+            out_r[qi, :len(order)] = order
+        _dispatched(out_d.nbytes + out_r.nbytes,
+                    None if shape_tag is None else "fused_scan.ref",
+                    shape_tag or ())
+        return out_d, out_r
+    BQ, BN = fs_kernel.BLOCK_Q, fs_kernel.BLOCK_N
+    n = len(x)
+    # pad rows to a block multiple (mask=0 => padding is never selected)
+    xp = _pad_to(x, BN, 0)
+    mp = _pad_to(mask.astype(np.uint8), BN, 1)
+    pkp = _pad_to(np.asarray(pks, np.int64), BN, 0,
+                  value=int(fs_kernel.SENTINEL))
+    nb = len(xp) // BN
+    # host-side occupancy prefix: drop blocks no query can touch
+    keep = np.nonzero(mp.reshape(nq, nb, BN).any(axis=(0, 2)))[0]
+    if len(keep) == 0:
+        return empty
+    nb_pad = _bucket(len(keep), floor=1)       # blocks, not rows
+    xk = np.zeros((nb_pad * BN, x.shape[1]), np.float32)
+    mk = np.zeros((nq, nb_pad * BN), np.uint8)
+    pkk = np.full((nb_pad * BN,), int(fs_kernel.SENTINEL), np.int64)
+    xk[:len(keep) * BN] = xp.reshape(nb, BN, -1)[keep].reshape(-1,
+                                                               x.shape[1])
+    mk[:, :len(keep) * BN] = \
+        mp.reshape(nq, nb, BN)[:, keep].reshape(nq, -1)
+    pkk[:len(keep) * BN] = pkp.reshape(nb, BN)[keep].reshape(-1)
+    qp = _pad_to(q, BQ, 0)
+    mkq = _pad_to(mk, BQ, 0)
+    occ = mkq.reshape(len(qp) // BQ, BQ, nb_pad, BN) \
+        .any(axis=(1, 3)).astype(np.int32)
+    pk32 = pkk.astype(np.int32)[None, :]
+    d2, _, idx = fs_kernel.fused_scan_topk(
+        jnp.asarray(qp), jnp.asarray(xk), jnp.asarray(mkq),
+        jnp.asarray(pk32), jnp.asarray(occ))
+    d2 = np.asarray(d2)
+    idx = np.asarray(idx)
+    _dispatched(d2.nbytes + 2 * idx.nbytes, "fused_scan.pallas",
+                qp.shape + xk.shape)
+    d2, idx = d2[:nq, :k], idx[:nq, :k]
+    # map packed block-compacted indices back to rows of the caller's x
+    safe = np.minimum(idx, len(keep) * BN - 1)
+    rows = keep[safe // BN] * BN + safe % BN
+    rows = np.where(idx == int(fs_kernel.SENTINEL), -1, rows)
+    return d2, rows.astype(np.int64)
 
 
 # ---------------------------------------------------------------------------
@@ -212,6 +399,9 @@ def merge_topk(dists: np.ndarray, ids: np.ndarray, k: int,
         return np.zeros((0,), np.float32), np.zeros((0,), np.int64)
     if use_pallas:
         d, i = tk_kernel.topk_merge(jnp.asarray(dists), jnp.asarray(ids), k)
+        _dispatched(d.nbytes + i.nbytes, "topk_merge.pallas",
+                    dists.shape + (k,))
         return np.asarray(d), np.asarray(i)
     d, i = ref.topk_merge_ref(jnp.asarray(dists), jnp.asarray(ids), k)
+    _dispatched(d.nbytes + i.nbytes, "topk_merge.ref", dists.shape + (k,))
     return np.asarray(d), np.asarray(i)

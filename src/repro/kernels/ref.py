@@ -43,6 +43,26 @@ def topk_merge_ref(dists: jnp.ndarray, ids: jnp.ndarray, k: int):
     return flat_d[order], flat_i[order]
 
 
+def fused_topk_ref(q: jnp.ndarray, x: jnp.ndarray, mask: jnp.ndarray,
+                   pks: jnp.ndarray, k: int):
+    """Fused masked scan -> top-k oracle (kernels/fused_scan.py).
+
+    q (nq, d); x (n, d); mask (nq, n); pks (1, n) int32 -> per query the k
+    smallest squared-L2 distances over mask-admitted rows, ties broken by
+    pk, then row id.  Returns ((nq, k) fp32, (nq, k) int32 pks, (nq, k)
+    int32 row ids); empty slots hold (+inf, INT32_MAX, INT32_MAX)."""
+    sentinel = jnp.int32(jnp.iinfo(jnp.int32).max)
+    d = ivf_scan_ref(q, x)
+    m = mask != 0
+    d = jnp.where(m, d, jnp.inf)
+    ids = jnp.broadcast_to(
+        jax.lax.broadcasted_iota(jnp.int32, d.shape, 1), d.shape)
+    ids = jnp.where(m, ids, sentinel)
+    pkb = jnp.where(m, pks.astype(jnp.int32), sentinel)
+    sd, sp, si = jax.lax.sort((d, pkb, ids), dimension=1, num_keys=2)
+    return sd[:, :k], sp[:, :k], si[:, :k]
+
+
 def rect_filter_ref(points: jnp.ndarray, rect: jnp.ndarray) -> jnp.ndarray:
     """points (n, 2); rect (4,) = (xmin, ymin, xmax, ymax) -> (n,) bool."""
     x, y = points[:, 0], points[:, 1]

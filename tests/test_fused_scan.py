@@ -1,0 +1,295 @@
+"""Fused scan->top-k kernel path: parity sweeps vs the ref oracle and
+end-to-end fused-vs-staged equivalence on the TRACY workload."""
+import numpy as np
+import pytest
+
+from benchmarks import tracy
+from repro.core import query as q
+from repro.core.executor import Executor
+from repro.core.optimizer import planner as planner_lib
+from repro.kernels import fused_scan as fs
+from repro.kernels import ops as kops
+from repro.kernels import ref
+
+import jax.numpy as jnp
+
+
+@pytest.fixture
+def fused_toggle():
+    prev = planner_lib.FUSED_ENABLED
+    yield
+    planner_lib.FUSED_ENABLED = prev
+
+
+def _pad(a, mult, axis, value=0):
+    pad = (-a.shape[axis]) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return np.pad(a, widths, constant_values=value)
+
+
+def _brute_topk(Q, X, mask, pks, k):
+    """(d2, row) oracle: smallest squared-L2 per query over admitted
+    rows, ties by (distance, pk)."""
+    d2 = ((Q[:, None, :].astype(np.float64)
+           - X[None, :, :].astype(np.float64)) ** 2).sum(-1)
+    out = []
+    for qi in range(len(Q)):
+        dd = np.where(mask[qi], d2[qi], np.inf)
+        order = np.lexsort((pks, dd))[:k]
+        out.append(order[np.isfinite(dd[order])])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nq,n,d", [(8, 512, 16), (8, 1024, 64),
+                                    (16, 512, 8)])
+@pytest.mark.parametrize("mask_kind", ["full", "partial", "block_holes"])
+def test_kernel_matches_ref(nq, n, d, mask_kind):
+    rng = np.random.default_rng(0)
+    Q = rng.normal(size=(nq, d)).astype(np.float32)
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    if mask_kind == "full":
+        mask = np.ones((nq, n), np.uint8)
+    elif mask_kind == "partial":
+        mask = (rng.random((nq, n)) < 0.3).astype(np.uint8)
+    else:           # whole tiles masked for every query (occupancy skip)
+        mask = np.ones((nq, n), np.uint8)
+        mask[:, : fs.BLOCK_N] = 0
+        mask[:, -fs.BLOCK_N // 2:] = 0
+    pks = (np.arange(n, dtype=np.int32) * 7 + 3)
+    occ = mask.reshape(nq // fs.BLOCK_Q, fs.BLOCK_Q,
+                       n // fs.BLOCK_N, fs.BLOCK_N) \
+        .any(axis=(1, 3)).astype(np.int32)
+    kd, kp, ki = fs.fused_scan_topk(
+        jnp.asarray(Q), jnp.asarray(X), jnp.asarray(mask),
+        jnp.asarray(pks[None, :]), jnp.asarray(occ), interpret=True)
+    rd, rp, ri = ref.fused_topk_ref(
+        jnp.asarray(Q), jnp.asarray(X), jnp.asarray(mask),
+        jnp.asarray(pks[None, :]), k=fs.KMAX)
+    np.testing.assert_allclose(np.asarray(kd), np.asarray(rd),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(ki), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(kp), np.asarray(rp))
+
+
+def test_kernel_tie_break_by_pk():
+    """Duplicate vectors give bitwise-equal distances: the winner must
+    be the smallest pk, in both backends, regardless of row order."""
+    rng = np.random.default_rng(1)
+    d = 16
+    base = rng.normal(size=(8, d)).astype(np.float32)
+    X = np.repeat(base, 64, axis=0)                  # 512 rows, 8 classes
+    perm = rng.permutation(len(X))
+    X = X[perm]
+    pks = rng.permutation(len(X)).astype(np.int32) * 5 + 2
+    Q = base[:1] + 0.01
+    Qp = _pad(Q, fs.BLOCK_Q, 0)
+    mask = np.ones((len(Qp), len(X)), np.uint8)
+    occ = np.ones((1, 1), np.int32)
+    kd, kp, ki = fs.fused_scan_topk(
+        jnp.asarray(Qp), jnp.asarray(X), jnp.asarray(mask),
+        jnp.asarray(pks[None, :]), jnp.asarray(occ), interpret=True)
+    kd, kp, ki = (np.asarray(a)[0] for a in (kd, kp, ki))
+    # within every run of equal distances, pks must ascend
+    for i in range(1, fs.KMAX):
+        if kd[i] == kd[i - 1]:
+            assert kp[i] > kp[i - 1]
+    rd, rp, ri = ref.fused_topk_ref(
+        jnp.asarray(Qp), jnp.asarray(X), jnp.asarray(mask),
+        jnp.asarray(pks[None, :]), k=fs.KMAX)
+    np.testing.assert_array_equal(ki, np.asarray(ri)[0])
+
+
+# ---------------------------------------------------------------------------
+# ops wrapper: ragged shapes, k sweep, degenerate bitmaps, backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 10, 128])
+@pytest.mark.parametrize("nq,n,d", [(1, 700, 24), (5, 1400, 32),
+                                    (9, 130, 8)])
+def test_ops_fused_matches_bruteforce_ragged(nq, n, d, k):
+    rng = np.random.default_rng(2)
+    Q = rng.normal(size=(nq, d)).astype(np.float32)
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    mask = rng.random((nq, n)) < 0.4
+    mask[0, :] = False                                # all-masked query
+    if nq > 1:
+        mask[1, :] = True                             # full bitmap
+    pks = np.arange(n, dtype=np.int64) * 3 + 11
+    want = _brute_topk(Q, X, mask, pks, k)
+    for up in (True, False):
+        d2, rows = kops.fused_scan_topk(Q, X, mask, pks, k, use_pallas=up)
+        assert d2.shape == (nq, k) and rows.shape == (nq, k)
+        for qi in range(nq):
+            got = rows[qi][rows[qi] >= 0]
+            np.testing.assert_array_equal(got, want[qi],
+                                          err_msg=f"q{qi} pallas={up}")
+            assert (rows[qi][len(want[qi]):] == -1).all()
+            assert np.isinf(d2[qi][len(want[qi]):]).all()
+
+
+def test_ops_fused_all_masked_segment_and_empty():
+    rng = np.random.default_rng(3)
+    Q = rng.normal(size=(3, 16)).astype(np.float32)
+    X = rng.normal(size=(1100, 16)).astype(np.float32)
+    pks = np.arange(1100, dtype=np.int64)
+    # a whole "segment" range masked for every query (block compaction)
+    mask = np.ones((3, 1100), bool)
+    mask[:, 200:900] = False
+    want = _brute_topk(Q, X, mask, pks, 10)
+    for up in (True, False):
+        _, rows = kops.fused_scan_topk(Q, X, mask, pks, 10, use_pallas=up)
+        for qi in range(3):
+            np.testing.assert_array_equal(rows[qi][rows[qi] >= 0],
+                                          want[qi])
+    # fully empty bitmap and empty input
+    _, rows = kops.fused_scan_topk(Q, X, np.zeros((3, 1100), bool), pks, 4)
+    assert (rows == -1).all()
+    _, rows = kops.fused_scan_topk(Q, np.zeros((0, 16), np.float32),
+                                   np.zeros((3, 0), bool),
+                                   np.zeros(0, np.int64), 4)
+    assert rows.shape == (3, 4) and (rows == -1).all()
+
+
+def test_ops_fused_jit_ref_path_matches_host(monkeypatch):
+    """Force the jit'd ref backend (cutoff=0) against the host fast
+    path: same rows selected on non-tied data."""
+    rng = np.random.default_rng(4)
+    Q = rng.normal(size=(4, 24)).astype(np.float32)
+    X = rng.normal(size=(900, 24)).astype(np.float32)
+    mask = rng.random((4, 900)) < 0.5
+    pks = np.arange(900, dtype=np.int64) + 5
+    d2_host, rows_host = kops.fused_scan_topk(Q, X, mask, pks, 12,
+                                              use_pallas=False)
+    monkeypatch.setattr(kops, "HOST_FLOP_CUTOFF", 0)
+    d2_jit, rows_jit = kops.fused_scan_topk(Q, X, mask, pks, 12,
+                                            use_pallas=False)
+    np.testing.assert_array_equal(rows_host, rows_jit)
+    np.testing.assert_allclose(d2_host, d2_jit, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: fused vs staged over the TRACY workload
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tracy_store():
+    cfg = tracy.TracyConfig(n_rows=1200, dim=32, seed=7, flush_rows=300,
+                            fanout=64)
+    store, data = tracy.build_store(cfg)
+    # live memtable rows on top of the segments (overlay must merge)
+    pks, batch = data.batch(40)
+    store.put(pks, batch)
+    return store, data
+
+
+def _run_both(ex, queries_a, queries_b):
+    planner_lib.FUSED_ENABLED = True
+    fused = ex.execute_many(queries_a)
+    planner_lib.FUSED_ENABLED = False
+    staged = ex.execute_many(queries_b)
+    return fused, staged
+
+
+def test_execute_many_fused_vs_staged_tracy(tracy_store, fused_toggle):
+    store, data = tracy_store
+    assert len(store.segments) >= 4 and store.memtable_rows > 0
+    _, nn_t = tracy.make_templates(data)
+    ex = Executor(store)
+    any_fused = False
+    for ti, tmpl in enumerate(nn_t):
+        data.rng = np.random.default_rng(50 + ti)
+        qa = [tmpl() for _ in range(6)]
+        data.rng = np.random.default_rng(50 + ti)
+        qb = [tmpl() for _ in range(6)]
+        fused, staged = _run_both(ex, qa, qb)
+        used = any("dispatch=fused" in st.plan for _, st in fused)
+        any_fused |= used
+        for (ra, sa), (rb, sb) in zip(fused, staged):
+            assert [(r.pk, float(r.score)) for r in ra] == \
+                [(r.pk, float(r.score)) for r in rb], f"template {ti}"
+            if used:
+                assert sa.kernel_launches <= sb.kernel_launches
+                assert sa.bytes_to_host < sb.bytes_to_host
+    assert any_fused, "no template exercised the fused path"
+
+
+def test_fused_plan_explain_and_stats(tracy_store, fused_toggle):
+    store, data = tracy_store
+    ex = Executor(store)
+    planner_lib.FUSED_ENABLED = True
+    qq = q.HybridQuery(ranks=[q.VectorRank(
+        "embedding", data.query_vec(), 1.0)], k=10)
+    plan = planner_lib.plan_shared_scan(ex.catalog, qq)
+    assert plan.fused
+    text = plan.describe()
+    assert "dispatch=fused" in text and "FusedScanTopK" in text
+    assert "RankScore" not in text
+    planner_lib.FUSED_ENABLED = False
+    plan2 = planner_lib.plan_shared_scan(ex.catalog, qq)
+    assert not plan2.fused and "RankScore" in plan2.describe()
+    planner_lib.FUSED_ENABLED = True
+    res, st = ex.execute(qq, plan)
+    assert len(res) == 10
+    assert st.kernel_launches >= 1 and st.bytes_to_host > 0
+
+
+def test_fused_gate_requires_unique_pks(fused_toggle):
+    planner_lib.FUSED_ENABLED = True
+    cfg = tracy.TracyConfig(n_rows=600, dim=16, seed=3, flush_rows=200,
+                            fanout=64)
+    store, data = tracy.build_store(cfg)
+    ex = Executor(store)
+    qq = q.HybridQuery(ranks=[q.VectorRank(
+        "embedding", data.query_vec(), 1.0)], k=5)
+    assert planner_lib.plan_shared_scan(ex.catalog, qq).fused
+    # overwrite an existing pk: visibility resolution now matters, and
+    # the device-side cut would race it -> the planner must fall back
+    pks, batch = data.batch(1)
+    store.put([0], batch)
+    store.flush()
+    assert not store.unique_pks
+    ex2 = Executor(store)
+    plan = planner_lib.plan_shared_scan(ex2.catalog, qq)
+    assert not plan.fused
+    res, _ = ex2.execute(qq, plan)
+    assert len({r.pk for r in res}) == len(res)       # winners, no dupes
+
+
+def test_fused_gate_rank_shapes(tracy_store, fused_toggle):
+    store, data = tracy_store
+    ex = Executor(store)
+    planner_lib.FUSED_ENABLED = True
+    vec = data.query_vec()
+    multi = q.HybridQuery(ranks=[q.VectorRank("embedding", vec, 0.5),
+                                 q.SpatialRank("coordinate", (1., 2.), 0.2)],
+                          k=5)
+    assert not planner_lib.plan_shared_scan(ex.catalog, multi).fused
+    big_k = q.HybridQuery(ranks=[q.VectorRank("embedding", vec, 1.0)],
+                          k=fs.KMAX + 1)
+    assert not planner_lib.plan_shared_scan(ex.catalog, big_k).fused
+    neg_w = q.HybridQuery(ranks=[q.VectorRank("embedding", vec, -1.0)],
+                          k=5)
+    assert not planner_lib.plan_shared_scan(ex.catalog, neg_w).fused
+
+
+def test_vector_range_squared_compare(tracy_store):
+    """VectorRange masks compare squared distances (satellite): results
+    must equal the sqrt formulation, including thresh <= 0."""
+    from repro.core.operators import eval_predicate_rows
+    store, data = tracy_store
+    seg = store.segments[0]
+    vecs = np.asarray(seg.columns["embedding"], np.float32)
+    qv = data.query_vec()
+    for thresh in (8.0, 0.0, -1.0):
+        pred = q.VectorRange("embedding", qv, thresh)
+        got = eval_predicate_rows({"embedding": vecs}, pred)
+        want = np.sqrt(np.maximum(
+            ((vecs - qv[None, :]) ** 2).sum(1), 0)) < thresh
+        np.testing.assert_array_equal(got, want)
