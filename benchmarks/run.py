@@ -23,7 +23,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--only", default=None,
-                    help="comma list: fig4,tab1,fig5,ingest,mq")
+                    help="comma list: fig4,tab1,fig5,ingest,mq,sharded")
     ap.add_argument("--json", default=None,
                     help="write structured per-section results to PATH")
     args = ap.parse_args()
@@ -31,7 +31,7 @@ def main() -> None:
 
     from benchmarks import (continuous_bench, dynamic_workload,
                             hybrid_latency, ingestion, multi_query,
-                            pq_study)
+                            pq_study, sharded_bench)
     sections = [
         ("tab1", hybrid_latency),
         ("fig4", dynamic_workload),
@@ -39,6 +39,7 @@ def main() -> None:
         ("ingest", ingestion),
         ("pq", pq_study),
         ("mq", multi_query),
+        ("sharded", sharded_bench),
     ]
     structured = {}
     print("name,us_per_call,derived")

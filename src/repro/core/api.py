@@ -39,7 +39,9 @@ from repro.core.continuous import ContinuousEngine
 from repro.core.executor import Executor
 from repro.core.lsm import LSMConfig, LSMStore
 from repro.core.operators import ExecStats, ResultRow
-from repro.core.optimizer import planner as planner_lib
+from repro.core.optimizer import planner as planner_lib  # noqa: F401
+from repro.core.shards import (ShardedContinuousEngine, ShardedExecutor,
+                               ShardRouter)
 # re-exported so `from repro.core.api import ...` is a one-stop import
 from repro.core.query import (And, AsyncQuery, GeoWithin,  # noqa: F401
                               HybridQuery, Not, Or, Range, SpatialRank,
@@ -53,6 +55,7 @@ __all__ = [
     "And", "Or", "Not", "Range", "GeoWithin", "TextContains", "VectorRange",
     "VectorRank", "SpatialRank", "TextRank", "HybridQuery",
     "Column", "ColumnType", "IndexKind", "Schema", "LSMConfig",
+    "ShardRouter", "ShardedExecutor", "ShardedContinuousEngine",
 ]
 
 DEFAULT_TABLE = "default"
@@ -124,12 +127,15 @@ class QueryBuilder:
         return q.HybridQuery(where=self._where, ranks=list(self._ranks),
                              k=self._k, select=self._select)
 
-    def plan(self) -> planner_lib.Plan:
-        return planner_lib.plan(self._table.executor.catalog, self.build())
+    def plan(self):
+        """The table's plan for this query: a ``Plan`` on single-store
+        tables, a ``ShardedPlan`` (fan-out + merge) on sharded ones."""
+        return self._table.executor.plan(self.build())
 
     def explain(self) -> str:
         """EXPLAIN text: plan summary + operator tree with cost
-        estimates (``BitmapUnion`` with per-conjunct costs for OR)."""
+        estimates (``BitmapUnion`` with per-conjunct costs for OR;
+        ``ShardFanout(n=N)`` with per-shard subtrees when sharded)."""
         return self.plan().describe()
 
     def execute(self) -> Tuple[List[ResultRow], ExecStats]:
@@ -145,23 +151,36 @@ class QueryBuilder:
 
 
 class Table:
-    """One LSM-backed table: writes, queries, and continuous
-    subscriptions, with the executor and continuous engine owned
-    internally."""
+    """One table: writes, queries, and continuous subscriptions, with the
+    executor and continuous engine owned internally.  Backed by a single
+    ``LSMStore`` by default; ``shards=N`` (N > 1) swaps in the sharded
+    serving subsystem — a hash-partitioned ``ShardRouter`` store and the
+    scatter-gather ``ShardedExecutor`` — behind the same surface."""
 
     def __init__(self, name: str, schema: Optional[Schema] = None,
                  cfg: Optional[LSMConfig] = None, *,
-                 store: Optional[LSMStore] = None,
+                 store: Optional[Union[LSMStore, ShardRouter]] = None,
+                 shards: int = 1,
                  continuous_mode: str = "views",
                  view_budget_bytes: float = 64 * 2**20):
         if (schema is None) == (store is None):
             raise ValueError("pass exactly one of schema= or store=")
+        if store is not None and shards > 1:
+            raise ValueError("pass shards= only with schema= (adopted "
+                             "stores keep their own partitioning)")
         self.name = name
-        self.store = store if store is not None else LSMStore(schema, cfg)
-        self.executor = Executor(self.store)
+        if store is not None:
+            self.store = store
+        elif shards > 1:
+            self.store = ShardRouter(schema, cfg, n_shards=shards)
+        else:
+            self.store = LSMStore(schema, cfg)
+        self.executor = ShardedExecutor(self.store) \
+            if isinstance(self.store, ShardRouter) else Executor(self.store)
         self.continuous_mode = continuous_mode
         self.view_budget_bytes = view_budget_bytes
-        self._engine: Optional[ContinuousEngine] = None
+        self._engine: Optional[Union[ContinuousEngine,
+                                     ShardedContinuousEngine]] = None
 
     # -------------------------------------------------------------- write
     def put(self, pks: Sequence[int], batch: Dict[str, Any]) -> None:
@@ -202,16 +221,28 @@ class Table:
         return self.executor.execute_many(built)
 
     def explain(self, query: q.HybridQuery) -> str:
-        return planner_lib.plan(self.executor.catalog, query).describe()
+        return self.executor.plan(query).describe()
 
     # --------------------------------------------------------- continuous
     @property
-    def engine(self) -> ContinuousEngine:
+    def engine(self) -> Union[ContinuousEngine, ShardedContinuousEngine]:
         if self._engine is None:
-            self._engine = ContinuousEngine(
-                self.store, mode=self.continuous_mode,
-                view_budget_bytes=self.view_budget_bytes)
+            if isinstance(self.store, ShardRouter):
+                # per-shard deltas aggregate into one scheduling state;
+                # due queries re-execute via scatter-gather (views do not
+                # span shards yet)
+                self._engine = ShardedContinuousEngine(
+                    self.store, executor=self.executor)
+            else:
+                self._engine = ContinuousEngine(
+                    self.store, mode=self.continuous_mode,
+                    view_budget_bytes=self.view_budget_bytes)
         return self._engine
+
+    @property
+    def n_shards(self) -> int:
+        return self.store.n_shards \
+            if isinstance(self.store, ShardRouter) else 1
 
     def subscribe(self, query: q.HybridQuery,
                   interval_s: Optional[float] = None,
@@ -250,31 +281,39 @@ class Table:
 class Database:
     """Session facade: tables + batched cross-query execution + the
     continuous virtual clock.  ``Database(schema)`` creates a default
-    table; ``create_table`` adds named ones."""
+    table; ``create_table`` adds named ones.  ``Database(schema,
+    shards=N)`` makes the default table a hash-partitioned N-shard LSM
+    with transparent scatter-gather execution (core/shards)."""
 
     def __init__(self, schema: Optional[Schema] = None,
                  cfg: Optional[LSMConfig] = None, *,
+                 shards: int = 1,
                  continuous_mode: str = "views",
                  view_budget_bytes: float = 64 * 2**20):
         self.continuous_mode = continuous_mode
         self.view_budget_bytes = view_budget_bytes
+        self.default_shards = int(shards)
         self._tables: Dict[str, Table] = {}
         if schema is not None:
             self.create_table(DEFAULT_TABLE, schema, cfg)
 
     # -------------------------------------------------------------- tables
     def create_table(self, name: str, schema: Schema,
-                     cfg: Optional[LSMConfig] = None) -> Table:
+                     cfg: Optional[LSMConfig] = None,
+                     shards: Optional[int] = None) -> Table:
         if name in self._tables:
             raise ValueError(f"table {name!r} already exists")
         self._tables[name] = Table(
-            name, schema, cfg, continuous_mode=self.continuous_mode,
+            name, schema, cfg,
+            shards=self.default_shards if shards is None else int(shards),
+            continuous_mode=self.continuous_mode,
             view_budget_bytes=self.view_budget_bytes)
         return self._tables[name]
 
-    def adopt_store(self, name: str, store: LSMStore) -> Table:
-        """Wrap an already-built ``LSMStore`` (workload builders,
-        benchmarks) as a table of this database."""
+    def adopt_store(self, name: str,
+                    store: Union[LSMStore, ShardRouter]) -> Table:
+        """Wrap an already-built ``LSMStore`` (or ``ShardRouter``) —
+        workload builders, benchmarks — as a table of this database."""
         if name in self._tables:
             raise ValueError(f"table {name!r} already exists")
         self._tables[name] = Table(

@@ -53,6 +53,12 @@ class Executor:
         self.catalog = Catalog(store)
 
     # ------------------------------------------------------------- public
+    def plan(self, query: q.HybridQuery) -> planner_lib.Plan:
+        """Plan one query against this executor's catalog (the facade's
+        EXPLAIN entry point; ShardedExecutor overrides it with the
+        fan-out plan)."""
+        return planner_lib.plan(self.catalog, query)
+
     def execute(self, query: q.HybridQuery,
                 plan: Optional[planner_lib.Plan] = None
                 ) -> Tuple[List[ResultRow], ExecStats]:

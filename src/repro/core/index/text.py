@@ -115,9 +115,31 @@ class InvertedTextIndex(SecondaryIndex):
         return vals, rows
 
     def iterator(self, segment, query) -> ExactSortedAccess:
+        """Sorted access for NRA in EXACTLY the ``TextRank`` metric:
+        d = 1 / (1 + 10 * Σ_t tf(t, doc) / (len(doc) + 1)), computed from
+        the posting tfs and stored doc lengths with the same float64
+        arithmetic ``rank_distances`` uses, then cast to float32 — so the
+        distances NRA books as bounds ARE the distances refinement
+        scores with.  (A BM25-ordered stream certifies bounds in a
+        different metric and silently breaks the NRA winner-set
+        guarantee.)  Rows matching no query term sit at the metric's
+        ceiling 1.0 and are never yielded; stream exhaustion raises the
+        modality bottom to dmax = 1.0, which is their exact distance."""
         terms = query if isinstance(query, (list, tuple)) else [query]
-        scores, rows = self._bm25(terms)
-        dist = 1.0 / (1.0 + scores)          # ascending = most relevant
+        tf_sum: Dict[int, float] = {}
+        for term in terms:                  # duplicates count twice, as in
+            entry = self.postings.get(str(term).lower())  # rank_distances
+            if entry is None:
+                continue
+            for r, tf in zip(*entry):
+                tf_sum[int(r)] = tf_sum.get(int(r), 0.0) + float(tf)
+        if not tf_sum:
+            return ExactSortedAccess(np.zeros((0,), np.float32),
+                                     np.zeros((0,), np.int64))
+        rows = np.fromiter(tf_sum.keys(), np.int64, len(tf_sum))
+        tfs = np.fromiter(tf_sum.values(), np.float64, len(tf_sum))
+        score = tfs / (self.doc_len[rows].astype(np.float64) + 1.0)
+        dist = (1.0 / (1.0 + score * 10.0)).astype(np.float32)
         return ExactSortedAccess(dist, rows)
 
     # ---------------------------------------------------------- optimizer

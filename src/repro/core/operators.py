@@ -49,6 +49,14 @@ class ExecStats:
     kernel_launches: int = 0
     bytes_to_host: int = 0
     jit_shape_misses: int = 0
+    # sharded scatter-gather accounting (core/shards ShardedExecutor):
+    # fan-out width (0 = unsharded execution), candidate rows entering the
+    # cross-shard device merge (bounded by shards * k), and the critical
+    # path — rows scanned on the busiest shard (the wall-clock proxy when
+    # shards execute in parallel)
+    shards: int = 0
+    merge_rows: int = 0
+    shard_rows_max: int = 0
 
 
 @dataclasses.dataclass
@@ -727,6 +735,31 @@ class NRAMerge(PhysicalOp):
 class EmptyResult(PhysicalOp):
     """The filter expression normalized to FALSE: nothing to scan."""
     name = "EmptyResult"
+
+
+class ShardFanout(PhysicalOp):
+    """Scatter one query batch to every shard's independent pipeline
+    (rows are hash-partitioned by pk across shards — core/shards).  The
+    children are the per-shard operator subtrees, each costed against
+    that shard's own catalog; execution runs them over each shard's
+    segments, memtable and visibility state in full."""
+    name = "ShardFanout"
+
+
+class CrossShardTopKMerge(PhysicalOp):
+    """Device-side merge of the per-shard top-k candidate lists into the
+    global top-k (``kernels/topk_merge.py::batched_topk_merge``, ordered
+    by the host comparator (score, pk)).  Shards partition pks, so the
+    merge of per-shard top-ks IS the exact global top-k; the host never
+    handles more than shards * k rows per query."""
+    name = "CrossShardTopKMerge"
+
+
+class ShardConcat(PhysicalOp):
+    """Shard-wise concatenation of filter/scan results: shards hold
+    disjoint pk sets, so concatenating and re-sorting by the result
+    comparator (score, pk) reproduces the single-store output exactly."""
+    name = "ShardConcat"
 
 
 # ---------------------------------------------------------------------------

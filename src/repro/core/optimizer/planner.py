@@ -59,9 +59,18 @@ class Plan:
             self.root = ops_lib.build_tree(self, catalog)
         return self.root
 
+    _describe_cache: Optional[str] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
     def describe(self) -> str:
         """EXPLAIN: one summary line followed by the operator tree with
-        per-operator cost estimates (block-read units)."""
+        per-operator cost estimates (block-read units).  Rendered once
+        per plan object — a plan is immutable after planning, and the
+        executor stamps this string into every query's ``ExecStats``
+        (N shards re-describing the same plan would otherwise re-render
+        the tree N times)."""
+        if self._describe_cache is not None:
+            return self._describe_cache
         from repro.core.operators import _pred_detail
         disp = " dispatch=fused" if self.fused else ""
         if self.subplans:
@@ -72,7 +81,8 @@ class Plan:
             rs = _pred_detail(self.residual)
             head = (f"{self.kind}(indexed=[{ix}] residual=[{rs}] "
                     f"ranks={len(self.ranks)} cost={self.cost:.1f}{disp})")
-        return head + "\n" + self.operator_tree().explain(1)
+        self._describe_cache = head + "\n" + self.operator_tree().explain(1)
+        return self._describe_cache
 
 
 def _index_supported(catalog: Catalog, p) -> bool:

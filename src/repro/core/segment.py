@@ -73,11 +73,18 @@ class Segment:
 
     # ---- point lookups ----------------------------------------------------
     def get(self, key: int) -> Optional[int]:
-        """Row index of ``key`` or None (binary search over sorted pk)."""
+        """Row index of the NEWEST version of ``key`` or None (binary
+        search over sorted pk).  A segment can legally hold several
+        versions of one pk — original + update ingested into the same
+        memtable flush side by side — so the equal-pk run is resolved by
+        max seqno, never by position."""
         i = int(np.searchsorted(self.pk, key))
-        if i < self.n_rows and self.pk[i] == key:
+        if i >= self.n_rows or self.pk[i] != key:
+            return None
+        j = int(np.searchsorted(self.pk, key, side="right"))
+        if j - i == 1:
             return i
-        return None
+        return i + int(np.argmax(self.seqno[i:j]))
 
     def may_contain(self, key: int) -> bool:
         return self.n_rows > 0 and self.pk_min <= key <= self.pk_max

@@ -144,6 +144,26 @@ def _jit_bitmap_ref():
 HOST_FLOP_CUTOFF = 4_000_000
 
 
+def _l2_host(q: np.ndarray, x: np.ndarray) -> np.ndarray:
+    """Host numpy squared-L2 with BATCH-SHAPE-INDEPENDENT rounding.
+
+    The difference form ``((x - q)**2).sum(-1)`` computes every output
+    element from exactly its own (q_i, x_j) pair — numpy pairwise-sums
+    the d axis per element — so a row's distance is bitwise identical
+    whatever it is batched with.  The BLAS-backed ``qn - 2 q@x.T + xn``
+    expansion does NOT have this property: gemm picks differently-rounded
+    micro-kernels by operand shape and row position (size-1 operands hit
+    a gemv/dot path; larger shapes still disagree at blocking edges), so
+    the same row scored in two batch layouts could differ by ~1 ulp.
+    That invariant is what makes fused-vs-staged, NRA-refinement-vs-scan
+    and sharded-vs-single results bitwise comparable — and the
+    difference form also never goes negative (no cancellation).  Only
+    used below HOST_FLOP_CUTOFF, so the (nq, n, d) temporary is bounded
+    at ~16 MB."""
+    diff = x[None, :, :] - q[:, None, :]
+    return (diff * diff).sum(axis=-1)
+
+
 def l2_distances(q: np.ndarray, x: np.ndarray,
                  use_pallas: bool = None) -> np.ndarray:
     """Squared L2: q (nq, d), x (n, d) -> (nq, n) fp32."""
@@ -154,9 +174,7 @@ def l2_distances(q: np.ndarray, x: np.ndarray,
         return np.zeros((len(q), 0), np.float32)
     if not use_pallas and q.shape[0] * x.shape[0] * x.shape[1] \
             < HOST_FLOP_CUTOFF:
-        qn = (q * q).sum(1)[:, None]
-        xn = (x * x).sum(1)[None, :]
-        out = qn - 2.0 * (q @ x.T) + xn
+        out = _l2_host(q, x)
         _dispatched(out.nbytes)
         return out
     if use_pallas:
@@ -319,9 +337,7 @@ def fused_scan_topk(q: np.ndarray, x: np.ndarray, mask: np.ndarray,
         # and the host merge's (score, pk) comparator — so fused and
         # staged return bitwise-equal results on matching backends
         if q.shape[0] * x.shape[0] * x.shape[1] < HOST_FLOP_CUTOFF:
-            qn = (q * q).sum(1)[:, None]
-            xn = (x * x).sum(1)[None, :]
-            d2 = qn - 2.0 * (q @ x.T) + xn
+            d2 = _l2_host(q, x)
             shape_tag = None
         else:
             qp = _pad_bucket(q, 0, floor=8)
@@ -387,6 +403,60 @@ def fused_scan_topk(q: np.ndarray, x: np.ndarray, mask: np.ndarray,
 # ---------------------------------------------------------------------------
 # top-k merge
 # ---------------------------------------------------------------------------
+
+def merge_topk_batch(scores: np.ndarray, ids: np.ndarray, k: int,
+                     use_pallas: bool = None
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Cross-shard top-k merge for a query batch (the sharded read path's
+    combine step — kernels/topk_merge.py ``batched_topk_merge``).
+
+    scores (nq, s, kk) fp32 and ids (nq, s, kk) int64 hold each query's s
+    per-shard candidate lists; empty slots carry score=+inf (their id is
+    ignored).  Returns ((nq, k) fp32, (nq, k) int64) in ascending
+    (score, id) order — the host merge's ``lexsort((pk, score))``
+    comparator — with id=-1 marking slots beyond a query's candidate
+    count.  The device merge tie-breaks in int32 registers (the same
+    bound the fused scan's pk registers impose); ids outside [0, 2^31-1)
+    automatically fall back to the exact host merge instead of
+    truncating.  ONE dispatch for the whole batch; only the (nq, k)
+    winners return to the host, never the (nq, s*kk) candidate tensor."""
+    use_pallas = USE_PALLAS if use_pallas is None else use_pallas
+    scores = np.asarray(scores, np.float32)
+    ids64 = np.asarray(ids, np.int64)
+    nq, s, kk = scores.shape
+    k = int(min(k, s * kk))
+    out_d = np.full((nq, k), np.inf, np.float32)
+    out_i = np.full((nq, k), -1, np.int64)
+    if k == 0 or nq == 0:
+        return out_d, out_i
+    if use_pallas:
+        sentinel = np.iinfo(np.int32).max
+        real = ids64[np.isfinite(scores)]
+        if len(real) and (int(real.min()) < 0
+                          or int(real.max()) >= sentinel):
+            # the device tie-break key is int32; ids outside its range
+            # would truncate silently — take the exact host merge instead
+            use_pallas = False
+    if use_pallas:
+        idp = np.where(np.isfinite(scores), ids64, sentinel).astype(np.int32)
+        d, i = tk_kernel.batched_topk_merge(jnp.asarray(scores),
+                                            jnp.asarray(idp), k)
+        d = np.asarray(d)
+        i = np.asarray(i, np.int64)
+        _dispatched(d.nbytes + i.nbytes, "topk_merge_batch.pallas",
+                    scores.shape + (k,))
+        return d, np.where(np.isfinite(d), i, -1)
+    flat_d = scores.reshape(nq, -1)
+    flat_i = ids64.reshape(nq, -1)
+    for qi in range(nq):
+        order = np.lexsort((flat_i[qi], flat_d[qi]))[:k]
+        order = order[np.isfinite(flat_d[qi][order])]
+        out_d[qi, :len(order)] = flat_d[qi][order]
+        out_i[qi, :len(order)] = flat_i[qi][order]
+    _dispatched(out_d.nbytes + out_i.nbytes, "topk_merge_batch.ref",
+                scores.shape + (k,))
+    return out_d, out_i
+
 
 def merge_topk(dists: np.ndarray, ids: np.ndarray, k: int,
                use_pallas: bool = None) -> Tuple[np.ndarray, np.ndarray]:

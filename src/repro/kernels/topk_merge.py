@@ -57,3 +57,67 @@ def topk_merge(dists: jnp.ndarray, ids: jnp.ndarray, k: int,
         ],
         interpret=interpret,
     )(dists, ids)
+
+
+# ---------------------------------------------------------------------------
+# generalized cross-shard merge: batched over queries, (score, pk) order
+# ---------------------------------------------------------------------------
+
+def _batched_merge_kernel(d_ref, i_ref, out_d_ref, out_i_ref, *, k: int):
+    """One query tile: (1, s, kk) candidates -> (1, k) winners selected in
+    ascending (score, id) lexicographic order — ties on score break toward
+    the smaller id, matching the host merge's ``np.lexsort((pk, score))``
+    comparator exactly.  Consumed and padded slots both carry id=SENTINEL
+    and score=+inf, so they are only emitted once every real candidate is
+    exhausted (the wrapper maps them back to "empty")."""
+    d = d_ref[...].reshape(-1).astype(jnp.float32)
+    ids = i_ref[...].reshape(-1)
+    sentinel = jnp.iinfo(ids.dtype).max
+
+    def body(j, carry):
+        d_work, i_work, od, oi = carry
+        dmin = jnp.min(d_work)
+        tie = d_work == dmin
+        sel = jnp.min(jnp.where(tie, i_work, sentinel))
+        pos = jnp.argmax(tie & (i_work == sel))
+        od = od.at[j].set(d_work[pos])
+        oi = oi.at[j].set(i_work[pos])
+        d_work = d_work.at[pos].set(jnp.inf)
+        i_work = i_work.at[pos].set(sentinel)
+        return d_work, i_work, od, oi
+
+    od0 = jnp.full((k,), jnp.inf, jnp.float32)
+    oi0 = jnp.full((k,), sentinel, ids.dtype)
+    _, _, od, oi = jax.lax.fori_loop(0, k, body, (d, ids, od0, oi0))
+    out_d_ref[...] = od.reshape(1, k)
+    out_i_ref[...] = oi.reshape(1, k)
+
+
+def batched_topk_merge(dists: jnp.ndarray, ids: jnp.ndarray, k: int,
+                       interpret: bool = True):
+    """Cross-shard top-k merge for a whole query batch.
+
+    dists (nq, s, kk) fp32, ids (nq, s, kk) int32 -> ((nq, k), (nq, k)):
+    per query the k smallest candidates across all s shard lists, ordered
+    by (score, id).  Pad empty slots with score=+inf and id=INT32_MAX —
+    padded output slots come back as (+inf, INT32_MAX).  The grid is one
+    program per query so shard counts and k stay tiny VMEM residents."""
+    nq, s, kk = dists.shape
+    kern = functools.partial(_batched_merge_kernel, k=k)
+    return pl.pallas_call(
+        kern,
+        grid=(nq,),
+        in_specs=[
+            pl.BlockSpec((1, s, kk), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, kk), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, k), jnp.float32),
+            jax.ShapeDtypeStruct((nq, k), ids.dtype),
+        ],
+        interpret=interpret,
+    )(dists, ids)

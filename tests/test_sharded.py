@@ -1,0 +1,434 @@
+"""Sharded serving subsystem tests (core/shards).
+
+The load-bearing claim: a hash-partitioned N-shard database is
+OBSERVATIONALLY IDENTICAL to the single-store engine — bitwise-equal
+(pk, score) results across plan kinds (fused and staged dispatch,
+disjunctions, forced full scans), under interleaved put/update/delete
+visibility, with live memtable overlays, and through continuous
+subscriptions — while the cross-shard combine handles at most
+shards * k rows per query.  Satellite coverage: the generalized batched
+top-k merge kernel, the vectorized ``distributed.store_shards`` packing,
+and the k > shard-rows clamp in the scatter-gather demo path.
+"""
+import numpy as np
+import pytest
+
+from repro.core import query as q
+from repro.core.api import Database
+from repro.core.lsm import LSMConfig
+from repro.core.optimizer import planner as planner_lib
+from repro.core.shards import ShardRouter, hash_pks
+from repro.kernels import ops as kops
+from tests.conftest import make_batch, tweet_schema
+
+N_SHARDS = 4
+DIM = 16
+
+
+def _pair(seed=0, n=900, chunk=150, shards=N_SHARDS, **db_kw):
+    """(single-store table, sharded table) fed the exact same batches."""
+    tables = []
+    for n_shards in (1, shards):
+        rng = np.random.default_rng(seed)
+        db = Database(tweet_schema(DIM), LSMConfig(flush_rows=chunk),
+                      shards=n_shards, **db_kw)
+        t = db.table()
+        for start in range(0, n, chunk):
+            pks, batch = make_batch(rng, chunk, dim=DIM, pk_start=start)
+            t.put(pks, batch)
+        tables.append(t)
+    return tables[0], tables[1]
+
+
+@pytest.fixture(scope="module")
+def pair():
+    t1, tn = _pair()
+    t1.flush()
+    tn.flush()
+    return t1, tn
+
+
+def _res(rows):
+    return [(r.pk, r.score) for r in rows]
+
+
+def _queries(rng):
+    qv = rng.normal(size=DIM).astype(np.float32)
+    qv2 = rng.normal(size=DIM).astype(np.float32)
+    return [
+        # filter-only: scalar + spatial, text, disjunction, negation
+        q.HybridQuery(where=q.And(q.Range("time", 10, 55),
+                                  q.GeoWithin("coordinate",
+                                              (1.0, 1.0, 7.0, 7.0)))),
+        q.HybridQuery(where=q.TextContains("content", "banana")),
+        q.HybridQuery(where=q.Or(q.Range("time", 0, 15),
+                                 q.TextContains("content", "cherry"))),
+        q.HybridQuery(where=q.And(q.Range("time", 5, 80),
+                                  q.Not(q.TextContains("content",
+                                                       "apple")))),
+        # NN: pure vector, vector+spatial, filtered, text-ranked,
+        # disjunctive-filtered
+        q.HybridQuery(ranks=[q.VectorRank("embedding", qv, 1.0)], k=10),
+        q.HybridQuery(ranks=[q.VectorRank("embedding", qv, 0.6),
+                             q.SpatialRank("coordinate", (5.0, 5.0), 0.4)],
+                      k=10),
+        q.HybridQuery(where=q.Range("time", 10, 70),
+                      ranks=[q.VectorRank("embedding", qv2, 1.0)], k=10),
+        q.HybridQuery(ranks=[q.VectorRank("embedding", qv, 1.0),
+                             q.TextRank("content", ("banana", "echo"),
+                                        0.5)], k=10),
+        q.HybridQuery(where=q.Or(q.Range("time", 0, 30),
+                                 q.TextContains("content", "golf")),
+                      ranks=[q.VectorRank("embedding", qv, 1.0)], k=10),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# routing
+# ---------------------------------------------------------------------------
+
+def test_routing_deterministic_and_complete(pair):
+    t1, tn = pair
+    router = tn.store
+    assert isinstance(router, ShardRouter)
+    pks = np.arange(900)
+    sid = router.shard_of(pks)
+    assert np.array_equal(sid, router.shard_of(pks))       # stable
+    assert set(np.unique(sid)) <= set(range(N_SHARDS))
+    # hash-balanced: every shard owns a non-trivial slice
+    counts = np.bincount(sid, minlength=N_SHARDS)
+    assert counts.min() > 900 // N_SHARDS // 2
+    assert sum(router.shard_rows()) == t1.store.n_rows == 900
+    # a pk's row lives on exactly its hash shard and get() finds it
+    for pk in (0, 17, 501, 899):
+        row1, rown = t1.get(pk), tn.get(pk)
+        assert rown is not None
+        assert row1["time"] == rown["time"]
+
+
+def test_hash_decorrelates_sequential_pks():
+    h = hash_pks(np.arange(1024))
+    assert len(np.unique(h)) == 1024
+    counts = np.bincount((h % np.uint64(8)).astype(int), minlength=8)
+    assert counts.min() > 1024 // 8 // 2
+
+
+# ---------------------------------------------------------------------------
+# parity across plan kinds
+# ---------------------------------------------------------------------------
+
+def test_parity_planner_chosen(pair):
+    t1, tn = pair
+    for qq in _queries(np.random.default_rng(1)):
+        r1, _ = t1.executor.execute(qq)
+        rn, st = tn.executor.execute(qq)
+        assert _res(r1) == _res(rn), st.plan.splitlines()[0]
+        assert st.shards == N_SHARDS
+
+
+def test_parity_fused_vs_staged(pair):
+    t1, tn = pair
+    rng = np.random.default_rng(2)
+    nn = [qq for qq in _queries(rng) if qq.is_nn]
+    prev = planner_lib.FUSED_ENABLED
+    try:
+        out = {}
+        for mode in (True, False):
+            planner_lib.FUSED_ENABLED = mode
+            # batches of identical structure reach the fused/shared path
+            out[mode] = [
+                [_res(r) for r, _ in t.executor.execute_many([qq] * 6)]
+                for t in (t1, tn) for qq in nn]
+        assert out[True] == out[False]
+    finally:
+        planner_lib.FUSED_ENABLED = prev
+
+
+def test_parity_forced_full_scan(pair):
+    t1, tn = pair
+    rng = np.random.default_rng(3)
+    for qq in _queries(rng):
+        kind = "full_scan_nn" if qq.is_nn else "full_scan"
+        mk = lambda: planner_lib.Plan(          # noqa: E731
+            kind=kind, residual=[qq.where] if qq.where else [],
+            ranks=list(qq.ranks), k=qq.k)
+        r1, _ = t1.executor.execute(qq, plan=mk())
+        rn, _ = tn.executor.execute(qq, plan=mk())
+        assert _res(r1) == _res(rn)
+
+
+def test_parity_execute_many_mixed(pair):
+    t1, tn = pair
+    batch = _queries(np.random.default_rng(4))
+    res1 = t1.executor.execute_many(batch)
+    resn = tn.executor.execute_many(batch)
+    for (r1, _), (rn, _) in zip(res1, resn):
+        assert _res(r1) == _res(rn)
+
+
+def test_parity_shard_counts():
+    t1, _ = _pair(seed=5, n=600)
+    t1.flush()
+    for shards in (2, 8):
+        _, tn = _pair(seed=5, n=600, shards=shards)
+        tn.flush()
+        for qq in _queries(np.random.default_rng(6)):
+            r1, _ = t1.executor.execute(qq)
+            rn, _ = tn.executor.execute(qq)
+            assert _res(r1) == _res(rn), shards
+
+
+def test_unsatisfiable_and_empty(pair):
+    _, tn = pair
+    p = q.Range("time", 0, 50)
+    rows, st = tn.executor.execute(
+        q.HybridQuery(where=q.And(p, q.Not(p))))
+    assert rows == [] and "empty" in st.plan
+    # empty sharded table
+    t_empty = Database(tweet_schema(DIM), shards=3).table()
+    rows, _ = t_empty.executor.execute(
+        q.HybridQuery(ranks=[q.VectorRank(
+            "embedding", np.zeros(DIM, np.float32), 1.0)], k=5))
+    assert rows == []
+
+
+def test_k_exceeds_total_rows():
+    t1, tn = _pair(seed=7, n=60, chunk=30)
+    t1.flush()
+    tn.flush()
+    qq = q.HybridQuery(ranks=[q.VectorRank(
+        "embedding", np.ones(DIM, np.float32), 1.0)], k=200)
+    r1, _ = t1.executor.execute(qq)
+    rn, _ = tn.executor.execute(qq)
+    assert len(rn) == 60 and _res(r1) == _res(rn)
+
+
+# ---------------------------------------------------------------------------
+# MVCC visibility across shards, live memtable overlay
+# ---------------------------------------------------------------------------
+
+def test_interleaved_put_update_delete_parity():
+    t1, tn = _pair(seed=8, n=600)
+    rng1 = np.random.default_rng(99)
+    rng2 = np.random.default_rng(99)
+    for t, rng in ((t1, rng1), (tn, rng2)):
+        # update a slice (new versions), delete another, add fresh rows
+        upd_pks, upd = make_batch(rng, 80, dim=DIM, pk_start=100)
+        t.put(upd_pks, upd)
+        t.delete(list(range(300, 340)))
+        new_pks, new = make_batch(rng, 50, dim=DIM, pk_start=600)
+        t.put(new_pks, new)
+    for label, drain in (("live memtable", False), ("after drain", True)):
+        if drain:
+            t1.drain()
+            t1.flush()
+            tn.drain()
+            tn.flush()
+        for qq in _queries(np.random.default_rng(9)):
+            r1, _ = t1.executor.execute(qq)
+            rn, _ = tn.executor.execute(qq)
+            assert _res(r1) == _res(rn), (label, qq)
+        # deleted pks are gone everywhere, updated pks resolve newest
+        assert tn.get(310) is None and t1.get(310) is None
+        assert tn.get(120)["time"] == t1.get(120)["time"]
+
+
+# ---------------------------------------------------------------------------
+# continuous subscriptions
+# ---------------------------------------------------------------------------
+
+def test_subscribe_equivalence_vs_single_store():
+    # "none" mode on the single store = plain re-execution, the exact
+    # semantics the sharded engine implements (views don't span shards)
+    t1, tn = _pair(seed=10, n=450, continuous_mode="none")
+    rng = np.random.default_rng(11)
+    qv = rng.normal(size=DIM).astype(np.float32)
+    sync_q = q.HybridQuery(where=q.Range("time", 0, 50),
+                           ranks=[q.VectorRank("embedding", qv, 1.0)], k=8)
+    async_q = q.HybridQuery(where=q.TextContains("content", "delta"))
+    subs = {}
+    for name, t in (("single", t1), ("sharded", tn)):
+        subs[name] = (t.subscribe(sync_q, interval_s=60.0),
+                      t.subscribe(async_q, on_change=True))
+    for t in (t1, tn):
+        t.advance(0.0)
+    for a, b in zip(subs["single"], subs["sharded"]):
+        assert _res(a.latest) == _res(b.latest)
+    # a delta dirties the ASYNC query on both engines; SYNC not yet due
+    rng_d = np.random.default_rng(12)
+    pks, batch = make_batch(rng_d, 40, dim=DIM, pk_start=450)
+    t1.put(pks, batch)
+    rng_d = np.random.default_rng(12)
+    pks, batch = make_batch(rng_d, 40, dim=DIM, pk_start=450)
+    tn.put(pks, batch)
+    out1 = t1.advance(30.0)
+    outn = tn.advance(30.0)
+    assert set(out1) == {subs["single"][1].rid}
+    assert set(outn) == {subs["sharded"][1].rid}
+    # SYNC re-runs at its interval with the new rows on both sides
+    t1.advance(60.0)
+    tn.advance(60.0)
+    for a, b in zip(subs["single"], subs["sharded"]):
+        assert _res(a.latest) == _res(b.latest)
+        assert a.latest is not None and len(a.latest) > 0
+
+
+# ---------------------------------------------------------------------------
+# merge payload + stats aggregation + EXPLAIN
+# ---------------------------------------------------------------------------
+
+def test_merge_payload_bounded_and_stats_aggregated(pair):
+    t1, tn = pair
+    qv = np.random.default_rng(13).normal(size=DIM).astype(np.float32)
+    qq = q.HybridQuery(ranks=[q.VectorRank("embedding", qv, 1.0)], k=10)
+    rows, st = tn.executor.execute(qq)
+    assert st.shards == N_SHARDS
+    assert 0 < st.merge_rows <= N_SHARDS * qq.k
+    assert st.kernel_launches > 0 and st.bytes_to_host > 0
+    assert 0 < st.shard_rows_max <= st.rows_scanned
+    _, st1 = t1.executor.execute(qq)
+    assert st1.shards == 0 and st1.merge_rows == 0   # unsharded defaults
+    # filter queries concatenate — no top-k merge payload
+    _, stf = tn.executor.execute(
+        q.HybridQuery(where=q.Range("time", 0, 40)))
+    assert stf.merge_rows == 0 and stf.shards == N_SHARDS
+
+
+def test_explain_shard_fanout(pair):
+    _, tn = pair
+    qv = np.zeros(DIM, np.float32)
+    txt = (tn.query()
+             .rank(q.VectorRank("embedding", qv, 1.0))
+             .limit(7).explain())
+    assert txt.startswith("sharded:")
+    assert f"ShardFanout [n={N_SHARDS} hash(pk)]" in txt
+    assert "CrossShardTopKMerge" in txt and "k=7" in txt
+    assert txt.count("-> Shard [") == N_SHARDS     # per-shard subtrees
+    ftxt = tn.explain(q.HybridQuery(where=q.Range("time", 0, 10)))
+    assert "ShardConcat" in ftxt and "ShardFanout" in ftxt
+    # executed stats carry the sharded EXPLAIN
+    _, st = tn.executor.execute(
+        q.HybridQuery(ranks=[q.VectorRank("embedding", qv, 1.0)], k=7))
+    assert "ShardFanout" in st.plan
+
+
+# ---------------------------------------------------------------------------
+# batched cross-shard merge kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_merge_topk_batch_orders_by_score_then_pk(use_pallas):
+    rng = np.random.default_rng(14)
+    nq, s, kk, k = 4, 3, 6, 5
+    d = rng.uniform(0, 10, (nq, s, kk)).astype(np.float32)
+    ids = rng.permutation(nq * s * kk).reshape(nq, s, kk).astype(np.int64)
+    d[0, 0, 0] = d[0, 1, 3] = d[0, 2, 2] = 1.25        # 3-way tie
+    d[3, :, 2:] = np.inf                               # short lists
+    md, mi = kops.merge_topk_batch(d, ids, k, use_pallas=use_pallas)
+    for qi in range(nq):
+        flat = [(float(dv), int(iv))
+                for dv, iv in zip(d[qi].ravel(), ids[qi].ravel())
+                if np.isfinite(dv)]
+        want = sorted(flat)[:k]
+        got = [(float(a), int(b)) for a, b in zip(md[qi], mi[qi])
+               if b >= 0]
+        assert got == want
+    assert (mi[3][np.isinf(md[3])] == -1).all()
+
+
+def test_merge_topk_batch_large_pks_fall_back_exactly():
+    # ids beyond the int32 tie-break range must not truncate on the
+    # pallas path — the wrapper falls back to the exact host merge
+    d = np.asarray([[[1.0, 2.0, np.inf]]], np.float32)
+    ids = np.asarray([[[2**31, 7, 0]]], np.int64)
+    md, mi = kops.merge_topk_batch(d, ids, 2, use_pallas=True)
+    assert mi[0].tolist() == [2**31, 7]
+    assert md[0].tolist() == [1.0, 2.0]
+
+
+def test_merge_topk_batch_pallas_matches_host():
+    rng = np.random.default_rng(15)
+    d = rng.uniform(0, 5, (6, 4, 8)).astype(np.float32)
+    ids = rng.integers(0, 2**20, (6, 4, 8)).astype(np.int64)
+    d[1, 2, :] = d[1, 0, :]                            # cross-shard ties
+    ids[1, 2, :] = ids[1, 0, ::-1]
+    a = kops.merge_topk_batch(d, ids, 7, use_pallas=True)
+    b = kops.merge_topk_batch(d, ids, 7, use_pallas=False)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+# ---------------------------------------------------------------------------
+# distributed.py satellites
+# ---------------------------------------------------------------------------
+
+def test_store_shards_vectorized_includes_memtable():
+    from repro.core import distributed as dist
+    from repro.core.lsm import LSMStore
+    rng = np.random.default_rng(16)
+    store = LSMStore(tweet_schema(DIM), LSMConfig(flush_rows=128))
+    pks, batch = make_batch(rng, 300, dim=DIM)
+    store.put(pks, batch)
+    store.flush()
+    pks2, batch2 = make_batch(rng, 37, dim=DIM, pk_start=300)
+    store.put(pks2, batch2)                 # stays in the memtable
+    n_shards = 4
+    V, Pt, I, M = dist.store_shards(store, n_shards)
+    assert int(M.sum()) == 337              # memtable rows not dropped
+    assert set(I[M].tolist()) == set(range(337))
+    per = len(I) // n_shards
+    for s in range(n_shards):
+        blk = I[s * per:(s + 1) * per]
+        real = blk[blk >= 0]
+        assert (real % n_shards == s).all()     # demo routing: pk % n
+        # within a shard, rows keep store order (stable packing)
+        assert (np.diff(real) > 0).all()
+    # vectors land next to their ids
+    seg = store.segments[0]
+    row = int(np.nonzero(I == 5)[0][0])
+    np.testing.assert_array_equal(V[row], seg.columns["embedding"][5])
+    # visibility resolves before packing: an update supersedes the
+    # flushed version (no duplicate pk), a delete shadows it entirely
+    upd_pks, upd = make_batch(rng, 1, dim=DIM, pk_start=5)
+    store.put(upd_pks, upd)
+    store.delete([6])
+    V2, _, I2, M2 = dist.store_shards(store, n_shards)
+    live = I2[M2].tolist()
+    assert int(M2.sum()) == 336 and live.count(5) == 1 and 6 not in live
+    row5 = int(np.nonzero(I2 == 5)[0][0])
+    np.testing.assert_array_equal(V2[row5],
+                                  np.asarray(upd["embedding"][0],
+                                             np.float32))
+
+
+def test_local_topk_k_exceeds_rows():
+    import jax.numpy as jnp
+    from repro.core import distributed as dist
+    rng = np.random.default_rng(17)
+    vecs = rng.normal(size=(5, 8)).astype(np.float32)
+    d, idx = dist.local_topk(jnp.ones(8, jnp.float32),
+                             jnp.asarray(vecs), 9)
+    d, idx = np.asarray(d), np.asarray(idx)
+    assert (idx[:5] >= 0).all() and (np.diff(d[:5]) >= 0).all()
+    assert (idx[5:] == -1).all() and np.isinf(d[5:]).all()
+
+
+def test_distributed_topk_k_exceeds_shard_rows():
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.core import distributed as dist
+    rng = np.random.default_rng(18)
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("data",))
+    n, d, k = 6, 8, 10                      # k > rows on the shard
+    vecs = rng.normal(size=(n, d)).astype(np.float32)
+    ids = np.arange(100, 100 + n, dtype=np.int64)
+    qv = rng.normal(size=d).astype(np.float32)
+    topk = dist.make_distributed_topk(mesh, k)
+    out_d, out_i = topk(jnp.asarray(qv), jnp.asarray(vecs),
+                        jnp.asarray(ids))
+    out_i = np.asarray(out_i)
+    real = out_i[out_i >= 0]
+    exact = ids[np.argsort(((vecs - qv) ** 2).sum(1))]
+    assert sorted(real.tolist()) == sorted(exact.tolist())
+    assert (out_i[len(real):] == -1).all()
