@@ -4,6 +4,11 @@ Write-heavy (1:9 read:write) and read-heavy (9:1) scenarios over the
 TRACY workload; hybrid-search, hybrid-NN and mixed query streams; ARCADE
 vs in-system baseline strategies. Metric: total wall time (lower is
 better), plus block-read counters.
+
+The ARCADE engine runs through the ``Database`` facade (``adopt_store``
++ ``Table.put``/``Table.execute``) — the same surface applications use;
+the baseline strategies keep their purpose-built executors from
+``benchmarks.baselines``.
 """
 from __future__ import annotations
 
@@ -14,7 +19,7 @@ import numpy as np
 
 from benchmarks import baselines as bl
 from benchmarks import tracy
-from repro.core import query as q
+from repro.core.api import Database
 
 
 def run_dynamic(n_rows: int = 6000, n_ops: int = 100, read_frac: float = 0.9,
@@ -25,7 +30,15 @@ def run_dynamic(n_rows: int = 6000, n_ops: int = 100, read_frac: float = 0.9,
     search_t, nn_t = tracy.make_templates(data)
     templates = {"search": search_t, "nn": nn_t,
                  "mixed": search_t + nn_t}[workload]
-    ex = bl.EXECUTORS[engine](store)
+    if engine == "arcade":
+        sink = Database(schema=None).adopt_store("tracy", store)
+    else:
+        ex = bl.EXECUTORS[engine](store)
+
+        class _Sink:                       # same put/execute surface
+            put = staticmethod(store.put)
+            execute = staticmethod(ex.execute)
+        sink = _Sink()
     rng = np.random.default_rng(seed + 1)
 
     t0 = time.perf_counter()
@@ -34,12 +47,12 @@ def run_dynamic(n_rows: int = 6000, n_ops: int = 100, read_frac: float = 0.9,
     for i in range(n_ops):
         if rng.random() < read_frac:
             tmpl = templates[rng.integers(0, len(templates))]
-            _, st = ex.execute(tmpl())
+            _, st = sink.execute(tmpl())
             blocks += st.blocks_read
             reads += 1
         else:
             pks, batch = data.batch(64)
-            store.put(pks, batch)
+            sink.put(pks, batch)
             writes += 1
     dt = time.perf_counter() - t0
     return {"wall_s": dt, "blocks": blocks, "reads": reads,

@@ -1,21 +1,137 @@
-"""PQ-IVF study (paper §2.1: VECTOR_INDEX_TYPE 'pqivf'): recall/latency/
-memory trade-off of product quantization vs plain IVF on the TRACY
-embedding workload. ADC runs through the one-hot-matmul kernel semantics
-(kernels/pq_adc.py) with exact re-ranking."""
+"""Quantized-residence study: PQ/int8 rank columns streamed through the
+fused scan->top-k kernels with exact re-rank, vs the full-precision
+fused path.
+
+``run_quantized_study`` drives the quantized-eligible TRACY NN templates
+(t6 pure vector NN, t8 NN + time filter, t13 disjunctive NN) through the
+``Database`` facade twice with identical query streams — once exact
+(no ``recall_target``: full-precision fused scan) and once quantized
+(``recall_target=0.9``: PQ-ADC candidate generation + exact re-rank of
+the refine*k survivors) — and reports per-template logical bytes
+scanned, recall@k against the exact results, re-ranked row counts and
+latency.  Bytes are the planner's machine-independent accounting
+(``ExecStats.bytes_scanned``: mask-passing rows x bytes-per-row of
+whatever column representation the kernel streamed), so the headline
+bytes ratio ~ 4*dim/m is stable across hosts.
+
+The legacy PQ-IVF index study (``run_pq``: recall/latency/memory of
+IndexKind.PQIVF vs plain IVF probes, paper §2.1) is kept below — it
+measures the *index* tier, while the quantized study measures the
+*scan* tier.
+
+CLI:  python benchmarks/pq_study.py [--smoke] [--json PATH]
+                                    [--baseline PATH]
+With ``--baseline``, machine-independent ratios are gated against the
+committed JSON (CI quantized-smoke job): fails if the quantized bytes-
+scanned reduction on the eligible templates drops below 8x (or half the
+committed baseline, whichever is larger), or recall@10 falls under 0.95
+at the default refine ladder.
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import sys
 import time
-from typing import List
+from typing import Dict, List
 
 import numpy as np
 
-from benchmarks import tracy
-from repro.core.types import IndexKind
-from repro.kernels import ops as kops
+if __package__ in (None, ""):        # `python benchmarks/pq_study.py`
+    sys.path.insert(
+        0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
+from benchmarks import tracy
+from repro.core.api import Database
+from repro.core.types import IndexKind
+
+# quantized-eligible NN templates: single positive VectorRank (t10 ranks
+# by SpatialRank, t7/t9/t11 are multi-rank — controls, not eligible)
+QUANT_TEMPLATES = {"t6": 0, "t8": 2, "t13": 6}
+RECALL_TARGET = 0.9
+
+
+def run_quantized_study(n_rows: int = 6000, n_segments: int = 8,
+                        batch: int = 8, n_batches: int = 2,
+                        dim: int = 64, k: int = 10,
+                        seed: int = 0) -> Dict:
+    """Exact vs quantized dispatch over the eligible TRACY NN templates
+    with identical query streams (the data rng is reseeded per batch, so
+    both modes see the same query vectors and filter bounds)."""
+    cfg = tracy.TracyConfig(n_rows=n_rows, dim=dim, seed=seed,
+                            flush_rows=max(1, n_rows // n_segments),
+                            fanout=4 * n_segments,
+                            pq_m=max(1, dim // 2))   # dsub=2 codebooks
+    store, data = tracy.build_store(cfg)
+    db = Database(schema=None)
+    table = db.adopt_store("tracy", store)
+    _, nn_t = tracy.make_templates(data)
+    out: Dict = {"config": {"n_rows": n_rows, "dim": dim, "batch": batch,
+                            "n_batches": n_batches, "k": k,
+                            "recall_target": RECALL_TARGET,
+                            "n_segments": len(store.segments)},
+                 "templates": {}}
+    for name, ti in QUANT_TEMPLATES.items():
+        tmpl = nn_t[ti]
+        rec: Dict = {}
+        results: Dict[str, List] = {}
+        for mode in ("exact", "quantized"):
+            res: List = []
+            t0 = time.perf_counter()
+            for b in range(n_batches):
+                # identical query parameters in both modes
+                data.rng = np.random.default_rng(seed + 1000 + b)
+                queries = [tmpl() for _ in range(batch)]
+                if mode == "quantized":
+                    for qq in queries:
+                        qq.recall_target = RECALL_TARGET
+                res.extend(table.execute_many(queries))
+            dt = time.perf_counter() - t0
+            rec[mode] = {
+                "bytes_scanned": sum(st.bytes_scanned for _, st in res),
+                "rerank_rows": sum(st.rerank_rows for _, st in res),
+                "rows_scanned": sum(st.rows_scanned for _, st in res),
+                "ms": dt * 1e3,
+            }
+            results[mode] = [[r.pk for r in rows] for rows, _ in res]
+            if mode == "quantized":
+                rec["quantized_chosen"] = \
+                    "dispatch=quantized" in res[0][1].plan
+        hits = [len(set(e[:k]) & set(g[:k])) / max(1, min(k, len(e)))
+                for e, g in zip(results["exact"], results["quantized"])
+                if e]
+        rec["recall_at_k"] = float(np.mean(hits)) if hits else 1.0
+        rec["bytes_ratio"] = rec["exact"]["bytes_scanned"] / \
+            max(1, rec["quantized"]["bytes_scanned"])
+        out["templates"][name] = rec
+    eligible = [n for n, r in out["templates"].items()
+                if r["quantized_chosen"]]
+    eb = sum(out["templates"][n]["exact"]["bytes_scanned"]
+             for n in eligible)
+    qb = sum(out["templates"][n]["quantized"]["bytes_scanned"]
+             for n in eligible)
+    out["summary"] = {
+        "templates": eligible,
+        "exact_bytes": eb, "quantized_bytes": qb,
+        "bytes_ratio": eb / max(1, qb),
+        "recall_at_k": float(np.mean(
+            [out["templates"][n]["recall_at_k"] for n in eligible]))
+        if eligible else 0.0,
+        "rerank_rows": sum(out["templates"][n]["quantized"]["rerank_rows"]
+                           for n in eligible),
+    }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# legacy PQ-IVF index study (paper §2.1: VECTOR_INDEX_TYPE 'pqivf')
+# ---------------------------------------------------------------------------
 
 def run_pq(n_rows: int = 6000, n_queries: int = 25, k: int = 10,
-           seed: int = 0):
+           seed: int = 0) -> Dict:
+    """Recall/latency/memory trade-off of PQ-IVF vs plain IVF *index
+    probes* on the TRACY embedding workload."""
     out = {}
     for kind, name in ((IndexKind.IVF, "ivf"), (IndexKind.PQIVF, "pqivf")):
         cfg = tracy.TracyConfig(n_rows=n_rows, seed=seed, dim=64)
@@ -24,7 +140,6 @@ def run_pq(n_rows: int = 6000, n_queries: int = 25, k: int = 10,
         vecs = np.concatenate([s.columns["embedding"]
                                for s in store.segments])
         pks = np.concatenate([s.pk for s in store.segments])
-        rng = np.random.default_rng(seed + 5)
         lat, recall, idx_bytes = [], [], 0
         for seg in store.segments:
             idx = seg.indexes["embedding"]
@@ -52,11 +167,98 @@ def run_pq(n_rows: int = 6000, n_queries: int = 25, k: int = 10,
     return out
 
 
+# ---------------------------------------------------------------------------
+# harness hooks (run.py) and CLI
+# ---------------------------------------------------------------------------
+
 def bench(scale: float = 1.0) -> List[str]:
-    r = run_pq(n_rows=int(6000 * scale))
+    return csv_from_json(bench_json(scale))
+
+
+def bench_json(scale: float = 1.0) -> Dict:
+    return {"quantized": run_quantized_study(n_rows=int(6000 * scale)),
+            "pqivf": run_pq(n_rows=int(6000 * scale))}
+
+
+def csv_from_json(data: Dict) -> List[str]:
     rows = []
-    for name, v in r.items():
+    qs = data.get("quantized")
+    if qs:
+        s = qs["summary"]
+        rows.append(
+            f"pq_scan_summary,{s['bytes_ratio'] * 1e3:.0f},"
+            f"bytes_ratio={s['bytes_ratio']:.1f};"
+            f"recall@k={s['recall_at_k']:.3f};"
+            f"rerank_rows={s['rerank_rows']}")
+        for name, r in qs["templates"].items():
+            rows.append(
+                f"pq_scan_{name},{r['quantized']['ms'] * 1e3:.0f},"
+                f"bytes={r['quantized']['bytes_scanned']}v"
+                f"{r['exact']['bytes_scanned']};"
+                f"ratio={r['bytes_ratio']:.1f};"
+                f"recall@k={r['recall_at_k']:.3f};"
+                f"quantized={int(r['quantized_chosen'])}")
+    for name, v in data.get("pqivf", {}).items():
         rows.append(f"pq_{name},{v['avg_ms'] * 1e3:.0f},"
                     f"recall@10={v['recall']:.2f};"
                     f"index_mb={v['index_mb']:.1f}")
     return rows
+
+
+def _check_against_baseline(result: Dict, baseline: Dict) -> List[str]:
+    """Machine-independent gates: the quantized dispatch must actually be
+    chosen on every eligible template, the logical bytes-scanned
+    reduction must hold at >= 8x (or half the committed baseline ratio,
+    whichever is larger), and recall@k must stay >= 0.95 at the default
+    refine ladder."""
+    failures = []
+    not_chosen = [n for n, r in result["templates"].items()
+                  if not r["quantized_chosen"]]
+    if not_chosen:
+        failures.append(f"quantized dispatch not chosen on {not_chosen}")
+    s = result["summary"]
+    base = baseline.get("summary", {})
+    want_ratio = max(8.0, base.get("bytes_ratio", 8.0) / 2.0)
+    if s["bytes_ratio"] < want_ratio:
+        failures.append(
+            f"bytes_ratio {s['bytes_ratio']:.2f} < required "
+            f"{want_ratio:.2f} (baseline {base.get('bytes_ratio')})")
+    if s["recall_at_k"] < 0.95:
+        failures.append(
+            f"recall@k {s['recall_at_k']:.3f} < required 0.95 "
+            f"(baseline {base.get('recall_at_k')})")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small workload + baseline ratio gates")
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--baseline", default=None)
+    args = ap.parse_args()
+    if args.smoke:
+        result = {"quantized": run_quantized_study(
+            n_rows=3200, n_segments=8, batch=8, n_batches=1)}
+    else:
+        result = bench_json()
+    for row in csv_from_json(result):
+        print(row)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=2, sort_keys=True)
+            f.write("\n")
+    if args.baseline:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        failures = _check_against_baseline(
+            result["quantized"], baseline["quantized"])
+        if failures:
+            for msg in failures:
+                print(f"SMOKE FAIL: {msg}", file=sys.stderr)
+            sys.exit(1)
+        print("smoke gates passed", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

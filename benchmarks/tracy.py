@@ -39,6 +39,9 @@ class TracyConfig:
     #                              so flush_rows controls segment count)
     # topic centers give embeddings cluster structure (semantic search)
     n_topics: int = 10
+    pq_m: int = 8                # PQ subquantizers for the quantized
+    #                              residence tier (32 => dsub=2 on the
+    #                              64-d study config: near-exact ADC)
 
 
 class TracyData:
@@ -86,7 +89,7 @@ def build_store(cfg: TracyConfig,
     data = TracyData(cfg)
     store = LSMStore(tweet_schema(cfg.dim, vector_index),
                      LSMConfig(flush_rows=cfg.flush_rows,
-                               fanout=cfg.fanout))
+                               fanout=cfg.fanout, pq_m=cfg.pq_m))
     done = 0
     while done < cfg.n_rows:
         # never out-batch the flush threshold: small flush_rows configs

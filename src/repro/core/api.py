@@ -102,6 +102,7 @@ class QueryBuilder:
         self._ranks: List[q.RankTerm] = []
         self._k = 10
         self._select: Optional[Sequence[str]] = None
+        self._recall_target: Optional[float] = None
 
     # ------------------------------------------------------------ clauses
     def where(self, *exprs: q.BoolExpr) -> "QueryBuilder":
@@ -110,8 +111,16 @@ class QueryBuilder:
                 q.And((self._where, e))
         return self
 
-    def rank(self, *terms: q.RankTerm) -> "QueryBuilder":
+    def rank(self, *terms: q.RankTerm,
+             recall_target: Optional[float] = None) -> "QueryBuilder":
+        """Add rank terms.  ``recall_target`` (in (0, 1]) opts the query
+        into approximate dispatch: the planner may stream the PQ code
+        column through the quantized ADC kernel and exact-re-rank the
+        survivors instead of scanning full-precision vectors.  Leaving
+        it unset (or 1.0) keeps the exact read path."""
         self._ranks.extend(terms)
+        if recall_target is not None:
+            self._recall_target = float(recall_target)
         return self
 
     def limit(self, k: int) -> "QueryBuilder":
@@ -125,7 +134,8 @@ class QueryBuilder:
     # ---------------------------------------------------------- terminals
     def build(self) -> q.HybridQuery:
         return q.HybridQuery(where=self._where, ranks=list(self._ranks),
-                             k=self._k, select=self._select)
+                             k=self._k, select=self._select,
+                             recall_target=self._recall_target)
 
     def plan(self):
         """The table's plan for this query: a ``Plan`` on single-store

@@ -114,7 +114,8 @@ class Executor:
                 # a group must share rank structure (NN members stack
                 # their query vectors into one kernel call) AND dispatch
                 # mode (fused vs staged take different operators)
-                key = ("nn", ops.rank_signature(qq.ranks), plan.fused) \
+                key = ("nn", ops.rank_signature(qq.ranks), plan.fused,
+                       getattr(plan, "quantized", False)) \
                     if qq.ranks else ("filter",)
                 groups.setdefault(key, []).append(i)
             elif plan.kind == "nra" and given[i] is None:
@@ -132,8 +133,10 @@ class Executor:
                 for i in idxs:
                     plans[i] = planner_lib.plan_shared_scan(
                         self.catalog, queries[i])
-                    groups.setdefault(("nn", key[1], plans[i].fused),
-                                      []).append(i)
+                    groups.setdefault(
+                        ("nn", key[1], plans[i].fused,
+                         getattr(plans[i], "quantized", False)),
+                        []).append(i)
             else:
                 solo.extend(idxs)
 

@@ -25,7 +25,7 @@ import numpy as np
 from repro.core import memtable as mt
 from repro.core import segment as seg_lib
 from repro.core.flush import FlushScheduler
-from repro.core.types import Column, Schema
+from repro.core.types import Column, ColumnType, Schema
 
 
 @dataclasses.dataclass
@@ -39,6 +39,8 @@ class LSMConfig:
     pipeline: bool = False        # decouple seal from flush/compaction
     max_sealed: int = 4           # write-stall threshold (pipelined modes)
     background: bool = False      # drain on a worker thread (benchmarks)
+    quantize_vectors: bool = True  # PQ residence tier for vector columns
+    pq_m: int = 8                  # subquantizers (halved until d % m == 0)
 
 
 class LSMStore:
@@ -56,6 +58,10 @@ class LSMStore:
         self._seqno = 0
         self._index_factory = index_factory or default_index_factory
         self.global_index = GlobalIndexSet(schema)
+        # quantized residence: col -> (book_id, codebooks); trained once
+        # on the first flush, reused for every later flush so all of this
+        # store's segments share one book (packable cross-segment)
+        self._pq_books: Dict[str, Tuple[int, np.ndarray]] = {}
         # fast path: when every pk was written once and nothing deleted,
         # visibility resolution is the identity (skipped in NRA/executor)
         self.unique_pks = True
@@ -196,6 +202,7 @@ class LSMStore:
         pk, seqno, tomb, cols = mtab.scan_arrays()
         seg = seg_lib.Segment(self.schema, pk, seqno, tomb, cols, level=0)
         self._build_indexes(seg)
+        self._quantize_segment(seg)
         pre_key = (self._seqno, tuple(s.seg_id for s in self.segments))
         self.segments.append(seg)
         self.sealed.pop(0)
@@ -223,6 +230,57 @@ class LSMStore:
                 seg.indexes[col.name] = idx
         self.metrics["index_build_s"] += time.perf_counter() - t0
 
+    # ------------------------------------------------ quantized residence
+    def _vector_columns(self):
+        return [c for c in self.schema.columns
+                if c.ctype == ColumnType.VECTOR]
+
+    def _quantize_segment(self, seg: seg_lib.Segment) -> None:
+        """Encode-at-flush: PQ codes for every vector column, stored
+        alongside the fp32 column (the quantized residence tier the fused
+        quantized scan streams).  Codebooks come from the store-level
+        cache — only the very first flush of a column trains."""
+        if not self.cfg.quantize_vectors:
+            return
+        t0 = time.perf_counter()
+        for col in self._vector_columns():
+            self._encode_quantized(seg, col.name)
+        self.metrics["quantize_s"] = self.metrics.get("quantize_s", 0.0) \
+            + (time.perf_counter() - t0)
+
+    def _encode_quantized(self, seg: seg_lib.Segment, name: str) -> None:
+        from repro.core import quantize as qz
+        vecs = np.asarray(seg.columns[name], np.float32)
+        if not len(vecs):
+            return
+        cached = self._pq_books.get(name)
+        if cached is None:
+            qc = qz.quantize_column(vecs, m=self.cfg.pq_m)
+            self._pq_books[name] = (qc.book_id, qc.codebooks)
+        else:
+            bid, books = cached
+            qc = qz.QuantizedColumn(qz.encode(vecs, books), books, bid)
+        seg.quantized[name] = qc
+
+    def _merge_quantized(self, tier, merged, row_maps) -> None:
+        """Compaction maintenance for the quantized tier: donate the
+        largest part's codebooks and copy its codes through the row maps
+        (``quantize.merge_quantized`` — assignment pass at most, never a
+        retrain).  Parts without codes force a plain re-encode from the
+        store's cached books."""
+        from repro.core import quantize as qz
+        t0 = time.perf_counter()
+        for col in self._vector_columns():
+            parts = [s.quantized.get(col.name) for s in tier]
+            if all(p is not None for p in parts) and any(
+                    len(p.codes) for p in parts):
+                merged.quantized[col.name] = qz.merge_quantized(
+                    parts, merged.columns[col.name], row_maps)
+            else:
+                self._encode_quantized(merged, col.name)
+        self.metrics["quantize_s"] = self.metrics.get("quantize_s", 0.0) \
+            + (time.perf_counter() - t0)
+
     def _compactable_level(self) -> Optional[int]:
         """Lowest level whose tier reached the size-tiered fanout."""
         counts: Dict[int, int] = {}
@@ -247,6 +305,8 @@ class LSMStore:
         merged.sort_order = None       # identity by construction; drop it
         if self.cfg.build_indexes:
             self._merge_or_rebuild_indexes(tier, merged, row_maps)
+        if self.cfg.quantize_vectors:
+            self._merge_quantized(tier, merged, row_maps)
         self.segments = [s for s in self.segments if s not in tier]
         self.segments.append(merged)
         for s in tier:

@@ -29,8 +29,8 @@ from repro.core import query as q
 from repro.core import visibility as vis_lib
 from repro.core.index.text import tokenize
 from repro.core.optimizer.cost import (C_FILTER_BLOCK, C_MERGE,
-                                       C_ROW_RESIDUAL, C_VECTOR_BLOCK,
-                                       conjunct_passing)
+                                       C_RERANK_ROW, C_ROW_RESIDUAL,
+                                       C_VECTOR_BLOCK, conjunct_passing)
 from repro.core.types import BLOCK_ROWS
 from repro.kernels import ops as kops
 
@@ -57,6 +57,12 @@ class ExecStats:
     shards: int = 0
     merge_rows: int = 0
     shard_rows_max: int = 0
+    # read-path bandwidth accounting (logical bytes, machine-independent):
+    # rank-column bytes streamed for this query's candidate generation —
+    # the quantized dispatch reads m code bytes/row instead of 4*d fp32
+    # bytes, plus 4*d for each of the rerank_rows it re-scores exactly
+    bytes_scanned: int = 0
+    rerank_rows: int = 0
 
 
 @dataclasses.dataclass
@@ -594,6 +600,10 @@ class RankScore(PhysicalOp):
             if not len(rows):
                 continue
             vals = {c: seg.columns[c][rows] for c in rank_cols}
+            # logical rank-column bytes per candidate row (text columns
+            # hold object refs, not streamable bytes — skip them)
+            row_bytes = sum(v.nbytes // max(1, len(rows))
+                            for v in vals.values() if v.dtype != object)
             scores = batched_rank_scores(vals, rank_lists)
             for qi, plan in enumerate(ctx.plans):
                 sel = mask[qi][rows]
@@ -605,6 +615,7 @@ class RankScore(PhysicalOp):
                         seg.n_blocks * len(rank_lists[qi])
                 qrows = rows[sel]
                 ctx.stats[qi].rows_scanned += len(qrows)
+                ctx.stats[qi].bytes_scanned += len(qrows) * row_bytes
                 out[qi].append(Candidates(
                     np.full(len(qrows), seg.seg_id, np.int64),
                     qrows.astype(np.int64), scores[qi][sel]))
@@ -628,29 +639,44 @@ class FusedScanTopK(PhysicalOp):
     equals the host merge's lexsort by (score, pk))."""
     name = "FusedScanTopK"
 
-    def collect(self, ctx: PipelineContext) -> List[List[Candidates]]:
+    def _gather(self, ctx: PipelineContext):
+        """Drain the source into (segments, packed column, batch bitmap,
+        stacked query matrix) — shared by the exact and quantized scans."""
         from repro.core import segment as seg_lib
-        out: List[List[Candidates]] = [[] for _ in range(ctx.nq)]
         r0 = ctx.queries[0].ranks[0]
         segs, masks = [], []
         for seg, mask in self.children[0].batches(ctx):
             segs.append(seg)
             masks.append(mask)
         if not segs:
-            return out
+            return None
         packed = seg_lib.pack_segments(segs, r0.col)
         mask_all = np.concatenate(masks, axis=1)
         Q = np.stack([np.asarray(
             t.q if isinstance(t, q.VectorRank) else t.point, np.float32)
             for t in (qq.ranks[0] for qq in ctx.queries)])
-        k = max(qq.k for qq in ctx.queries)
-        d2, rows = kops.fused_scan_topk(Q, packed.x, mask_all,
-                                        packed.pks, k)
+        return segs, packed, mask_all, Q
+
+    def _emit(self, ctx: PipelineContext, segs, packed, mask_all,
+              d2, rows, scan_row_bytes: int,
+              rerank_rows: Optional[List[int]] = None
+              ) -> List[List[Candidates]]:
+        """Turn kernel (d2, rows) output into per-query candidates and
+        charge stats.  ``scan_row_bytes`` is the logical rank-column bytes
+        the candidate-generation scan streams per mask-passing row (4*d
+        exact, m quantized) — ``bytes_scanned`` measures the scan phase
+        only; the exact re-rank's full-precision gather is reported
+        separately as ``rerank_rows`` (x 4*d bytes, derivable)."""
+        out: List[List[Candidates]] = [[] for _ in range(ctx.nq)]
         unfiltered_blocks = sum(s.n_blocks for s in segs)
         for qi, (qq, plan) in enumerate(zip(ctx.queries, ctx.plans)):
             # stats parity with the staged RankScore operator: candidate
             # rows ranked, and full scan blocks charged to filterless plans
-            ctx.stats[qi].rows_scanned += int(mask_all[qi].sum())
+            n_cand = int(mask_all[qi].sum())
+            ctx.stats[qi].rows_scanned += n_cand
+            ctx.stats[qi].bytes_scanned += n_cand * scan_row_bytes
+            if rerank_rows is not None:
+                ctx.stats[qi].rerank_rows += rerank_rows[qi]
             if not plan.indexed and not plan.residual and not plan.subplans:
                 ctx.stats[qi].blocks_read += \
                     unfiltered_blocks * len(qq.ranks)
@@ -664,6 +690,66 @@ class FusedScanTopK(PhysicalOp):
             out[qi].append(Candidates(packed.sids[rr], packed.rows[rr],
                                       scores))
         return out
+
+    def collect(self, ctx: PipelineContext) -> List[List[Candidates]]:
+        g = self._gather(ctx)
+        if g is None:
+            return [[] for _ in range(ctx.nq)]
+        segs, packed, mask_all, Q = g
+        k = max(qq.k for qq in ctx.queries)
+        d2, rows = kops.fused_scan_topk(Q, packed.x, mask_all,
+                                        packed.pks, k)
+        return self._emit(ctx, segs, packed, mask_all, d2, rows,
+                          scan_row_bytes=packed.x.shape[1]
+                          * packed.x.dtype.itemsize)
+
+
+class QuantizedScanTopK(FusedScanTopK):
+    """Quantized dispatch: PQ-ADC candidate generation over the packed
+    code matrix (``kernels/quantized_scan.py`` — m bytes/row instead of
+    4*d) keeping k' = refine*k survivors per query, then an exact re-rank
+    of the survivors through the ordinary fused scan with the survivor
+    bitmap.  The re-rank reuses ``kops.fused_scan_topk`` verbatim, so the
+    final (score, pk) results carry the exact path's arithmetic and
+    tie-break comparator — whenever the survivors cover the true top-k
+    (refine high enough), results are bitwise identical to the exact
+    dispatch.  Admissible only under the planner's ``_quantized_params``
+    gate (explicit recall_target, all-segment PQ residence); a pack-time
+    codebook mismatch falls back to the exact fused scan."""
+    name = "QuantizedScanTopK"
+
+    def collect(self, ctx: PipelineContext) -> List[List[Candidates]]:
+        from repro.core import segment as seg_lib
+        g = self._gather(ctx)
+        if g is None:
+            return [[] for _ in range(ctx.nq)]
+        segs, packed, mask_all, Q = g
+        k = max(qq.k for qq in ctx.queries)
+        fp_bytes = packed.x.shape[1] * packed.x.dtype.itemsize
+        pc = seg_lib.pack_quantized(segs, ctx.queries[0].ranks[0].col)
+        if pc is None:
+            # quantized residence fell behind (mixed codebooks / missing
+            # codes): exact fused scan, correctness before bandwidth
+            d2, rows = kops.fused_scan_topk(Q, packed.x, mask_all,
+                                            packed.pks, k)
+            return self._emit(ctx, segs, packed, mask_all, d2, rows,
+                              scan_row_bytes=fp_bytes)
+        refine = max((getattr(p, "refine", 0) for p in ctx.plans),
+                     default=0) or 4
+        kprime = min(kops.fs_kernel.KMAX, refine * k)
+        adc_d, crows = kops.quantized_scan_topk(
+            Q, pc.codes, pc.codebooks, mask_all, packed.pks, kprime)
+        # survivor bitmap for the exact re-rank (per query)
+        rmask = np.zeros_like(mask_all)
+        rerank_rows: List[int] = []
+        for qi in range(ctx.nq):
+            rr = crows[qi][crows[qi] >= 0]
+            rmask[qi, rr] = True
+            rerank_rows.append(len(rr))
+        d2, rows = kops.fused_scan_topk(Q, packed.x, rmask, packed.pks, k)
+        return self._emit(ctx, segs, packed, mask_all, d2, rows,
+                          scan_row_bytes=pc.codes.shape[1],
+                          rerank_rows=rerank_rows)
 
 
 class VisibilityResolve(PhysicalOp):
@@ -840,11 +926,16 @@ def run_scan_group(store, catalog, queries, plans, stats,
         if any(p.residual for p in plans):
             source = FilterBitmap([source])
     if is_nn:
-        # planner-chosen dispatch: fused packed kernel (one launch per
-        # batch) vs staged per-segment RankScore; the executor groups by
-        # the fused flag so a group is always homogeneous
-        ranker = FusedScanTopK if all(
-            getattr(p, "fused", False) for p in plans) else RankScore
+        # planner-chosen dispatch: quantized ADC + exact re-rank, fused
+        # packed kernel (one launch per batch), or staged per-segment
+        # RankScore; the executor groups by the (fused, quantized) flags
+        # so a group is always homogeneous
+        if all(getattr(p, "quantized", False) for p in plans):
+            ranker = QuantizedScanTopK
+        elif all(getattr(p, "fused", False) for p in plans):
+            ranker = FusedScanTopK
+        else:
+            ranker = RankScore
         parts = ranker([source]).collect(ctx)
         cands = [Candidates.concat(p) for p in parts]
     else:
@@ -925,10 +1016,19 @@ def build_tree(plan, catalog=None) -> PhysicalOp:
         return node
 
     def ranker(node: PhysicalOp) -> PhysicalOp:
-        """RankScore (staged per-segment kernels) or FusedScanTopK (one
-        packed launch) per the plan's dispatch choice."""
+        """RankScore (staged per-segment kernels), FusedScanTopK (one
+        packed launch), or QuantizedScanTopK (ADC scan + exact re-rank)
+        per the plan's dispatch choice."""
         est = (passing / BLOCK_ROWS) * C_VECTOR_BLOCK * \
             max(1, len(plan.ranks))
+        if getattr(plan, "quantized", False):
+            d = plan.ranks[0].q.shape[0] if plan.ranks else 1
+            ratio = plan.pq_m / max(1.0, 4.0 * d)
+            return QuantizedScanTopK(
+                [node],
+                detail=(f"adc pq m={plan.pq_m} refine={plan.refine} "
+                        f"-> exact re-rank k={plan.k}"),
+                est_cost=est * ratio + plan.refine * plan.k * C_RERANK_ROW)
         if plan.fused:
             return FusedScanTopK(
                 [node],

@@ -26,6 +26,9 @@ C_FUSED_BLOCK = 3.4        # fused scan + on-chip top-k merge per block
 #                            (C_VECTOR_BLOCK plus the sort network)
 C_D2H_ROW = 1.0 / BLOCK_ROWS   # ship one row of distances device->host
 
+# quantized dispatch model (PQ-ADC candidate generation + exact re-rank)
+C_RERANK_ROW = C_VECTOR_BLOCK / BLOCK_ROWS  # gather + exact-score 1 row
+
 
 @dataclasses.dataclass
 class PlanCost:
@@ -108,6 +111,25 @@ def fused_dispatch_cost(catalog, passing_rows: float, k: int) -> float:
     merge_extra = (passing_rows / BLOCK_ROWS) * (C_FUSED_BLOCK
                                                  - C_VECTOR_BLOCK)
     return C_LAUNCH + k * C_D2H_ROW + merge_extra
+
+
+def quantized_dispatch_cost(catalog, passing_rows: float, k: int,
+                            refine: int, code_ratio: float) -> float:
+    """Dispatch surcharge of the quantized read path, charged (like the
+    other ``*_dispatch_cost`` terms) ON TOP of a logical plan that
+    already paid ``C_VECTOR_BLOCK`` per scanned block for a full-
+    precision scan.  ``code_ratio`` = code bytes per row / fp32 bytes per
+    row (m / 4d): the ADC candidate-generation scan streams only that
+    fraction of the bytes, so the dominant term is NEGATIVE — the
+    bandwidth saving over the logical plan's assumed exact scan.  Against
+    it: two launches (ADC scan + re-rank), the on-chip top-k' surcharge
+    on the (smaller) scanned bytes, the exact re-rank of refine*k
+    surviving rows, and k result rows shipped back."""
+    blocks = passing_rows / BLOCK_ROWS
+    scan_savings = blocks * C_VECTOR_BLOCK * (1.0 - code_ratio)
+    merge_extra = blocks * code_ratio * (C_FUSED_BLOCK - C_VECTOR_BLOCK)
+    rerank = C_LAUNCH + refine * k * C_RERANK_ROW
+    return C_LAUNCH + k * C_D2H_ROW + merge_extra + rerank - scan_savings
 
 
 def nra_cost(catalog, ranks: List, filters: List, k: int) -> PlanCost:

@@ -49,6 +49,11 @@ class Plan:
     #                                one search-shaped plan per DNF conjunct
     fused: bool = False            # scan-NN dispatch: fused packed kernel
     #                                (one launch) vs staged per-segment
+    quantized: bool = False        # scan-NN dispatch: PQ-ADC candidate
+    #                                generation + exact re-rank (recall-
+    #                                bounded; only with a recall_target)
+    pq_m: int = 0                  # subquantizers of the quantized dispatch
+    refine: int = 0                # exact re-rank factor (k' = refine*k)
     root: object = None            # operator tree (operators.PhysicalOp)
 
     def operator_tree(self, catalog=None):
@@ -72,7 +77,13 @@ class Plan:
         if self._describe_cache is not None:
             return self._describe_cache
         from repro.core.operators import _pred_detail
-        disp = " dispatch=fused" if self.fused else ""
+        if self.quantized:
+            disp = (f" dispatch=quantized(pq m={self.pq_m}, "
+                    f"refine={self.refine})")
+        elif self.fused:
+            disp = " dispatch=fused"
+        else:
+            disp = ""
         if self.subplans:
             head = (f"{self.kind}(conjuncts={len(self.subplans)} "
                     f"ranks={len(self.ranks)} cost={self.cost:.1f}{disp})")
@@ -216,6 +227,39 @@ def _fusable(catalog: Catalog, query: q.HybridQuery) -> bool:
     return max(s.pk_max for s in store.segments) < int(fs_kernel.SENTINEL)
 
 
+def _quantized_params(catalog: Catalog, query: q.HybridQuery):
+    """(pq_m, refine) when the quantized dispatch is admissible for this
+    query, else None.  Requires an explicit per-query ``recall_target``
+    below 1.0 (the default contract stays exact), a single vector rank
+    whose column carries PQ codes on EVERY visible segment (same m), and
+    room for the k' = refine*k survivor set in the kernel's top-k
+    registers.  Codebook identity across segments is re-checked at pack
+    time (``pack_quantized``) — a mixed-book store falls back to the
+    exact scan at execution, never to wrong answers."""
+    rt = getattr(query, "recall_target", None)
+    if rt is None or rt >= 1.0:
+        return None
+    r = query.ranks[0]
+    if not isinstance(r, q.VectorRank):
+        return None
+    qcols = [s.quantized.get(r.col) if hasattr(s, "quantized") else None
+             for s in catalog.store.segments]
+    if not qcols or any(c is None or not len(c.codes) for c in qcols):
+        return None
+    ms = {c.m for c in qcols}
+    if len(ms) != 1:
+        return None
+    # looser targets need fewer survivors re-ranked; the refine ladder is
+    # deliberately coarse — recall is monotone in refine and the exact
+    # re-rank makes every tier sound, just not equally cheap
+    refine = 4 if rt <= 0.95 else (8 if rt <= 0.99 else 16)
+    while refine >= 2 and refine * query.k > fs_kernel.KMAX:
+        refine //= 2
+    if refine < 2:
+        return None
+    return ms.pop(), refine
+
+
 def _choose_dispatch(catalog: Catalog, plan: Plan,
                      query: q.HybridQuery) -> Plan:
     """Physical dispatch choice for scan-shaped NN plans: fused packed
@@ -238,6 +282,19 @@ def _choose_dispatch(catalog: Catalog, plan: Plan,
         plan.cost += staged
         return plan
     fused = cost_lib.fused_dispatch_cost(catalog, passing, query.k)
+    qp = _quantized_params(catalog, query)
+    if qp is not None:
+        pq_m, refine = qp
+        d = query.ranks[0].q.shape[0]
+        quant = cost_lib.quantized_dispatch_cost(
+            catalog, passing, query.k, refine,
+            code_ratio=pq_m / (4.0 * d))
+        if quant <= fused and quant < staged:
+            plan.quantized = True
+            plan.pq_m = pq_m
+            plan.refine = refine
+            plan.cost += quant
+            return plan
     if fused < staged:
         plan.fused = True
         plan.cost += fused
@@ -279,6 +336,16 @@ def plan(catalog: Catalog, query: q.HybridQuery) -> Plan:
     if query.is_nn:
         chosen = _choose_dispatch(catalog, plan_hybrid_nn(catalog, query),
                                   query)
+        if not chosen.quantized and \
+                getattr(query, "recall_target", None) is not None:
+            # the logical-kind choice above compares exact-scan costs, so
+            # an index walk (nra/postfilter) can shadow the quantized
+            # scan even though the ADC pass streams ~code_ratio of the
+            # bytes; re-price the scan shape with its quantized dispatch
+            # and switch when that wins
+            alt = plan_shared_scan(catalog, query)
+            if alt.quantized and alt.cost < chosen.cost:
+                chosen = alt
     else:
         chosen = plan_hybrid_search(catalog, query)
     chosen.operator_tree(catalog)      # attach EXPLAIN tree with estimates

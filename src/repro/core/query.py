@@ -323,7 +323,8 @@ class HybridQuery:
     def __init__(self, where: Optional[BoolExpr] = None,
                  ranks: Sequence[RankTerm] = (), k: int = 10,
                  select: Optional[Sequence[str]] = None,
-                 filters: Optional[Sequence[Predicate]] = None):
+                 filters: Optional[Sequence[Predicate]] = None,
+                 recall_target: Optional[float] = None):
         if isinstance(where, (list, tuple)):       # implicit conjunction
             where = None if not where else \
                 where[0] if len(where) == 1 else And(tuple(where))
@@ -341,6 +342,15 @@ class HybridQuery:
         self.ranks: List[RankTerm] = list(ranks)
         self.k = int(k)
         self.select = select
+        # NN recall/latency knob: None (default) demands exact results;
+        # a target < 1.0 lets the planner choose the quantized dispatch
+        # (PQ-ADC candidate generation + exact re-rank of refine*k rows)
+        if recall_target is not None:
+            recall_target = float(recall_target)
+            if not 0.0 < recall_target <= 1.0:
+                raise ValueError(
+                    f"recall_target must be in (0, 1], got {recall_target}")
+        self.recall_target = recall_target
 
     @property
     def is_nn(self) -> bool:

@@ -54,6 +54,9 @@ class Segment:
             self.columns[name] = arr[order]
         self.n_rows = len(self.pk)
         self.indexes: Dict[str, Any] = {}
+        # quantized residence tier: col name -> quantize.QuantizedColumn
+        # (PQ codes in segment row order), populated at flush/compaction
+        self.quantized: Dict[str, Any] = {}
         # per-segment zone map (fence pointers) for the global index
         self.pk_min = int(self.pk[0]) if self.n_rows else 0
         self.pk_max = int(self.pk[-1]) if self.n_rows else 0
@@ -136,6 +139,44 @@ def pack_segments(segments: Sequence[Segment], col: str) -> PackedColumn:
         offsets=np.cumsum([0] + ns).astype(np.int64))
     while len(_pack_cache) >= _PACK_CACHE_CAP:
         _pack_cache.popitem(last=False)           # evict least-recent
+    _pack_cache[key] = packed
+    return packed
+
+
+@dataclasses.dataclass
+class PackedCodes:
+    """Quantized sibling of ``PackedColumn``: the PQ code matrices of the
+    same segments stacked in the SAME row order as ``pack_segments``, so
+    a packed row id indexes both the fp32 superbatch and the code
+    superbatch.  Only well-defined when every segment carries codes from
+    one shared codebook set (one ``book_id``)."""
+    codes: np.ndarray        # (N, m) uint8 PQ codes
+    codebooks: np.ndarray    # (m, 256, dsub) fp32 shared codebooks
+    book_id: int
+
+
+def pack_quantized(segments: Sequence[Segment],
+                   col: str) -> Optional[PackedCodes]:
+    """Stack ``col``'s PQ codes across ``segments`` (row-aligned with
+    ``pack_segments``).  Returns None when any segment lacks codes or the
+    segments' codebooks differ — callers fall back to the exact path."""
+    qcols = [s.quantized.get(col) for s in segments]
+    if not qcols or any(qc is None for qc in qcols):
+        return None
+    book_id = qcols[0].book_id
+    if any(qc.book_id != book_id for qc in qcols[1:]):
+        return None
+    key = ("#codes", col) + tuple(s.seg_id for s in segments)
+    hit = _pack_cache.get(key)
+    if hit is not None:
+        _pack_cache.move_to_end(key)
+        return hit
+    packed = PackedCodes(
+        codes=np.concatenate([qc.codes for qc in qcols]),
+        codebooks=qcols[0].codebooks,
+        book_id=book_id)
+    while len(_pack_cache) >= _PACK_CACHE_CAP:
+        _pack_cache.popitem(last=False)
     _pack_cache[key] = packed
     return packed
 

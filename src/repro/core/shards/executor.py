@@ -115,6 +115,18 @@ class ShardedPlan:
         return self.logical.fused
 
     @property
+    def quantized(self) -> bool:
+        return self.logical.quantized
+
+    @property
+    def pq_m(self) -> int:
+        return self.logical.pq_m
+
+    @property
+    def refine(self) -> int:
+        return self.logical.refine
+
+    @property
     def cost(self) -> float:
         return self.logical.cost
 
@@ -193,7 +205,13 @@ class ShardedExecutor:
                 est_cost=float(n * max(1, plan.k)))
         else:
             root = ops.ShardConcat([fan], detail="pk-disjoint concat")
-        disp = " dispatch=fused" if plan.fused else ""
+        if plan.quantized:
+            disp = (f" dispatch=quantized(pq m={plan.pq_m}, "
+                    f"refine={plan.refine})")
+        elif plan.fused:
+            disp = " dispatch=fused"
+        else:
+            disp = ""
         head = (f"sharded:{plan.kind}(shards={n} "
                 f"ranks={len(plan.ranks)} cost={plan.cost:.1f}{disp})")
         plan._sharded_describe = head + "\n" + root.explain(1)
@@ -251,6 +269,8 @@ class ShardedExecutor:
                 agg.rows_scanned += st.rows_scanned
                 agg.kernel_launches += st.kernel_launches
                 agg.bytes_to_host += st.bytes_to_host
+                agg.bytes_scanned += st.bytes_scanned
+                agg.rerank_rows += st.rerank_rows
                 agg.jit_shape_misses += st.jit_shape_misses
                 agg.shard_rows_max = max(agg.shard_rows_max,
                                          st.rows_scanned)

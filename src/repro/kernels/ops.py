@@ -24,6 +24,7 @@ from repro.kernels import bitmap_filter as bf_kernel
 from repro.kernels import fused_scan as fs_kernel
 from repro.kernels import ivf_scan as ivf_kernel
 from repro.kernels import pq_adc as pq_kernel
+from repro.kernels import quantized_scan as qs_kernel
 from repro.kernels import ref
 from repro.kernels import topk_merge as tk_kernel
 
@@ -117,6 +118,18 @@ def _pad_bucket(x: np.ndarray, axis: int, value=0.0,
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, b - n)
     return np.pad(x, widths, constant_values=value)
+
+
+def _pad_codes(codes: np.ndarray, block: int,
+               bucket: bool = True) -> np.ndarray:
+    """THE one place PQ code matrices get padded for device dispatch:
+    int32 cast + row pad to a ``block`` multiple (code 0 in the pad rows
+    — masked or sliced off by every consumer), optionally bucket-padded
+    to a power of two.  Shared by both ``pq_adc_distances`` backends and
+    the fused quantized scan so ``stats_snapshot()`` charges code-block
+    padding identically whichever path ran."""
+    cp = _pad_to(codes.astype(np.int32), block, 0)
+    return _pad_bucket(cp, 0, floor=block) if bucket else cp
 
 
 @functools.lru_cache(maxsize=None)
@@ -233,15 +246,12 @@ def pq_adc_distances(q: np.ndarray, codes: np.ndarray,
             .astype(np.float32)
         _dispatched(out.nbytes)
         return out
+    cp = _pad_codes(codes, pq_kernel.BLOCK_N)
     if use_pallas:
-        cp = _pad_bucket(_pad_to(codes.astype(np.int32),
-                                 pq_kernel.BLOCK_N, 0), 0,
-                         floor=pq_kernel.BLOCK_N)
         out = np.asarray(pq_kernel.pq_adc(jnp.asarray(cp),
                                           jnp.asarray(lut, jnp.float32)))
         _dispatched(out.nbytes, "pq_adc.pallas", cp.shape)
         return out[:len(codes)]
-    cp = _pad_bucket(codes.astype(np.int32), 0)
     out = np.asarray(_jit_pq_ref()(jnp.asarray(cp),
                                    jnp.asarray(lut, jnp.float32)))
     _dispatched(out.nbytes, "pq_adc.ref", cp.shape)
@@ -398,6 +408,112 @@ def fused_scan_topk(q: np.ndarray, x: np.ndarray, mask: np.ndarray,
     rows = keep[safe // BN] * BN + safe % BN
     rows = np.where(idx == int(fs_kernel.SENTINEL), -1, rows)
     return d2, rows.astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# fused quantized (PQ ADC) scan -> top-k' (candidate generation)
+# ---------------------------------------------------------------------------
+
+def adc_lut(q: np.ndarray, codebooks: np.ndarray) -> np.ndarray:
+    """Per-query ADC tables: q (nq, d); codebooks (m, 256, dsub) ->
+    (nq, m, 256) fp32 with lut[q, j, c] = ||q_sub_j - codebook_j[c]||^2.
+    Computed once per launch on the host (nq*m*256 floats — tiny next to
+    the code matrix the device streams)."""
+    nq, d = q.shape
+    m, _, dsub = codebooks.shape
+    qs = np.asarray(q, np.float32).reshape(nq, m, dsub)
+    diff = codebooks[None, :, :, :] - qs[:, :, None, :]
+    return (diff * diff).sum(axis=3).astype(np.float32)
+
+
+def quantized_scan_topk(q: np.ndarray, codes: np.ndarray,
+                        codebooks: np.ndarray, mask: np.ndarray,
+                        pks: np.ndarray, k: int,
+                        use_pallas: bool = None
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """Fused PQ-ADC candidate generation over a packed code matrix.
+
+    q (nq, d) queries; codes (n, m) uint8 packed PQ codes (row-aligned
+    with the fp32 superbatch); codebooks (m, 256, dsub) shared books;
+    mask (nq, n) bool; pks (n,) primary keys.  Returns (adc (nq, k) fp32
+    ADC distances ascending, rows (nq, k) int64 row indices into the
+    packed matrix; -1 beyond a query's candidate count).  Ties break by
+    (adc, pk) so survivor sets are deterministic.
+
+    ADC distances are approximate: callers re-rank the survivors exactly
+    via ``fused_scan_topk`` with the survivor mask — which reproduces the
+    exact path's per-row arithmetic bit-for-bit in both backends, so the
+    final (score, pk) results match the exact dispatch whenever the
+    survivors cover the true top-k.
+
+    Host-side prep mirrors ``fused_scan_topk`` exactly (pad -> keep-block
+    compaction -> power-of-two bucket -> occupancy grid), just over the
+    uint8 code matrix instead of the fp32 column: the device streams
+    m bytes/row instead of 4*d.
+    """
+    use_pallas = USE_PALLAS if use_pallas is None else use_pallas
+    q = np.asarray(q, np.float32)
+    mask = np.asarray(mask, bool)
+    nq = len(q)
+    k = int(min(k, fs_kernel.KMAX))
+    empty = (np.full((nq, k), np.inf, np.float32),
+             np.full((nq, k), -1, np.int64))
+    if len(codes) == 0 or k == 0 or not mask.any():
+        return empty
+    lut = adc_lut(q, codebooks)                     # (nq, m, 256)
+    m = codes.shape[1]
+    if not use_pallas:
+        # simulated fused ADC kernel: ONE counted dispatch; same gather
+        # arithmetic and (adc, pk) comparator as the device kernel
+        adc = np.zeros((nq, len(codes)), np.float32)
+        codes64 = codes.astype(np.int64)
+        for j in range(m):
+            adc += lut[:, j, :][:, codes64[:, j]]
+        s = np.where(mask, adc, np.inf)
+        pks64 = np.asarray(pks, np.int64)
+        out_d = np.full((nq, k), np.inf, np.float32)
+        out_r = np.full((nq, k), -1, np.int64)
+        for qi in range(nq):
+            order = np.lexsort((pks64, s[qi]))[:k]
+            order = order[np.isfinite(s[qi][order])]
+            out_d[qi, :len(order)] = s[qi][order]
+            out_r[qi, :len(order)] = order
+        _dispatched(out_d.nbytes + out_r.nbytes)
+        return out_d, out_r
+    BQ, BN = fs_kernel.BLOCK_Q, fs_kernel.BLOCK_N
+    cp = _pad_codes(codes, BN, bucket=False)
+    mp = _pad_to(mask.astype(np.uint8), BN, 1)
+    pkp = _pad_to(np.asarray(pks, np.int64), BN, 0,
+                  value=int(fs_kernel.SENTINEL))
+    nb = len(cp) // BN
+    keep = np.nonzero(mp.reshape(nq, nb, BN).any(axis=(0, 2)))[0]
+    if len(keep) == 0:
+        return empty
+    nb_pad = _bucket(len(keep), floor=1)
+    ck = np.zeros((nb_pad * BN, m), np.int32)
+    mk = np.zeros((nq, nb_pad * BN), np.uint8)
+    pkk = np.full((nb_pad * BN,), int(fs_kernel.SENTINEL), np.int64)
+    ck[:len(keep) * BN] = cp.reshape(nb, BN, m)[keep].reshape(-1, m)
+    mk[:, :len(keep) * BN] = \
+        mp.reshape(nq, nb, BN)[:, keep].reshape(nq, -1)
+    pkk[:len(keep) * BN] = pkp.reshape(nb, BN)[keep].reshape(-1)
+    lutf = _pad_to(lut.reshape(nq, m * 256), BQ, 0)
+    mkq = _pad_to(mk, BQ, 0)
+    occ = mkq.reshape(len(lutf) // BQ, BQ, nb_pad, BN) \
+        .any(axis=(1, 3)).astype(np.int32)
+    pk32 = pkk.astype(np.int32)[None, :]
+    adc, _, idx = qs_kernel.quantized_scan_topk(
+        jnp.asarray(lutf), jnp.asarray(ck), jnp.asarray(mkq),
+        jnp.asarray(pk32), jnp.asarray(occ))
+    adc = np.asarray(adc)
+    idx = np.asarray(idx)
+    _dispatched(adc.nbytes + 2 * idx.nbytes, "quantized_scan.pallas",
+                lutf.shape + ck.shape)
+    adc, idx = adc[:nq, :k], idx[:nq, :k]
+    safe = np.minimum(idx, len(keep) * BN - 1)
+    rows = keep[safe // BN] * BN + safe % BN
+    rows = np.where(idx == int(fs_kernel.SENTINEL), -1, rows)
+    return adc, rows.astype(np.int64)
 
 
 # ---------------------------------------------------------------------------

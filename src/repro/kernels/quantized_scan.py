@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: fused PQ-ADC scan → per-query running top-k'.
+
+Quantized sibling of ``fused_scan.py`` — same grid, same occupancy-grid
+skip, same revisited-output-block running top-k, same (distance, pk)
+tie-break sort — but the posting tile streams the uint8 PQ code matrix
+(m bytes/row) instead of the fp32 column (4*d bytes/row), so candidate
+generation reads ~16-32x fewer bytes at typical (d=128, m=8):
+
+  * the host computes one ADC LUT per query ONCE per launch —
+    ``lut[q, j, c] = || q_sub_j - codebook_j[c] ||^2`` flattened to
+    (nq, m*256) so a query tile's LUT rows ride in as a single block
+    resident across the inner dimension;
+  * inside the tile, per-subquantizer distances come from the one-hot
+    matmul trick (``pq_adc.py``): expanding codes to a (BLOCK_N, 256)
+    one-hot and contracting against the query-tile LUT slice puts the
+    gather on the MXU — (BLOCK_Q, 256) x (256, BLOCK_N) per j;
+  * the predicate bitmap masks in-kernel and the running top-k' merges
+    via one ``lax.sort`` over KMAX + BLOCK_N lanes, keys (adc, pk), so
+    survivor sets are deterministic under ties.
+
+ADC distances are approximations: callers keep k' = refine*k survivors
+and re-rank them EXACTLY against the fp32 column through the ordinary
+fused scan (``ops.fused_scan_topk``), which restores the committed
+(score, pk) comparator bit-for-bit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.fused_scan import BLOCK_N, BLOCK_Q, KMAX, SENTINEL
+
+
+def _quantized_scan_topk_kernel(occ_ref, lut_ref, codes_ref, mask_ref,
+                                pk_ref, out_d_ref, out_p_ref, out_i_ref):
+    """One (query-tile, posting-block) grid step.
+
+    occ_ref:   (1, 1) SMEM — 0 when every lane of this tile is masked
+    lut_ref:   (BLOCK_Q, m*256) fp32 per-query ADC LUTs (resident)
+    codes_ref: (BLOCK_N, m) int32 PQ codes
+    mask_ref:  (BLOCK_Q, BLOCK_N) uint8 predicate bitmap
+    pk_ref:    (1, BLOCK_N) int32 primary keys (tie-break sort key)
+    out_*:     (BLOCK_Q, KMAX) running top-k' accumulator
+    """
+    j = pl.program_id(1)
+    m = codes_ref.shape[1]
+
+    @pl.when(j == 0)
+    def _init():
+        out_d_ref[...] = jnp.full((BLOCK_Q, KMAX), jnp.inf, jnp.float32)
+        out_p_ref[...] = jnp.full((BLOCK_Q, KMAX), SENTINEL, jnp.int32)
+        out_i_ref[...] = jnp.full((BLOCK_Q, KMAX), SENTINEL, jnp.int32)
+
+    @pl.when(occ_ref[0, 0] != 0)
+    def _scan_and_merge():
+        codes = codes_ref[...]
+        acc = jnp.zeros((BLOCK_Q, BLOCK_N), jnp.float32)
+        # static unroll over subquantizers: one one-hot MXU contraction
+        # per j sums lut[q, j, codes[i, j]] into the (BQ, BN) tile
+        for sub in range(m):
+            lutj = lut_ref[:, sub * 256:(sub + 1) * 256]      # (BQ, 256)
+            onehot = (codes[:, sub][:, None] ==
+                      jax.lax.broadcasted_iota(jnp.int32, (1, 256), 1))
+            acc = acc + jax.lax.dot_general(
+                lutj, onehot.astype(jnp.float32),
+                (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        mask = mask_ref[...] != 0
+        d = jnp.where(mask, acc, jnp.inf)
+        ids = j * BLOCK_N + jax.lax.broadcasted_iota(
+            jnp.int32, (BLOCK_Q, BLOCK_N), 1)
+        ids = jnp.where(mask, ids, SENTINEL)
+        pks = jnp.where(mask, pk_ref[...], SENTINEL)
+        cat_d = jnp.concatenate([out_d_ref[...], d], axis=1)
+        cat_p = jnp.concatenate([out_p_ref[...], pks], axis=1)
+        cat_i = jnp.concatenate([out_i_ref[...], ids], axis=1)
+        sd, sp, si = jax.lax.sort((cat_d, cat_p, cat_i), dimension=1,
+                                  num_keys=2)
+        out_d_ref[...] = sd[:, :KMAX]
+        out_p_ref[...] = sp[:, :KMAX]
+        out_i_ref[...] = si[:, :KMAX]
+
+
+def quantized_scan_topk(lut: jnp.ndarray, codes: jnp.ndarray,
+                        mask: jnp.ndarray, pks: jnp.ndarray,
+                        occ: jnp.ndarray, interpret: bool = True):
+    """lut (nq, m*256) fp32; codes (n, m) int32; mask (nq, n) uint8;
+    pks (1, n) int32; occ (nq/BLOCK_Q, n/BLOCK_N) int32.  All padded to
+    tile multiples by ``ops.quantized_scan_topk``.  Returns ((nq, KMAX)
+    fp32 ADC distances sorted ascending, (nq, KMAX) int32 pks, (nq, KMAX)
+    int32 packed row ids); empty slots hold (+inf, SENTINEL, SENTINEL)."""
+    nq, lut_w = lut.shape
+    n, m = codes.shape
+    assert lut_w == m * 256, (lut_w, m)
+    assert nq % BLOCK_Q == 0 and n % BLOCK_N == 0, (nq, n)
+    grid = (nq // BLOCK_Q, n // BLOCK_N)
+    return pl.pallas_call(
+        _quantized_scan_topk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (i, j),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((BLOCK_Q, lut_w), lambda i, j: (i, 0)),
+            pl.BlockSpec((BLOCK_N, m), lambda i, j: (j, 0)),
+            pl.BlockSpec((BLOCK_Q, BLOCK_N), lambda i, j: (i, j)),
+            pl.BlockSpec((1, BLOCK_N), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_Q, KMAX), lambda i, j: (i, 0)),
+            pl.BlockSpec((BLOCK_Q, KMAX), lambda i, j: (i, 0)),
+            pl.BlockSpec((BLOCK_Q, KMAX), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, KMAX), jnp.float32),
+            jax.ShapeDtypeStruct((nq, KMAX), jnp.int32),
+            jax.ShapeDtypeStruct((nq, KMAX), jnp.int32),
+        ],
+        interpret=interpret,
+    )(occ, lut, codes, mask, pks)

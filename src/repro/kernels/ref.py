@@ -63,6 +63,32 @@ def fused_topk_ref(q: jnp.ndarray, x: jnp.ndarray, mask: jnp.ndarray,
     return sd[:, :k], sp[:, :k], si[:, :k]
 
 
+def quantized_topk_ref(lut: jnp.ndarray, codes: jnp.ndarray,
+                       mask: jnp.ndarray, pks: jnp.ndarray, k: int):
+    """Fused quantized ADC scan -> top-k' oracle (quantized_scan.py).
+
+    lut (nq, m, 256) fp32 per-query ADC tables; codes (n, m); mask
+    (nq, n); pks (1, n) int32 -> per query the k smallest ADC distances
+    over mask-admitted rows, ties broken by pk, then row id.  Returns
+    ((nq, k) fp32, (nq, k) int32 pks, (nq, k) int32 row ids); empty
+    slots hold (+inf, INT32_MAX, INT32_MAX)."""
+    sentinel = jnp.int32(jnp.iinfo(jnp.int32).max)
+    # gather lut[q, j, codes[i, j]] and sum over j: (nq, m, n) -> (nq, n)
+    idx = codes.astype(jnp.int32).T[None, :, :]          # (1, m, n)
+    take = jnp.take_along_axis(
+        lut.astype(jnp.float32), jnp.broadcast_to(
+            idx, (lut.shape[0],) + idx.shape[1:]), axis=2)
+    d = jnp.sum(take, axis=1)
+    m = mask != 0
+    d = jnp.where(m, d, jnp.inf)
+    ids = jnp.broadcast_to(
+        jax.lax.broadcasted_iota(jnp.int32, d.shape, 1), d.shape)
+    ids = jnp.where(m, ids, sentinel)
+    pkb = jnp.where(m, pks.astype(jnp.int32), sentinel)
+    sd, sp, si = jax.lax.sort((d, pkb, ids), dimension=1, num_keys=2)
+    return sd[:, :k], sp[:, :k], si[:, :k]
+
+
 def rect_filter_ref(points: jnp.ndarray, rect: jnp.ndarray) -> jnp.ndarray:
     """points (n, 2); rect (4,) = (xmin, ymin, xmax, ymax) -> (n,) bool."""
     x, y = points[:, 0], points[:, 1]

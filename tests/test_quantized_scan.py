@@ -1,0 +1,328 @@
+"""Quantized residence tier: fused ADC scan->top-k' kernel parity vs the
+ref oracle, the ops wrapper vs brute force in both backends, shared code
+padding accounting, and end-to-end quantized-vs-exact equivalence on the
+TRACY workload (single-store and sharded)."""
+import numpy as np
+import pytest
+
+from benchmarks import tracy
+from repro.core import quantize as qz
+from repro.core import query as q
+from repro.core import segment as seg_lib
+from repro.core.executor import Executor
+from repro.core.optimizer import planner as planner_lib
+from repro.core.shards import ShardedExecutor, ShardRouter
+from repro.kernels import fused_scan as fs
+from repro.kernels import ops as kops
+from repro.kernels import quantized_scan as qs
+from repro.kernels import ref
+
+import jax.numpy as jnp
+
+
+def _make_pq(n, d, m, seed=0):
+    """Random codes + codebooks shaped like a quantized rank column."""
+    rng = np.random.default_rng(seed)
+    codebooks = rng.normal(size=(m, 256, d // m)).astype(np.float32)
+    codes = rng.integers(0, 256, (n, m), dtype=np.uint8)
+    return codes, codebooks
+
+
+def _brute_adc(Q, codes, codebooks, mask, pks, k):
+    """(adc, row) float64 oracle: smallest ADC distance per query over
+    admitted rows, ties by (adc, pk)."""
+    lut = kops.adc_lut(Q, codebooks).astype(np.float64)
+    n, m = codes.shape
+    adc = np.zeros((len(Q), n))
+    for j in range(m):
+        adc += lut[:, j, :][:, codes[:, j].astype(np.int64)]
+    out = []
+    for qi in range(len(Q)):
+        dd = np.where(mask[qi], adc[qi], np.inf)
+        order = np.lexsort((pks, dd))[:k]
+        out.append(order[np.isfinite(dd[order])])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nq,n,m", [(8, 512, 8), (8, 1024, 16),
+                                    (16, 512, 4)])
+@pytest.mark.parametrize("mask_kind", ["full", "partial", "block_holes"])
+def test_kernel_matches_ref(nq, n, m, mask_kind):
+    rng = np.random.default_rng(0)
+    d = 4 * m
+    Q = rng.normal(size=(nq, d)).astype(np.float32)
+    codes, codebooks = _make_pq(n, d, m, seed=1)
+    if mask_kind == "full":
+        mask = np.ones((nq, n), np.uint8)
+    elif mask_kind == "partial":
+        mask = (rng.random((nq, n)) < 0.3).astype(np.uint8)
+    else:           # whole tiles masked for every query (occupancy skip)
+        mask = np.ones((nq, n), np.uint8)
+        mask[:, : fs.BLOCK_N] = 0
+        mask[:, -fs.BLOCK_N // 2:] = 0
+    pks = (np.arange(n, dtype=np.int32) * 7 + 3)
+    occ = mask.reshape(nq // fs.BLOCK_Q, fs.BLOCK_Q,
+                       n // fs.BLOCK_N, fs.BLOCK_N) \
+        .any(axis=(1, 3)).astype(np.int32)
+    lut = kops.adc_lut(Q, codebooks)
+    kd, kp, ki = qs.quantized_scan_topk(
+        jnp.asarray(lut.reshape(nq, m * 256)),
+        jnp.asarray(codes.astype(np.int32)), jnp.asarray(mask),
+        jnp.asarray(pks[None, :]), jnp.asarray(occ), interpret=True)
+    rd, rp, ri = ref.quantized_topk_ref(
+        jnp.asarray(lut), jnp.asarray(codes.astype(np.int32)),
+        jnp.asarray(mask), jnp.asarray(pks[None, :]), k=fs.KMAX)
+    np.testing.assert_allclose(np.asarray(kd), np.asarray(rd),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(ki), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(kp), np.asarray(rp))
+
+
+def test_kernel_tie_break_by_pk():
+    """Duplicate codes give bitwise-equal ADC distances: within every
+    run of equal distances the winners must ascend by pk."""
+    rng = np.random.default_rng(1)
+    m, n = 8, 512
+    codes, codebooks = _make_pq(8, 4 * m, m, seed=2)
+    X = np.repeat(codes, n // len(codes), axis=0)     # 512 rows, 8 classes
+    X = X[rng.permutation(len(X))]
+    pks = rng.permutation(n).astype(np.int32) * 5 + 2
+    Q = rng.normal(size=(fs.BLOCK_Q, 4 * m)).astype(np.float32)
+    lut = kops.adc_lut(Q, codebooks)
+    mask = np.ones((fs.BLOCK_Q, n), np.uint8)
+    occ = np.ones((1, 1), np.int32)
+    kd, kp, ki = qs.quantized_scan_topk(
+        jnp.asarray(lut.reshape(fs.BLOCK_Q, m * 256)),
+        jnp.asarray(X.astype(np.int32)), jnp.asarray(mask),
+        jnp.asarray(pks[None, :]), jnp.asarray(occ), interpret=True)
+    kd, kp = np.asarray(kd)[0], np.asarray(kp)[0]
+    for i in range(1, fs.KMAX):
+        if kd[i] == kd[i - 1]:
+            assert kp[i] > kp[i - 1]
+
+
+# ---------------------------------------------------------------------------
+# ops wrapper: ragged shapes, degenerate bitmaps, both backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 10, 128])
+@pytest.mark.parametrize("nq,n,m", [(1, 700, 8), (5, 1400, 16),
+                                    (9, 130, 4)])
+def test_ops_quantized_matches_bruteforce_ragged(nq, n, m, k):
+    rng = np.random.default_rng(2)
+    d = 4 * m
+    Q = rng.normal(size=(nq, d)).astype(np.float32)
+    codes, codebooks = _make_pq(n, d, m, seed=3)
+    mask = rng.random((nq, n)) < 0.4
+    mask[0, :] = False                                # all-masked query
+    if nq > 1:
+        mask[1, :] = True                             # full bitmap
+    pks = np.arange(n, dtype=np.int64) * 3 + 11
+    want = _brute_adc(Q, codes, codebooks, mask, pks, k)
+    for up in (True, False):
+        adc, rows = kops.quantized_scan_topk(Q, codes, codebooks, mask,
+                                             pks, k, use_pallas=up)
+        assert adc.shape == (nq, k) and rows.shape == (nq, k)
+        for qi in range(nq):
+            got = rows[qi][rows[qi] >= 0]
+            np.testing.assert_array_equal(got, want[qi],
+                                          err_msg=f"q{qi} pallas={up}")
+            assert (rows[qi][len(want[qi]):] == -1).all()
+            assert np.isinf(adc[qi][len(want[qi]):]).all()
+
+
+def test_ops_quantized_empty_inputs():
+    codes, codebooks = _make_pq(200, 32, 8, seed=4)
+    Q = np.zeros((2, 32), np.float32)
+    pks = np.arange(200, dtype=np.int64)
+    for up in (True, False):
+        _, rows = kops.quantized_scan_topk(
+            Q, codes, codebooks, np.zeros((2, 200), bool), pks, 5,
+            use_pallas=up)
+        assert (rows == -1).all()
+    _, rows = kops.quantized_scan_topk(
+        Q, np.zeros((0, 8), np.uint8), codebooks, np.zeros((2, 0), bool),
+        np.zeros(0, np.int64), 5)
+    assert rows.shape == (2, 5) and (rows == -1).all()
+
+
+def test_pq_adc_padding_charged_once(monkeypatch):
+    """Satellite: both ``pq_adc_distances`` device backends pad the code
+    matrix through the shared ``_pad_codes`` helper, so the dispatch
+    accounting (shape key and bytes) is identical whichever ran —
+    host-side padding differences can't skew ``stats_snapshot()``."""
+    rng = np.random.default_rng(5)
+    n, m = 700, 8                                     # odd n: real padding
+    codes, codebooks = _make_pq(n, 32, m, seed=5)
+    qv = rng.normal(size=32).astype(np.float32)
+    monkeypatch.setattr(kops, "HOST_FLOP_CUTOFF", 0)  # force device paths
+    before = kops.stats_snapshot()
+    d_ref = kops.pq_adc_distances(qv, codes, codebooks, use_pallas=False)
+    mid = kops.stats_snapshot()
+    d_pal = kops.pq_adc_distances(qv, codes, codebooks, use_pallas=True)
+    after = kops.stats_snapshot()
+    ref_bytes = mid[1] - before[1]
+    pal_bytes = after[1] - mid[1]
+    assert ref_bytes == pal_bytes > 0
+    np.testing.assert_allclose(d_ref, d_pal, rtol=1e-5, atol=1e-5)
+    padded = kops._pad_codes(codes, qs.BLOCK_N)
+    assert len(padded) % qs.BLOCK_N == 0 and len(padded) >= n
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: quantized vs exact over the TRACY workload
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tracy_store():
+    cfg = tracy.TracyConfig(n_rows=1200, dim=32, seed=7, flush_rows=300,
+                            fanout=64, pq_m=16)      # dsub=2 books
+    store, data = tracy.build_store(cfg)
+    return store, data
+
+
+def _results(pairs):
+    return [[(r.pk, float(r.score)) for r in rows] for rows, _ in pairs]
+
+
+def test_planner_quantized_dispatch_and_explain(tracy_store):
+    store, data = tracy_store
+    ex = Executor(store)
+    qq = q.HybridQuery(ranks=[q.VectorRank(
+        "embedding", data.query_vec(), 1.0)], k=10, recall_target=0.9)
+    plan = planner_lib.plan(ex.catalog, qq)
+    assert plan.quantized and plan.pq_m == 16 and plan.refine == 4
+    text = plan.describe()
+    assert "dispatch=quantized(pq m=16, refine=4)" in text
+    assert "QuantizedScanTopK" in text
+    # no recall target (or target 1.0) keeps the exact read path
+    exact = q.HybridQuery(ranks=list(qq.ranks), k=10)
+    assert not planner_lib.plan(ex.catalog, exact).quantized
+    full = q.HybridQuery(ranks=list(qq.ranks), k=10, recall_target=1.0)
+    assert not planner_lib.plan(ex.catalog, full).quantized
+    with pytest.raises(ValueError):
+        q.HybridQuery(ranks=list(qq.ranks), k=10, recall_target=1.5)
+
+
+def test_quantized_bitwise_identical_at_high_refine(tracy_store):
+    """With refine*k covering enough survivors, the quantized path must
+    return bitwise-identical (pk, score) to the exact fused path — in
+    both backends (the CI pallas-interpret job re-runs this file with
+    REPRO_USE_PALLAS=1)."""
+    store, data = tracy_store
+    ex = Executor(store)
+    for ti in range(3):
+        data.rng = np.random.default_rng(60 + ti)
+        qa = [q.HybridQuery(ranks=[q.VectorRank(
+            "embedding", data.query_vec(), 1.0)], k=10,
+            recall_target=0.9) for _ in range(4)]
+        data.rng = np.random.default_rng(60 + ti)
+        qb = [q.HybridQuery(ranks=[q.VectorRank(
+            "embedding", data.query_vec(), 1.0)], k=10)
+            for _ in range(4)]
+        plans = [planner_lib.plan(ex.catalog, qi) for qi in qa]
+        assert all(p.quantized for p in plans)
+        for p in plans:
+            p.refine = 12                            # k' = 120 <= KMAX
+        quant = ex.execute_many(qa, plans=plans)
+        exact = ex.execute_many(qb)
+        assert _results(quant) == _results(exact)
+        for (_, sq), (_, se) in zip(quant, exact):
+            assert sq.rerank_rows > 0 and se.rerank_rows == 0
+            assert 0 < sq.bytes_scanned < se.bytes_scanned
+
+
+def test_quantized_stats_bytes_reduction(tracy_store):
+    """Default refine: bytes_scanned must shrink by ~4*d/m (scan-phase
+    accounting) and recall stays high on the clustered workload."""
+    store, data = tracy_store
+    ex = Executor(store)
+    data.rng = np.random.default_rng(99)
+    qa = [q.HybridQuery(ranks=[q.VectorRank(
+        "embedding", data.query_vec(), 1.0)], k=10, recall_target=0.9)
+        for _ in range(6)]
+    data.rng = np.random.default_rng(99)
+    qb = [q.HybridQuery(ranks=[q.VectorRank(
+        "embedding", data.query_vec(), 1.0)], k=10) for _ in range(6)]
+    quant = ex.execute_many(qa)
+    exact = ex.execute_many(qb)
+    for (rq, sq), (re_, se) in zip(quant, exact):
+        assert "dispatch=quantized" in sq.plan
+        # dim=32 fp rows are 128 B, m=16 codes: exactly 8x scan bytes
+        assert se.bytes_scanned == 8 * sq.bytes_scanned > 0
+        assert sq.rerank_rows == 40                  # refine(4) * k(10)
+        got = {r.pk for r in rq}
+        want = {r.pk for r in re_}
+        assert len(got & want) >= 8                  # recall@10 >= 0.8
+
+
+def test_quantized_filtered_and_fallback(tracy_store):
+    """Filtered quantized queries stay correct, and a store without
+    codes for the rank column plans exact."""
+    store, data = tracy_store
+    ex = Executor(store)
+    data.rng = np.random.default_rng(123)
+    qa = [q.HybridQuery(where=q.Range("time", 100, 600),
+                        ranks=[q.VectorRank("embedding", data.query_vec(),
+                                            1.0)],
+                        k=10, recall_target=0.9) for _ in range(4)]
+    data.rng = np.random.default_rng(123)
+    qb = [q.HybridQuery(where=q.Range("time", 100, 600),
+                        ranks=[q.VectorRank("embedding", data.query_vec(),
+                                            1.0)], k=10)
+          for _ in range(4)]
+    plans = [planner_lib.plan_shared_scan(ex.catalog, qi) for qi in qa]
+    assert all(p.quantized for p in plans)
+    for p in plans:
+        p.refine = 12
+    quant = ex.execute_many(qa, plans=plans)
+    exact = ex.execute_many(qb)
+    assert _results(quant) == _results(exact)
+    # a spatial rank column has no PQ codes -> no quantized dispatch
+    sq = q.HybridQuery(ranks=[q.SpatialRank("coordinate", (5., 5.), 1.0)],
+                       k=5, recall_target=0.9)
+    assert not planner_lib.plan(ex.catalog, sq).quantized
+
+
+def test_sharded_quantized_parity():
+    """Sharded scatter-gather threads the quantized choice through and
+    matches the sharded exact path at high refine; aggregated stats
+    carry the new columns."""
+    cfg = tracy.TracyConfig(n_rows=1600, dim=32, seed=11, flush_rows=200,
+                            fanout=64, pq_m=16)
+    data = tracy.TracyData(cfg)
+    router = ShardRouter(tracy.tweet_schema(cfg.dim),
+                         tracy.LSMConfig(flush_rows=cfg.flush_rows,
+                                         fanout=cfg.fanout,
+                                         pq_m=cfg.pq_m),
+                         n_shards=2)
+    done = 0
+    while done < cfg.n_rows:
+        n = min(cfg.flush_rows, cfg.n_rows - done)
+        pks, batch = data.batch(n)
+        router.put(pks, batch)
+        done += n
+    router.flush()
+    ex = ShardedExecutor(router)
+    data.rng = np.random.default_rng(77)
+    qa = [q.HybridQuery(ranks=[q.VectorRank(
+        "embedding", data.query_vec(), 1.0)], k=10, recall_target=0.9)
+        for _ in range(4)]
+    data.rng = np.random.default_rng(77)
+    qb = [q.HybridQuery(ranks=[q.VectorRank(
+        "embedding", data.query_vec(), 1.0)], k=10) for _ in range(4)]
+    plan = ex.plan(qa[0])
+    assert plan.quantized and plan.pq_m == 16
+    assert "dispatch=quantized(pq m=16" in plan.describe()
+    logical = plan.logical
+    logical.refine = 12
+    quant = ex.execute_many(qa, plans=[logical] * len(qa))
+    exact = ex.execute_many(qb)
+    assert _results(quant) == _results(exact)
+    for _, st in quant:
+        assert st.bytes_scanned > 0 and st.rerank_rows > 0
+        assert st.shards == 2

@@ -11,6 +11,8 @@ from repro.core.executor import Executor
 from repro.core.index import default_index_factory
 from repro.core.lsm import LSMConfig, LSMStore
 from repro.core.memtable import MemTable
+from repro.core.types import Column, ColumnType, IndexKind, Schema
+from repro.kernels import ops as kops
 
 
 # --------------------------------------------------------------- memtable
@@ -362,3 +364,85 @@ def test_merge_results_match_rebuild_results_end_to_end():
         ra, _ = ex_a.execute(q.HybridQuery(where=where, k=1000))
         rb, _ = ex_b.execute(q.HybridQuery(where=where, k=1000))
         assert {r.pk for r in ra} == {r.pk for r in rb}
+
+
+# ------------------------------------------- quantized codebook donation
+
+def _pqivf_schema():
+    return Schema([
+        Column("embedding", ColumnType.VECTOR, dim=16,
+               index=IndexKind.PQIVF),
+        Column("coordinate", ColumnType.SPATIAL, index=IndexKind.ZORDER),
+        Column("content", ColumnType.TEXT, index=IndexKind.INVERTED),
+        Column("time", ColumnType.SCALAR, index=IndexKind.BTREE),
+    ])
+
+
+def test_ivf_merge_donates_pq_codebooks():
+    rng = np.random.default_rng(21)
+    store = LSMStore(_pqivf_schema(), LSMConfig(flush_rows=150, fanout=3))
+    _fill(store, rng, 300, batch=150)
+    part_books = [s.indexes["embedding"].codebooks.copy()
+                  for s in store.segments]
+    assert all(b is not None for b in part_books)
+    _fill(store, rng, 150, pk_start=300, batch=150)   # trips the fanout
+    merged = [s for s in store.segments if s.level >= 1]
+    assert len(merged) == 1 and store.metrics["index_merges"] > 0
+    idx = merged[0].indexes["embedding"]
+    # the merged index keeps a donor part's codebooks bitwise — reuse,
+    # never a k-means retrain at compaction
+    assert any(np.array_equal(idx.codebooks, b) for b in part_books)
+    # and the codes are the nearest-codeword re-encode under the donated
+    # books, in posting-list (grouped) order
+    vecs = np.asarray(merged[0].columns["embedding"],
+                      np.float32)[idx.post_rows]
+    m, _, dsub = idx.codebooks.shape
+    assert m == idx.pq_m
+    expect = np.stack(
+        [kops.assign_nearest(vecs[:, j * dsub:(j + 1) * dsub],
+                             idx.codebooks[j]) for j in range(m)],
+        axis=1).astype(np.uint8)
+    np.testing.assert_array_equal(idx.codes, expect)
+
+
+def test_compaction_donates_quantized_residence_books(monkeypatch):
+    from repro.core import quantize as qz
+    rng = np.random.default_rng(22)
+    store = LSMStore(tweet_schema(), LSMConfig(flush_rows=150, fanout=3))
+    _fill(store, rng, 300, batch=150)
+    book_id, books = store._pq_books["embedding"]
+    # give one part a foreign book: only its rows may be re-encoded
+    seg_f = store.segments[1]
+    foreign = qz.quantize_column(
+        np.asarray(seg_f.columns["embedding"], np.float32), seed=99)
+    assert foreign.book_id != book_id
+    seg_f.quantized["embedding"] = foreign
+    donor = store.segments[0]
+    donor_codes = {int(p): donor.quantized["embedding"].codes[i].copy()
+                   for i, p in enumerate(donor.pk)}
+    encoded, real_encode = [], qz.encode
+
+    def spy(vecs, codebooks):
+        encoded.append(len(vecs))
+        return real_encode(vecs, codebooks)
+
+    monkeypatch.setattr(qz, "encode", spy)
+    _fill(store, rng, 150, pk_start=300, batch=150)   # trips the fanout
+    merged = [s for s in store.segments if s.level >= 1]
+    assert len(merged) == 1 and merged[0].n_rows == 450
+    qc = merged[0].quantized["embedding"]
+    # the donated book survives the whole level drop: same identity,
+    # bitwise-equal codebooks
+    assert qc.book_id == book_id
+    np.testing.assert_array_equal(qc.codebooks, books)
+    # donor-part codes rode through the compaction row maps verbatim
+    pk_row = {int(p): i for i, p in enumerate(merged[0].pk)}
+    for p, c in donor_codes.items():
+        np.testing.assert_array_equal(qc.codes[pk_row[p]], c)
+    # the encoder ran for the new flush (150 rows) plus the foreign-book
+    # part (150 rows) only — donor-book rows were copied, not re-encoded
+    assert sum(encoded) == 300
+    # and the result is still the faithful nearest-codeword encoding
+    np.testing.assert_array_equal(
+        qc.codes, real_encode(
+            np.asarray(merged[0].columns["embedding"], np.float32), books))
