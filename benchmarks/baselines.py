@@ -16,14 +16,12 @@ are reproduced inside our engine; EXPERIMENTS.md maps each to its system).
 """
 from __future__ import annotations
 
-import time
-from typing import Dict, List, Tuple
 
 import numpy as np
 
 from repro.core import query as q
 from repro.core.executor import Executor
-from repro.core.index.ivf import IVFIndex, kmeans
+from repro.core.index.ivf import kmeans
 from repro.core.lsm import LSMStore
 from repro.core.optimizer import planner as pl
 from repro.kernels import ops as kops

@@ -9,7 +9,6 @@ from __future__ import annotations
 import time
 from typing import Dict, List
 
-import numpy as np
 
 from benchmarks import tracy
 from repro.core import query as q

@@ -14,7 +14,6 @@ from __future__ import annotations
 import time
 from typing import List
 
-import numpy as np
 
 from benchmarks import tracy
 from repro.core import query as q

@@ -6,7 +6,7 @@ text, plus the paper's 11 parameterized hybrid query templates.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, List, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 

@@ -1,0 +1,8 @@
+"""repro.analysis — repo-native static checker for the parity,
+concurrency, kernel-contract and plan invariants the parity guarantees
+rest on.  CLI: ``python -m repro.analysis``; runtime plan validation:
+``repro.analysis.plan_validator.validate_plan``.
+"""
+from repro.analysis.findings import Finding  # noqa: F401
+from repro.analysis.model import RepoModel  # noqa: F401
+from repro.analysis.registry import all_rules, run_rules  # noqa: F401

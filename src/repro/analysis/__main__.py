@@ -1,0 +1,86 @@
+"""CLI for the repo-native static checker.
+
+Usage::
+
+    python -m repro.analysis                      # human output, exit 1
+    python -m repro.analysis --format=json        # machine-readable
+    python -m repro.analysis --write-baseline     # accept current findings
+    python -m repro.analysis --rules parity/raw-score-sort,locks/...
+
+Exit code 0 when every finding is baselined (or none exist), 1
+otherwise.  The baseline lives at ``<root>/analysis_baseline.json``;
+prefer inline ``# analysis: allow[rule-id] reason`` comments for sites
+that are intentional forever.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis.findings import (load_baseline, render_text,
+                                     save_baseline, split_baselined)
+from repro.analysis.model import RepoModel
+from repro.analysis.registry import all_rules, run_rules
+
+BASELINE_NAME = "analysis_baseline.json"
+
+
+def detect_root() -> Path:
+    cwd = Path.cwd()
+    if (cwd / "src" / "repro").is_dir():
+        return cwd
+    # src/repro/analysis/__main__.py -> repo root is three levels up
+    return Path(__file__).resolve().parents[3]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("--root", type=Path, default=None,
+                    help="repo root (auto-detected by default)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help=f"baseline file (default <root>/{BASELINE_NAME})")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept the current findings into the baseline")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids to run (default: all)")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for r in sorted(all_rules().values(), key=lambda r: r.id):
+            print(f"{r.id:35s} [{r.family}] {r.title}")
+        return 0
+
+    root = (args.root or detect_root()).resolve()
+    baseline_path = args.baseline or (root / BASELINE_NAME)
+    ids = [s.strip() for s in args.rules.split(",")] if args.rules else None
+
+    model = RepoModel(root)
+    findings = run_rules(model, ids)
+
+    if args.write_baseline:
+        save_baseline(baseline_path, findings)
+        print(f"wrote {len(findings)} finding(s) to {baseline_path}")
+        return 0
+
+    baseline = load_baseline(baseline_path)
+    new = split_baselined(findings, baseline)
+
+    if args.format == "json":
+        print(json.dumps({
+            "rules": len(ids) if ids else len(all_rules()),
+            "findings": [f.to_dict() for f in findings],
+            "new": [f.fingerprint for f in new],
+            "baselined": len(findings) - len(new),
+            "exit": 1 if new else 0,
+        }, indent=2))
+    else:
+        sys.stdout.write(render_text(findings, new))
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

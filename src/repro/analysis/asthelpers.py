@@ -1,0 +1,76 @@
+"""Small shared AST utilities for the analysis rules."""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional
+
+LOCK_TOKENS = ("lock", "_cv")
+
+
+def dotted_name(node: ast.AST) -> str:
+    """``np.argsort`` -> "np.argsort"; unknown shapes -> "" (never raises)."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted_name(node.value)
+        return f"{base}.{node.attr}" if base else node.attr
+    if isinstance(node, ast.Call):
+        return dotted_name(node.func)
+    return ""
+
+
+def terminal_idents(node: ast.AST) -> List[str]:
+    """All identifier leaves in an expression: Name ids + Attribute attrs."""
+    out: List[str] = []
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            out.append(n.id)
+        elif isinstance(n, ast.Attribute):
+            out.append(n.attr)
+    return out
+
+
+def under_lock(fm, node: ast.AST,
+               tokens: Iterable[str] = LOCK_TOKENS) -> bool:
+    """True when ``node`` sits lexically inside a ``with`` whose context
+    expression mentions a lock-ish name (``_lock``, ``_cv``, ...)."""
+    for anc in fm.ancestors(node):
+        if isinstance(anc, (ast.With, ast.AsyncWith)):
+            for item in anc.items:
+                src = ast.unparse(item.context_expr).lower()
+                if any(t in src for t in tokens):
+                    return True
+    return False
+
+
+def enclosing_function(fm, node: ast.AST) -> Optional[ast.AST]:
+    for anc in fm.ancestors(node):
+        if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return anc
+    return None
+
+
+def local_assignment(func: ast.AST, name: str) -> Optional[ast.expr]:
+    """The value of a simple ``name = <expr>`` inside ``func`` (the last
+    one wins, matching runtime order for straight-line wrapper code)."""
+    found: Optional[ast.expr] = None
+    for n in ast.walk(func):
+        if isinstance(n, ast.Assign) and len(n.targets) == 1 and \
+                isinstance(n.targets[0], ast.Name) and \
+                n.targets[0].id == name:
+            found = n.value
+    return found
+
+
+def lambda_arity(node: ast.AST) -> Optional[int]:
+    if isinstance(node, ast.Lambda):
+        a = node.args
+        return len(a.posonlyargs) + len(a.args)
+    return None
+
+
+def const_int(node: ast.AST) -> Optional[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) and \
+            not isinstance(node.value, bool):
+        return node.value
+    return None

@@ -1,0 +1,152 @@
+"""Lightweight intra-repo call graph for the lock-discipline rules.
+
+Resolution is name-based (no type inference): ``self.m()`` binds within
+the enclosing class, ``self.store.m()`` / ``store.m()`` bind through a
+caller-supplied receiver->class hint table, module-qualified calls bind
+through per-file import aliases, and bare calls bind within the module.
+That covers the store/scheduler/visibility topology this repo actually
+has; unresolved calls are simply absent edges (the checker stays
+conservative in the direction of fewer false positives).
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.model import FileModel, RepoModel
+
+
+class FuncInfo:
+    def __init__(self, qual: str, fm: FileModel, node: ast.AST,
+                 cls: Optional[str]):
+        self.qual = qual
+        self.fm = fm
+        self.node = node
+        self.cls = cls
+
+
+class CallGraph:
+    def __init__(self, model: RepoModel,
+                 recv_hints: Optional[Dict[str, str]] = None):
+        self.model = model
+        self.recv_hints = dict(recv_hints or {})
+        self.funcs: Dict[str, FuncInfo] = {}
+        self.methods: Dict[Tuple[str, str], str] = {}   # (class, meth)->qual
+        self.mod_funcs: Dict[Tuple[str, str], str] = {}  # (module, fn)->qual
+        self.edges: Dict[str, Set[str]] = {}
+        self._index()
+        self._link()
+
+    # ------------------------------------------------------------- index
+    def _index(self) -> None:
+        for fm in self.model.files:
+            if fm.tree is None:
+                continue
+            mod = fm.module_name
+            for node in fm.tree.body:
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    qual = f"{mod}::{node.name}"
+                    self.funcs[qual] = FuncInfo(qual, fm, node, None)
+                    self.mod_funcs[(mod, node.name)] = qual
+                elif isinstance(node, ast.ClassDef):
+                    for item in node.body:
+                        if isinstance(item, (ast.FunctionDef,
+                                             ast.AsyncFunctionDef)):
+                            qual = f"{mod}::{node.name}.{item.name}"
+                            self.funcs[qual] = FuncInfo(qual, fm, item,
+                                                        node.name)
+                            self.methods[(node.name, item.name)] = qual
+
+    @staticmethod
+    def _import_aliases(fm: FileModel) -> Dict[str, str]:
+        """local alias -> module basename (``vis_lib`` -> ``visibility``)."""
+        out: Dict[str, str] = {}
+        for node in ast.walk(fm.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    out[a.asname or a.name.split(".")[0]] = \
+                        a.name.split(".")[-1]
+            elif isinstance(node, ast.ImportFrom):
+                for a in node.names:
+                    out[a.asname or a.name] = a.name
+        return out
+
+    def _resolve_call(self, call: ast.Call, mod: str,
+                      cls: Optional[str], aliases: Dict[str, str]
+                      ) -> Optional[str]:
+        f = call.func
+        if isinstance(f, ast.Name):
+            q = self.mod_funcs.get((mod, f.id))
+            if q is not None:
+                return q
+            target_mod = aliases.get(f.id)
+            if target_mod is not None:          # from mod import fn
+                for (m, fn), q in self.mod_funcs.items():
+                    if fn == f.id and m == target_mod:
+                        return q
+            return None
+        if not isinstance(f, ast.Attribute):
+            return None
+        meth, recv = f.attr, f.value
+        if isinstance(recv, ast.Name):
+            if recv.id == "self" and cls is not None:
+                q = self.methods.get((cls, meth))
+                if q is not None:
+                    return q
+            hint = self.recv_hints.get(recv.id)
+            if hint is not None:
+                return self.methods.get((hint, meth))
+            target_mod = aliases.get(recv.id)
+            if target_mod is not None:
+                return self.mod_funcs.get((target_mod, meth))
+        elif isinstance(recv, ast.Attribute) and \
+                isinstance(recv.value, ast.Name) and recv.value.id == "self":
+            hint = self.recv_hints.get(recv.attr)
+            if hint is not None:
+                return self.methods.get((hint, meth))
+        return None
+
+    def _link(self) -> None:
+        for qual, info in self.funcs.items():
+            mod = info.fm.module_name
+            aliases = self._import_aliases(info.fm)
+            targets: Set[str] = set()
+            for node in ast.walk(info.node):
+                if isinstance(node, ast.Call):
+                    t = self._resolve_call(node, mod, info.cls, aliases)
+                    if t is not None and t != qual:
+                        targets.add(t)
+            self.edges[qual] = targets
+
+    # --------------------------------------------------------- reachable
+    def reachable(self, roots: List[str]) -> Set[str]:
+        seen: Set[str] = set()
+        stack = [r for r in roots if r in self.funcs]
+        while stack:
+            cur = stack.pop()
+            if cur in seen:
+                continue
+            seen.add(cur)
+            stack.extend(self.edges.get(cur, ()))
+        return seen
+
+    def path_hint(self, root: str, target: str) -> str:
+        """Short ``root -> ... -> target`` chain for finding messages."""
+        prev: Dict[str, str] = {}
+        stack = [root]
+        seen = {root}
+        while stack:
+            cur = stack.pop()
+            if cur == target:
+                chain = [target]
+                while chain[-1] != root:
+                    chain.append(prev[chain[-1]])
+                names = [c.split("::")[-1] for c in reversed(chain)]
+                return " -> ".join(names)
+            for nxt in self.edges.get(cur, ()):
+                if nxt not in seen:
+                    seen.add(nxt)
+                    prev[nxt] = cur
+                    stack.append(nxt)
+        return Path(target).name

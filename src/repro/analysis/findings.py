@@ -1,0 +1,90 @@
+"""Finding model + baseline-file handling for ``repro.analysis``.
+
+A finding is one rule violation anchored to a file/line.  Fingerprints
+are content-addressed (rule, path, source line text, occurrence index)
+rather than line-number-addressed so a baseline survives unrelated edits
+above the flagged line.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str            # e.g. "parity/raw-score-sort"
+    family: str          # parity | locks | kernel | plan
+    path: str            # repo-relative posix path
+    line: int            # 1-based
+    message: str
+    snippet: str = ""    # stripped source line (fingerprint anchor)
+    fingerprint: str = ""
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def fingerprint_findings(findings: List[Finding]) -> None:
+    """Assign stable fingerprints in place.  Identical (rule, path,
+    snippet) triples are disambiguated by occurrence order."""
+    seen: Dict[str, int] = {}
+    for f in sorted(findings, key=lambda f: (f.path, f.line, f.rule)):
+        base = f"{f.rule}|{f.path}|{f.snippet}"
+        idx = seen.get(base, 0)
+        seen[base] = idx + 1
+        h = hashlib.sha1(f"{base}|{idx}".encode()).hexdigest()[:16]
+        f.fingerprint = h
+
+
+def load_baseline(path: Path) -> Dict[str, Dict]:
+    """fingerprint -> entry dict.  Missing file = empty baseline."""
+    if not path.is_file():
+        return {}
+    data = json.loads(path.read_text())
+    return {e["fingerprint"]: e for e in data.get("findings", [])}
+
+
+def save_baseline(path: Path, findings: List[Finding]) -> None:
+    data = {
+        "version": 1,
+        "comment": ("Accepted findings. Regenerate with "
+                    "`python -m repro.analysis --write-baseline`; prefer "
+                    "inline `# analysis: allow[rule-id] reason` comments "
+                    "for sites that are intentional forever."),
+        "findings": [
+            {"fingerprint": f.fingerprint, "rule": f.rule, "path": f.path,
+             "snippet": f.snippet}
+            for f in sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+        ],
+    }
+    path.write_text(json.dumps(data, indent=2) + "\n")
+
+
+def split_baselined(findings: List[Finding], baseline: Dict[str, Dict]
+                    ) -> List[Finding]:
+    """Findings not covered by the baseline."""
+    return [f for f in findings if f.fingerprint not in baseline]
+
+
+def render_text(findings: List[Finding], new: Optional[List[Finding]] = None
+                ) -> str:
+    """Human diff-style rendering: one line per finding, grouped by file."""
+    if not findings:
+        return "repro.analysis: clean (0 findings)\n"
+    new_fps = {f.fingerprint for f in (new if new is not None else findings)}
+    out, last = [], None
+    for f in sorted(findings, key=lambda f: (f.path, f.line, f.rule)):
+        if f.path != last:
+            out.append(f"--- {f.path}")
+            last = f.path
+        mark = "+" if f.fingerprint in new_fps else " "
+        out.append(f"{mark} {f.path}:{f.line}: [{f.rule}] {f.message}")
+        if f.snippet:
+            out.append(f"      | {f.snippet}")
+    n_new = len(new) if new is not None else len(findings)
+    out.append(f"{len(findings)} finding(s), {n_new} not in baseline")
+    return "\n".join(out) + "\n"

@@ -1,0 +1,117 @@
+"""Repo model for ``repro.analysis``: parsed ASTs + source for every
+Python file under the analysis roots, plus the CI workflow text.
+
+The model is path-based, not import-based — nothing under analysis is
+ever imported, so rules run identically on the real tree and on the
+known-bad fixture corpora in ``tests/fixtures/analysis/``.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional
+
+SKIP_DIRS = {".git", "__pycache__", ".venv", "node_modules", "build"}
+
+_ALLOW_RE = re.compile(r"#\s*analysis:\s*allow\[([^\]]+)\]")
+
+
+class FileModel:
+    def __init__(self, path: Path, rel: str):
+        self.path = path
+        self.rel = rel
+        self.source = path.read_text()
+        self.lines = self.source.splitlines()
+        self.parse_error: Optional[str] = None
+        try:
+            self.tree: Optional[ast.Module] = ast.parse(self.source)
+        except SyntaxError as e:  # surfaced as a finding by the engine
+            self.tree = None
+            self.parse_error = str(e)
+        self._parents: Optional[Dict[ast.AST, ast.AST]] = None
+
+    @property
+    def module_name(self) -> str:
+        return Path(self.rel).stem
+
+    def line_text(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+    def allowed_rules(self, line: int) -> List[str]:
+        """Inline suppressions: ``# analysis: allow[rule-id] reason`` on
+        the flagged line or in the contiguous comment block above it
+        (multi-line justifications stay suppressions)."""
+        out: List[str] = []
+        if 1 <= line <= len(self.lines):
+            for m in _ALLOW_RE.finditer(self.lines[line - 1]):
+                out.extend(p.strip() for p in m.group(1).split(","))
+        ln = line - 1
+        while 1 <= ln <= len(self.lines) and \
+                self.lines[ln - 1].lstrip().startswith("#"):
+            for m in _ALLOW_RE.finditer(self.lines[ln - 1]):
+                out.extend(p.strip() for p in m.group(1).split(","))
+            ln -= 1
+        return out
+
+    def parents(self) -> Dict[ast.AST, ast.AST]:
+        if self._parents is None:
+            p: Dict[ast.AST, ast.AST] = {}
+            for node in ast.walk(self.tree) if self.tree else ():
+                for child in ast.iter_child_nodes(node):
+                    p[child] = node
+            self._parents = p
+        return self._parents
+
+    def ancestors(self, node: ast.AST) -> Iterable[ast.AST]:
+        p = self.parents()
+        cur = p.get(node)
+        while cur is not None:
+            yield cur
+            cur = p.get(cur)
+
+
+class RepoModel:
+    """All Python files under ``root`` (skipping tests/benchmarks for the
+    real tree: rules govern library code) plus CI workflow text."""
+
+    def __init__(self, root: Path):
+        self.root = Path(root).resolve()
+        self.files: List[FileModel] = []
+        self.workflows: Dict[str, str] = {}
+        self._load()
+
+    def _load(self) -> None:
+        src = self.root / "src"
+        scan_root = src if src.is_dir() else self.root
+        for path in sorted(scan_root.rglob("*.py")):
+            if any(part in SKIP_DIRS for part in path.parts):
+                continue
+            rel = path.relative_to(self.root).as_posix()
+            self.files.append(FileModel(path, rel))
+        wf_dir = self.root / ".github" / "workflows"
+        if wf_dir.is_dir():
+            for wf in sorted(wf_dir.glob("*.yml")):
+                self.workflows[wf.name] = wf.read_text()
+        # test sources referenced by CI sweeps (coverage checks only)
+        self.test_sources: Dict[str, str] = {}
+        tdir = self.root / "tests"
+        if tdir.is_dir():
+            for t in sorted(tdir.glob("test_*.py")):
+                self.test_sources["tests/" + t.name] = t.read_text()
+
+    def in_scope(self, fm: FileModel, *dirnames: str) -> bool:
+        parts = Path(fm.rel).parts
+        return any(d in parts for d in dirnames)
+
+    def scoped(self, *dirnames: str) -> List[FileModel]:
+        return [f for f in self.files
+                if f.tree is not None and self.in_scope(f, *dirnames)]
+
+    def by_module(self, name: str) -> Optional[FileModel]:
+        for f in self.files:
+            if f.module_name == name and f.tree is not None:
+                return f
+        return None

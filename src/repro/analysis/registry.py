@@ -1,0 +1,77 @@
+"""Rule registry + engine for ``repro.analysis``.
+
+Rules are plain functions ``fn(model) -> List[Finding]`` registered with
+the ``@rule`` decorator.  The engine fills in family/snippet/fingerprint,
+applies inline ``# analysis: allow[rule-id]`` suppressions, and reports
+syntax errors as findings instead of crashing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+from repro.analysis.findings import Finding, fingerprint_findings
+from repro.analysis.model import FileModel, RepoModel
+
+RuleFn = Callable[[RepoModel], List[Finding]]
+
+
+@dataclasses.dataclass
+class Rule:
+    id: str
+    family: str
+    title: str
+    fn: RuleFn
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def rule(id: str, family: str, title: str) -> Callable[[RuleFn], RuleFn]:
+    def deco(fn: RuleFn) -> RuleFn:
+        if id in RULES:
+            raise ValueError(f"duplicate rule id {id}")
+        RULES[id] = Rule(id, family, title, fn)
+        return fn
+    return deco
+
+
+def finding(rule_id: str, fm: FileModel, line: int, message: str) -> Finding:
+    return Finding(rule=rule_id, family=RULES[rule_id].family, path=fm.rel,
+                   line=line, message=message, snippet=fm.line_text(line))
+
+
+def _load_rules() -> None:
+    # importing the rule modules populates RULES via the decorator
+    from repro.analysis.rules import kernels, locks, parity, plans  # noqa: F401
+
+
+def run_rules(model: RepoModel, ids: Optional[List[str]] = None
+              ) -> List[Finding]:
+    _load_rules()
+    selected = [RULES[i] for i in ids] if ids else list(RULES.values())
+    out: List[Finding] = []
+    for fm in model.files:
+        if fm.parse_error is not None:
+            out.append(Finding(rule="engine/syntax-error", family="engine",
+                               path=fm.rel, line=1, message=fm.parse_error))
+    for r in selected:
+        out.extend(r.fn(model))
+    # inline suppressions
+    by_rel = {fm.rel: fm for fm in model.files}
+    kept: List[Finding] = []
+    for f in out:
+        fm = by_rel.get(f.path)
+        if fm is not None:
+            allows = fm.allowed_rules(f.line)
+            if f.rule in allows or "*" in allows:
+                continue
+        kept.append(f)
+    fingerprint_findings(kept)
+    kept.sort(key=lambda f: (f.path, f.line, f.rule))
+    return kept
+
+
+def all_rules() -> Dict[str, Rule]:
+    _load_rules()
+    return dict(RULES)

@@ -1,0 +1,237 @@
+"""Kernel-contract rules (family: kernel).
+
+The seven ``pl.pallas_call`` sites share one tile vocabulary (BLOCK_Q=8,
+BLOCK_N=512, KMAX=128, int32 sentinel for the pk tie-break range).
+These rules verify the constants agree across kernel modules, every
+BlockSpec index map matches the grid rank, operand/spec/out_shape counts
+line up, and tiled wrappers guard divisibility with asserts.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.asthelpers import (const_int, dotted_name,
+                                       enclosing_function, lambda_arity,
+                                       local_assignment)
+from repro.analysis.findings import Finding
+from repro.analysis.model import FileModel, RepoModel
+from repro.analysis.registry import finding, rule
+
+TILE_CONSTANTS = ("BLOCK_Q", "BLOCK_N", "KMAX")
+EXPECTED = {"BLOCK_Q": 8, "BLOCK_N": 512, "KMAX": 128}
+
+
+def _module_consts(fm: FileModel) -> Dict[str, Tuple[int, Optional[int]]]:
+    """name -> (lineno, int value or None for non-literal)."""
+    out: Dict[str, Tuple[int, Optional[int]]] = {}
+    for node in fm.tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.targets[0], ast.Name):
+            name = node.targets[0].id
+            if name in TILE_CONSTANTS or name == "SENTINEL":
+                out[name] = (node.lineno, const_int(node.value))
+    return out
+
+
+def _imported_consts(fm: FileModel) -> Dict[str, str]:
+    """tile-constant name -> source module, for ``from X import BLOCK_N``."""
+    out: Dict[str, str] = {}
+    for node in ast.walk(fm.tree):
+        if isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                if a.name in TILE_CONSTANTS or a.name == "SENTINEL":
+                    out[a.asname or a.name] = node.module.split(".")[-1]
+    return out
+
+
+@rule("kernel/tile-constants", "kernel",
+      "tile/grid constants must agree across kernel modules")
+def tile_constants(model: RepoModel) -> List[Finding]:
+    out: List[Finding] = []
+    kfiles = [f for f in model.scoped("kernels") if f.module_name != "ops"]
+    canon_fm = next((f for f in kfiles if "KMAX" in _module_consts(f)), None)
+    if canon_fm is None:
+        return out
+    canon = _module_consts(canon_fm)
+    for name, want in EXPECTED.items():
+        ln, val = canon.get(name, (1, None))
+        if val is not None and val != want:
+            out.append(finding(
+                "kernel/tile-constants", canon_fm, ln,
+                f"{name}={val} in the canonical kernel module, contract "
+                f"expects {want}"))
+    sent = canon.get("SENTINEL")
+    if sent is None or "int32" not in canon_fm.line_text(sent[0]):
+        out.append(finding(
+            "kernel/tile-constants", canon_fm,
+            sent[0] if sent else 1,
+            "SENTINEL must be the int32 max (pk tie-break range is "
+            "int32; larger pks overflow the packed id columns)"))
+    for fm in kfiles:
+        if fm is canon_fm:
+            continue
+        consts = _module_consts(fm)
+        imports = _imported_consts(fm)
+        for name in TILE_CONSTANTS:
+            if name in consts and name in imports:
+                out.append(finding(
+                    "kernel/tile-constants", fm, consts[name][0],
+                    f"{name} both imported from {imports[name]} and "
+                    f"redefined locally — single-source it"))
+            elif name in consts:
+                ln, val = consts[name]
+                canon_val = canon.get(name, (0, None))[1]
+                if val is not None and canon_val is not None and \
+                        val != canon_val:
+                    out.append(finding(
+                        "kernel/tile-constants", fm, ln,
+                        f"{name}={val} disagrees with the canonical "
+                        f"{canon_fm.module_name}.{name}={canon_val} — "
+                        f"import it or document why the tile differs"))
+    return out
+
+
+def _spec_list(node: Optional[ast.AST], func: Optional[ast.AST]
+               ) -> Optional[List[ast.AST]]:
+    """Normalize in_specs/out_specs/out_shape to a list of elements,
+    resolving a local ``name = [...]`` one step."""
+    if node is None:
+        return None
+    if isinstance(node, ast.Name) and func is not None:
+        node = local_assignment(func, node.id) or node
+    if isinstance(node, (ast.List, ast.Tuple)):
+        return list(node.elts)
+    return [node]
+
+
+def _grid_rank(node: Optional[ast.AST], func: Optional[ast.AST]
+               ) -> Optional[int]:
+    if node is None:
+        return None
+    if isinstance(node, ast.Name) and func is not None:
+        node = local_assignment(func, node.id) or node
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return len(node.elts)
+    return None
+
+
+def _blockspec_parts(node: ast.AST
+                     ) -> Tuple[Optional[int], Optional[int]]:
+    """(block rank, index-map lambda arity) for a BlockSpec call."""
+    if not isinstance(node, ast.Call) or \
+            dotted_name(node.func).split(".")[-1] != "BlockSpec":
+        return None, None
+    rank = None
+    if node.args and isinstance(node.args[0], (ast.Tuple, ast.List)):
+        rank = len(node.args[0].elts)
+    arity = lambda_arity(node.args[1]) if len(node.args) > 1 else None
+    return rank, arity
+
+
+def _shape_rank(node: ast.AST) -> Optional[int]:
+    if isinstance(node, ast.Call) and node.args and \
+            isinstance(node.args[0], (ast.Tuple, ast.List)):
+        return len(node.args[0].elts)
+    return None
+
+
+@rule("kernel/pallas-call-contract", "kernel",
+      "pallas_call specs must match grid rank, operands and out_shapes")
+def pallas_call_contract(model: RepoModel) -> List[Finding]:
+    out: List[Finding] = []
+    for fm in model.scoped("kernels"):
+        parents = fm.parents()
+        for node in ast.walk(fm.tree):
+            if not (isinstance(node, ast.Call) and
+                    dotted_name(node.func).endswith("pallas_call")):
+                continue
+            func = enclosing_function(fm, node)
+            kw = {k.arg: k.value for k in node.keywords}
+            rank = _grid_rank(kw.get("grid"), func)
+            in_specs = _spec_list(kw.get("in_specs"), func)
+            out_specs = _spec_list(kw.get("out_specs"), func)
+            out_shape = _spec_list(kw.get("out_shape"), func)
+            ln = node.lineno
+            if rank is not None:
+                for spec in (in_specs or []) + (out_specs or []):
+                    srank, arity = _blockspec_parts(spec)
+                    if arity is not None and arity != rank:
+                        out.append(finding(
+                            "kernel/pallas-call-contract", fm, spec.lineno,
+                            f"BlockSpec index map takes {arity} args but "
+                            f"the grid has rank {rank}"))
+                    if srank is not None and arity is not None and \
+                            srank < 1:
+                        out.append(finding(
+                            "kernel/pallas-call-contract", fm, spec.lineno,
+                            "empty BlockSpec block shape"))
+            if out_specs is not None and out_shape is not None and \
+                    len(out_specs) != len(out_shape):
+                out.append(finding(
+                    "kernel/pallas-call-contract", fm, ln,
+                    f"{len(out_specs)} out_specs vs {len(out_shape)} "
+                    f"out_shape entries"))
+            if out_specs is not None and out_shape is not None:
+                for spec, shp in zip(out_specs, out_shape):
+                    srank, _ = _blockspec_parts(spec)
+                    orank = _shape_rank(shp)
+                    if srank is not None and orank is not None and \
+                            srank != orank:
+                        out.append(finding(
+                            "kernel/pallas-call-contract", fm, spec.lineno,
+                            f"out BlockSpec rank {srank} != out_shape "
+                            f"rank {orank}"))
+            parent = parents.get(node)
+            if in_specs is not None and isinstance(parent, ast.Call) and \
+                    parent.func is node:
+                n_ops = len(parent.args)
+                if n_ops != len(in_specs):
+                    out.append(finding(
+                        "kernel/pallas-call-contract", fm, ln,
+                        f"{n_ops} operands passed but {len(in_specs)} "
+                        f"in_specs declared"))
+    return out
+
+
+@rule("kernel/grid-divisibility-guard", "kernel",
+      "tiled wrappers must assert operand divisibility by the tile")
+def grid_divisibility_guard(model: RepoModel) -> List[Finding]:
+    out: List[Finding] = []
+    for fm in model.scoped("kernels"):
+        for node in ast.walk(fm.tree):
+            if not (isinstance(node, ast.Call) and
+                    dotted_name(node.func).endswith("pallas_call")):
+                continue
+            func = enclosing_function(fm, node)
+            if func is None:
+                continue
+            kw = {k.arg: k.value for k in node.keywords}
+            grid = kw.get("grid")
+            if isinstance(grid, ast.Name):
+                grid = local_assignment(func, grid.id)
+            if grid is None:
+                continue
+            divisors = []
+            for n in ast.walk(grid):
+                if isinstance(n, ast.BinOp) and \
+                        isinstance(n.op, ast.FloorDiv):
+                    divisors.extend(x.id for x in ast.walk(n.right)
+                                    if isinstance(x, ast.Name))
+            guarded = set()
+            for n in ast.walk(func):
+                if isinstance(n, ast.Assert):
+                    for b in ast.walk(n.test):
+                        if isinstance(b, ast.BinOp) and \
+                                isinstance(b.op, ast.Mod):
+                            guarded.update(
+                                x.id for x in ast.walk(b.right)
+                                if isinstance(x, ast.Name))
+            for d in divisors:
+                if d not in guarded:
+                    out.append(finding(
+                        "kernel/grid-divisibility-guard", fm, node.lineno,
+                        f"grid divides by {d} but the wrapper never "
+                        f"asserts the operand is a multiple of {d} — "
+                        f"ragged tails silently truncate"))
+    return out

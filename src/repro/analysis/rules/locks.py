@@ -1,0 +1,175 @@
+"""Lock-discipline rules (family: locks).
+
+Background mode (``pipeline=True, background=True``) runs flushes and
+compactions on a daemon worker thread while the writer keeps ingesting
+and query threads keep reading.  Everything the worker publishes —
+segment lists, metrics, the global index, the visibility cache, PQ
+codebooks — must happen under the store lock, and module-level caches
+shared across threads must be guarded.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.asthelpers import dotted_name, under_lock
+from repro.analysis.callgraph import CallGraph
+from repro.analysis.findings import Finding
+from repro.analysis.model import RepoModel
+from repro.analysis.registry import finding, rule
+
+# store-level shared mutable state the flush worker may publish
+STORE_FIELDS = {
+    "segments", "sealed", "memtable", "metrics", "global_index",
+    "_mt_cache", "_mt_epoch", "_vis_cache", "_pq_books", "unique_pks",
+    "_seen_max_pk", "_seqno",
+}
+MUTATORS = {"append", "pop", "clear", "extend", "insert", "remove",
+            "update", "setdefault", "popitem", "move_to_end", "add",
+            "discard"}
+GLOBAL_INDEX_MUTATORS = {"on_new_segment", "on_drop_segment",
+                         "add_segment", "drop_segment"}
+# module functions that mutate store state through their first argument
+WRITE_FUNCS = {"extend_cache_on_flush": "_vis_cache"}
+
+RECV_HINTS = {"store": "LSMStore", "scheduler": "FlushScheduler"}
+
+
+def _store_field(node: ast.AST, cls: Optional[str]) -> Optional[str]:
+    """Monitored field name when ``node`` is ``<store-like>.<field>``."""
+    if not isinstance(node, ast.Attribute) or node.attr not in STORE_FIELDS:
+        return None
+    recv = node.value
+    if isinstance(recv, ast.Name):
+        if recv.id == "self" and cls == "LSMStore":
+            return node.attr
+        if recv.id == "store":
+            return node.attr
+    if isinstance(recv, ast.Attribute) and recv.attr == "store" and \
+            isinstance(recv.value, ast.Name) and recv.value.id == "self":
+        return node.attr
+    return None
+
+
+def _writes_in(fn_node: ast.AST, cls: Optional[str]
+               ) -> List[Tuple[ast.AST, str]]:
+    out: List[Tuple[ast.AST, str]] = []
+    for n in ast.walk(fn_node):
+        if isinstance(n, (ast.Assign, ast.AugAssign)):
+            targets = n.targets if isinstance(n, ast.Assign) else [n.target]
+            for t in targets:
+                base = t.value if isinstance(t, ast.Subscript) else t
+                field = _store_field(base, cls)
+                if field is not None:
+                    out.append((n, field))
+        elif isinstance(n, ast.Call):
+            f = n.func
+            if isinstance(f, ast.Attribute):
+                field = _store_field(f.value, cls)
+                if field is not None and (
+                        f.attr in MUTATORS or
+                        (field == "global_index" and
+                         f.attr in GLOBAL_INDEX_MUTATORS)):
+                    out.append((n, field))
+            leaf = dotted_name(f).split(".")[-1]
+            if leaf in WRITE_FUNCS:
+                out.append((n, WRITE_FUNCS[leaf]))
+    return out
+
+
+@rule("locks/worker-unlocked-write", "locks",
+      "flush-worker-reachable store mutations must hold the store lock")
+def worker_unlocked_write(model: RepoModel) -> List[Finding]:
+    out: List[Finding] = []
+    cg = CallGraph(model, recv_hints=RECV_HINTS)
+    root = next((q for q in cg.funcs
+                 if q.endswith("::FlushScheduler._run_worker")), None)
+    if root is None:
+        return out
+    # which shared state the query side reaches (context for messages)
+    query_roots = [q for q in cg.funcs
+                   if q.endswith("::Executor.execute_many") or
+                   q.endswith("::nra_topk") or
+                   q.endswith("::run_scan_group") or
+                   q.endswith("::visibility_index")]
+    query_reach = cg.reachable(query_roots)
+    query_fields: Set[str] = set()
+    for qual in query_reach:
+        info = cg.funcs[qual]
+        for n in ast.walk(info.node):
+            field = _store_field(n, info.cls)
+            if field is not None:
+                query_fields.add(field)
+    for qual in sorted(cg.reachable([root])):
+        info = cg.funcs[qual]
+        for node, field in _writes_in(info.node, info.cls):
+            if under_lock(info.fm, node):
+                continue
+            shared = " (also reached by query threads)" \
+                if field in query_fields else ""
+            out.append(finding(
+                "locks/worker-unlocked-write", info.fm, node.lineno,
+                f"write to store.{field} outside the store lock, "
+                f"reachable from the flush worker via "
+                f"{cg.path_hint(root, qual)}{shared}"))
+    return out
+
+
+_CONTAINER_CTORS = {"dict", "set", "list", "OrderedDict", "defaultdict",
+                    "Counter", "deque"}
+
+
+def _module_containers(fm) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for node in fm.tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            t, v = node.targets[0], node.value
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            t, v = node.target, node.value
+        else:
+            continue
+        if not isinstance(t, ast.Name):
+            continue
+        is_container = isinstance(v, (ast.Dict, ast.Set, ast.List)) or (
+            isinstance(v, ast.Call) and
+            dotted_name(v.func).split(".")[-1] in _CONTAINER_CTORS)
+        if is_container:
+            out[t.id] = node.lineno
+    return out
+
+
+@rule("locks/global-mutable-cache", "locks",
+      "module-level caches shared across threads must be lock-guarded")
+def global_mutable_cache(model: RepoModel) -> List[Finding]:
+    out: List[Finding] = []
+    for fm in model.scoped("core", "kernels"):
+        containers = _module_containers(fm)
+        if not containers:
+            continue
+        for fn in ast.walk(fm.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for n in ast.walk(fn):
+                name = None
+                if isinstance(n, (ast.Assign, ast.AugAssign)):
+                    targets = n.targets if isinstance(n, ast.Assign) \
+                        else [n.target]
+                    for t in targets:
+                        if isinstance(t, ast.Subscript) and \
+                                isinstance(t.value, ast.Name) and \
+                                t.value.id in containers:
+                            name = t.value.id
+                elif isinstance(n, ast.Call) and \
+                        isinstance(n.func, ast.Attribute) and \
+                        isinstance(n.func.value, ast.Name) and \
+                        n.func.value.id in containers and \
+                        n.func.attr in MUTATORS:
+                    name = n.func.value.id
+                if name is None or under_lock(fm, n):
+                    continue
+                out.append(finding(
+                    "locks/global-mutable-cache", fm, n.lineno,
+                    f"module-level container `{name}` mutated without a "
+                    f"lock — query and flush threads share it "
+                    f"(cross-thread LRU/memo corruption)"))
+    return out

@@ -1,0 +1,237 @@
+"""Parity-contract rules (family: parity).
+
+The bitwise-parity guarantees built in PRs 1-6 hang on conventions:
+result ordering via the shared ``(score, pk)`` lexicographic comparator,
+distance admission in squared form, and a pure-jnp oracle twin in
+``kernels/ref.py`` for every Pallas kernel, exercised by the CI
+interpret-mode sweep.  These rules make the conventions machine-checked.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional
+
+from repro.analysis.asthelpers import dotted_name, terminal_idents
+from repro.analysis.findings import Finding
+from repro.analysis.model import RepoModel
+from repro.analysis.registry import finding, rule
+
+# identifiers that carry ranking scores / distances in this codebase
+SCORE_RE = re.compile(
+    r"^(d|d2|dd|dist|dists|distances|d_exact|flat_d|score|scores|ubs|lbs|"
+    r"adc|adc_d)$")
+
+SORT_FUNCS = ("argsort",)          # np.argsort / jnp.argsort / x.argsort
+PLAIN_SORTS = ("np.sort", "jnp.sort", "numpy.sort")
+
+
+def _scoreish(expr: ast.AST) -> bool:
+    return any(SCORE_RE.match(t) for t in terminal_idents(expr))
+
+
+@rule("parity/raw-score-sort", "parity",
+      "rank ordering must go through the (score, pk) comparator")
+def raw_score_sort(model: RepoModel) -> List[Finding]:
+    out: List[Finding] = []
+    msg = ("raw sort on a score/distance array — rank ordering must "
+           "tie-break by pk (np.lexsort((pk, score)) or an explicit "
+           "(score, pk) key)")
+    for fm in model.scoped("core", "kernels"):
+        for node in ast.walk(fm.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            leaf = name.split(".")[-1]
+            key_expr: Optional[ast.AST] = None
+            if leaf in SORT_FUNCS and node.args:
+                key_expr = node.args[0]
+            elif (name in PLAIN_SORTS or leaf == "sorted") and node.args:
+                key_expr = node.args[0]
+            elif leaf == "sort" and isinstance(node.func, ast.Attribute) \
+                    and name not in PLAIN_SORTS:
+                key_expr = node.func.value      # list.sort()
+            if key_expr is None:
+                continue
+            # an explicit key= mentioning pk is the sanctioned comparator
+            key_kw = next((kw.value for kw in node.keywords
+                           if kw.arg == "key"), None)
+            idents = terminal_idents(key_kw) if key_kw is not None else []
+            if "pk" in idents or "pks" in idents:
+                continue
+            if key_kw is not None:
+                key_expr = key_kw
+            if _scoreish(key_expr):
+                out.append(finding("parity/raw-score-sort", fm,
+                                   node.lineno, msg))
+    return out
+
+
+_SQRT_FUNCS = ("np.sqrt", "jnp.sqrt", "numpy.sqrt")
+_ORDER_OPS = (ast.Lt, ast.LtE, ast.Gt, ast.GtE)
+
+
+def _is_sqrt_call(node: ast.AST) -> bool:
+    return isinstance(node, ast.Call) and dotted_name(node.func) in _SQRT_FUNCS
+
+
+def _sqrt_hits(expr: ast.AST, sqrt_names: Dict[str, int],
+               before_line: int) -> bool:
+    """Does ``expr`` use a sqrt-derived *value* (not its len/shape)?"""
+    stack = [expr]
+    while stack:
+        c = stack.pop()
+        if isinstance(c, ast.Call):
+            if _is_sqrt_call(c):
+                return True
+            name = dotted_name(c.func)
+            if name == "len" or name.endswith(".shape"):
+                continue                    # size of the array, not values
+        if isinstance(c, ast.Name) and \
+                sqrt_names.get(c.id, 10**9) < before_line:
+            return True
+        stack.extend(ast.iter_child_nodes(c))
+    return False
+
+
+@rule("parity/sqrt-compare", "parity",
+      "distance admission must compare in squared form")
+def sqrt_compare(model: RepoModel) -> List[Finding]:
+    out: List[Finding] = []
+    msg = ("sqrt-derived value feeds an ordering comparison — compare "
+           "squared distances against a squared threshold instead (PR 4 "
+           "contract; sqrt is monotone, the full-array pass is wasted)")
+    for fm in model.scoped("core", "kernels"):
+        scopes = [n for n in ast.walk(fm.tree)
+                  if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+        for fn in scopes:
+            sqrt_names: Dict[str, int] = {}     # name -> first assign line
+            for n in ast.walk(fn):
+                if isinstance(n, ast.Assign) and len(n.targets) == 1 and \
+                        isinstance(n.targets[0], ast.Name):
+                    if any(_is_sqrt_call(c) for c in ast.walk(n.value)):
+                        sqrt_names.setdefault(n.targets[0].id, n.lineno)
+            for n in ast.walk(fn):
+                if not isinstance(n, ast.Compare) or \
+                        not all(isinstance(o, _ORDER_OPS) for o in n.ops):
+                    continue
+                if any(_sqrt_hits(op, sqrt_names, n.lineno)
+                       for op in (n.left, *n.comparators)):
+                    out.append(finding("parity/sqrt-compare", fm,
+                                       n.lineno, msg))
+    return out
+
+
+# kernel wrapper -> oracle twin names that differ from `<wrapper>_ref`
+TWIN_ALIASES = {
+    "fused_scan_topk": "fused_topk_ref",
+    "quantized_scan_topk": "quantized_topk_ref",
+}
+# wrapper params the twin does not take / extra twin params that are fine
+TWIN_PARAM_IGNORE = {"interpret", "occ"}
+
+
+def _kernel_wrappers(fm) -> List[ast.FunctionDef]:
+    out = []
+    for node in fm.tree.body:
+        if isinstance(node, ast.FunctionDef) and \
+                not node.name.startswith("_"):
+            if any(isinstance(c, ast.Call) and
+                   dotted_name(c.func).endswith("pallas_call")
+                   for c in ast.walk(node)):
+                out.append(node)
+    return out
+
+
+def _param_names(fn: ast.FunctionDef) -> List[str]:
+    a = fn.args
+    return [p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)]
+
+
+@rule("parity/twin-kernel", "parity",
+      "every Pallas kernel needs a ref.py oracle twin")
+def twin_kernel(model: RepoModel) -> List[Finding]:
+    out: List[Finding] = []
+    kfiles = model.scoped("kernels")
+    ref_fm = next((f for f in kfiles if f.module_name == "ref"), None)
+    ref_funcs: Dict[str, ast.FunctionDef] = {}
+    if ref_fm is not None:
+        ref_funcs = {n.name: n for n in ref_fm.tree.body
+                     if isinstance(n, ast.FunctionDef)}
+    for fm in kfiles:
+        if fm.module_name in ("ref", "ops"):
+            continue
+        for wrapper in _kernel_wrappers(fm):
+            twin_name = TWIN_ALIASES.get(wrapper.name,
+                                         wrapper.name + "_ref")
+            twin = ref_funcs.get(twin_name)
+            if twin is None:
+                out.append(finding(
+                    "parity/twin-kernel", fm, wrapper.lineno,
+                    f"Pallas kernel `{wrapper.name}` has no oracle twin "
+                    f"`{twin_name}` in kernels/ref.py"))
+                continue
+            want = [p for p in _param_names(wrapper)
+                    if p not in TWIN_PARAM_IGNORE]
+            have = set(_param_names(twin))
+            missing = [p for p in want if p not in have]
+            if missing:
+                out.append(finding(
+                    "parity/twin-kernel", fm, wrapper.lineno,
+                    f"oracle twin `{twin_name}` signature mismatch: "
+                    f"missing params {missing} of `{wrapper.name}`"))
+    return out
+
+
+_TEST_PATH_RE = re.compile(r"tests/[\w./-]+\.py")
+
+
+def _sweep_test_files(workflow_text: str) -> Optional[List[str]]:
+    """Test files named in the REPRO_USE_PALLAS=1 sweep command
+    (continuation lines included); None when no sweep exists."""
+    lines = workflow_text.splitlines()
+    for i, ln in enumerate(lines):
+        if "REPRO_USE_PALLAS=1" not in ln:
+            continue
+        block = [ln]
+        j = i
+        while lines[j].rstrip().endswith("\\") and j + 1 < len(lines):
+            j += 1
+            block.append(lines[j])
+        return _TEST_PATH_RE.findall("\n".join(block))
+    return None
+
+
+@rule("parity/pallas-ci-sweep", "parity",
+      "every Pallas kernel module must be in the interpret-mode CI sweep")
+def pallas_ci_sweep(model: RepoModel) -> List[Finding]:
+    out: List[Finding] = []
+    if not model.workflows:
+        return out
+    sweep: Optional[List[str]] = None
+    wf_name = None
+    for name, text in model.workflows.items():
+        files = _sweep_test_files(text)
+        if files is not None:
+            sweep, wf_name = files, name
+            break
+    kmods = [fm for fm in model.scoped("kernels")
+             if fm.module_name not in ("ref", "ops") and _kernel_wrappers(fm)]
+    if sweep is None:
+        for fm in kmods:
+            out.append(finding(
+                "parity/pallas-ci-sweep", fm, 1,
+                "no REPRO_USE_PALLAS=1 interpret-mode sweep found in CI "
+                "workflows — Pallas kernels are untested on the kernel "
+                "branch"))
+        return out
+    for fm in kmods:
+        covered = any(fm.module_name in model.test_sources.get(t, "")
+                      for t in sweep)
+        if not covered:
+            out.append(finding(
+                "parity/pallas-ci-sweep", fm, 1,
+                f"kernel module `{fm.module_name}` is not exercised by "
+                f"any test file in the {wf_name} REPRO_USE_PALLAS sweep "
+                f"({', '.join(sweep)})"))
+    return out

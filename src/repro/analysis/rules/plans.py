@@ -1,0 +1,78 @@
+"""Plan-contract rules (family: plan).
+
+The static half of the plan family: every ``Plan(kind=...)`` literal the
+planner can emit must be matched somewhere by a ``.kind`` dispatch
+(operator-tree construction or executor routing) — a constructed kind no
+dispatcher ever names is a typo'd dead plan shape.  The runtime half
+(``validate_plan``) lives in ``repro.analysis.plan_validator`` and is
+asserted over every TRACY template in tests plus the CI bench smokes.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set, Tuple
+
+from repro.analysis.asthelpers import dotted_name
+from repro.analysis.findings import Finding
+from repro.analysis.model import RepoModel
+from repro.analysis.registry import finding, rule
+
+
+def _constructed_kinds(model: RepoModel
+                       ) -> List[Tuple[str, object, int]]:
+    out = []
+    for fm in model.scoped("core"):
+        for node in ast.walk(fm.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if dotted_name(node.func).split(".")[-1] != "Plan":
+                continue
+            for kwarg in node.keywords:
+                if kwarg.arg == "kind" and \
+                        isinstance(kwarg.value, ast.Constant) and \
+                        isinstance(kwarg.value.value, str):
+                    out.append((kwarg.value.value, fm, node.lineno))
+    return out
+
+
+def _handled_kinds(model: RepoModel) -> Set[str]:
+    """String literals tested against a ``.kind`` attribute anywhere."""
+    handled: Set[str] = set()
+    for fm in model.scoped("core"):
+        for node in ast.walk(fm.tree):
+            if not isinstance(node, ast.Compare):
+                continue
+            sides = [node.left, *node.comparators]
+            has_kind = any(isinstance(s, ast.Attribute) and s.attr == "kind"
+                           for s in sides)
+            if not has_kind:
+                continue
+            for s in sides:
+                if isinstance(s, ast.Constant) and isinstance(s.value, str):
+                    handled.add(s.value)
+                elif isinstance(s, (ast.Tuple, ast.List, ast.Set)):
+                    for e in s.elts:
+                        if isinstance(e, ast.Constant) and \
+                                isinstance(e.value, str):
+                            handled.add(e.value)
+    return handled
+
+
+@rule("plan/kind-dispatch", "plan",
+      "every constructed Plan kind must be matched by a .kind dispatch")
+def kind_dispatch(model: RepoModel) -> List[Finding]:
+    out: List[Finding] = []
+    constructed = _constructed_kinds(model)
+    if not constructed:
+        return out
+    handled = _handled_kinds(model)
+    seen: Dict[str, bool] = {}
+    for kind, fm, ln in constructed:
+        if kind in handled or seen.get(kind):
+            continue
+        seen[kind] = True
+        out.append(finding(
+            "plan/kind-dispatch", fm, ln,
+            f"Plan kind '{kind}' is constructed but no dispatcher ever "
+            f"compares .kind against it — dead or typo'd plan shape"))
+    return out

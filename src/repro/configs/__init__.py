@@ -1,9 +1,9 @@
 """Config registry: ``get_config(arch_id)`` / ``list_archs()``."""
 from __future__ import annotations
 
-from repro.configs.base import (MLAConfig, ModelConfig, MoEConfig, SHAPES,
-                                ShapeConfig, SSMConfig, XLSTMConfig,
-                                cell_supported, get_shape)
+from repro.configs.base import (  # noqa: F401
+    MLAConfig, ModelConfig, MoEConfig, SHAPES, ShapeConfig, SSMConfig,
+    XLSTMConfig, cell_supported, get_shape)
 
 from repro.configs import (arcade_embedder, deepseek_moe_16b,
                            deepseek_v3_671b, llama32_vision_90b,

@@ -8,7 +8,7 @@ CPU-smoke-test-sized config of the same family.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 

@@ -17,7 +17,6 @@ import dataclasses
 import time as _time
 from typing import Dict, List, Optional, Tuple
 
-import numpy as np
 
 from repro.core import query as q
 from repro.core.executor import Executor

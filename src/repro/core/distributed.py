@@ -18,13 +18,12 @@ remains the mesh-level shard_map demo the dry-run drives.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 
 def local_topk(q: jnp.ndarray, vecs: jnp.ndarray, k: int
@@ -61,7 +60,6 @@ def make_distributed_topk(mesh: Mesh, k: int, shard_axis: str = "data"):
     """
     from jax.experimental.shard_map import shard_map
 
-    n_shards = mesh.shape[shard_axis]
 
     def _shardfn(q, vecs, ids):
         d, idx = local_topk(q, vecs, k)             # local candidates

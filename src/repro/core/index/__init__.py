@@ -1,9 +1,9 @@
 """Unified secondary index framework (paper §4)."""
 from __future__ import annotations
 
-from repro.core.index.base import (ExactSortedAccess, MergedSortedAccess,
-                                   SecondaryIndex, SortedAccess)
-from repro.core.index.global_index import GlobalIndex, GlobalIndexSet
+from repro.core.index.base import (  # noqa: F401
+    ExactSortedAccess, MergedSortedAccess, SecondaryIndex, SortedAccess)
+from repro.core.index.global_index import GlobalIndex, GlobalIndexSet  # noqa: F401
 from repro.core.index.ivf import IVFIndex
 from repro.core.index.scalar import ScalarIndex
 from repro.core.index.spatial import ZOrderIndex

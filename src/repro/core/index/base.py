@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import abc
 import heapq
-from typing import Any, Iterator, List, Optional, Tuple
+from typing import Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -49,7 +49,9 @@ class ExactSortedAccess(SortedAccess):
 
     def __init__(self, dists: np.ndarray, rows: np.ndarray,
                  block: int = 128):
-        order = np.argsort(dists, kind="stable")
+        # (score, row) comparator: deterministic tie order for NRA's
+        # sorted-access streams regardless of producer ordering
+        order = np.lexsort((np.asarray(rows), np.asarray(dists)))
         self._d = np.asarray(dists)[order]
         self._r = np.asarray(rows)[order]
         self._i = 0

@@ -10,8 +10,7 @@ summary intersects the predicate — segments never touched never cost I/O.
 """
 from __future__ import annotations
 
-import bisect
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List
 
 import numpy as np
 
@@ -77,9 +76,11 @@ class GlobalIndex:
                 if cents is None or len(cents) == 0:
                     out.append(seg)
                     continue
-                d = np.sqrt(((cents - predicate.q[None, :]) ** 2).sum(1))
-                # conservative: centroid within thresh + cloud slack
-                if float(d.min()) <= predicate.thresh * 2.0 + 1.0:
+                d2 = ((cents - predicate.q[None, :]) ** 2).sum(1)
+                # conservative: centroid within thresh + cloud slack;
+                # compared in squared form — no sqrt on the prune path
+                lim = predicate.thresh * 2.0 + 1.0
+                if float(d2.min()) <= lim * lim:
                     out.append(seg)
             else:
                 out.append(seg)

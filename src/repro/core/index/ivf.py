@@ -18,12 +18,11 @@ kernel), with exact re-ranking of the top candidates.
 from __future__ import annotations
 
 import math
-from typing import Any, List, Optional, Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
-from repro.core.index.base import (ExactSortedAccess, SecondaryIndex,
-                                   SortedAccess)
+from repro.core.index.base import SecondaryIndex, SortedAccess
 from repro.core.types import BLOCK_ROWS
 from repro.kernels import ops as kops
 
@@ -214,7 +213,8 @@ class IVFIndex(SecondaryIndex):
             vecs = np.concatenate([self.post_vecs[s] for s in cand_slices])
             d_exact = self._euclid(kops.l2_distances(q[None, :],
                                                      vecs[top])[0])
-            order = np.argsort(d_exact)[:k]
+            # (score, row) comparator: pk order within a segment
+            order = np.lexsort((rows[top], d_exact))[:k]
             return d_exact[order], rows[top][order], blocks_read
         vecs = np.concatenate([self.post_vecs[s] for s in cand_slices])
         d, idx = kops.block_topk(q, vecs, min(k, len(rows)))

@@ -7,7 +7,7 @@ attribute values to data block handles'.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Optional
 
 import numpy as np
 

@@ -17,6 +17,7 @@ core.nra driven by the optimizer.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -75,6 +76,14 @@ class LSMStore:
         self._on_delta: List[Callable] = []   # continuous-query hooks
         self._mt_epoch = 0                    # bumps on any memtable change
         self._mt_cache = None                 # (epoch, concat scan arrays)
+        # store lock: every mutation of shared state (segments, sealed,
+        # memtable, metrics, global_index, caches, PQ books) happens under
+        # it.  Re-entrant so visibility helpers called from a publish
+        # window can re-take it.  Expensive work (segment build, index
+        # construction, PQ training) runs OUTSIDE; only the publish is
+        # locked.  Lock order: never hold _lock while waiting on the
+        # scheduler's condition variable.
+        self._lock = threading.RLock()
         self.scheduler = FlushScheduler(self)
 
     # ------------------------------------------------------------------ write
@@ -86,16 +95,21 @@ class LSMStore:
         pks = np.asarray(pks, np.int64)
         if len(pks) == 0:
             return
-        self._track_unique(pks)
-        self._seqno = self.memtable.put_batch(pks, batch, self._seqno)
-        self._mt_epoch += 1
-        self.metrics["puts"] += len(pks)
+        cbatch = batch
+        with self._lock:
+            self._track_unique(pks)
+            self._seqno = self.memtable.put_batch(pks, batch, self._seqno)
+            self._mt_epoch += 1
+            self._mt_cache = None
+            self.metrics["puts"] += len(pks)
+            if self._on_delta and isinstance(self.memtable, mt.MemTable):
+                # hand hooks the memtable's canonical numpy chunk
+                # (zero-copy, already validated) — never per-row dicts
+                cbatch = {name: chunks[-1] for name, chunks
+                          in self.memtable._col_chunks.items()}
+        # hooks and backpressure run unlocked: on_write may wait on the
+        # scheduler's condition variable, which the worker needs _lock-free
         if self._on_delta:
-            # hand hooks the memtable's canonical numpy chunk (zero-copy,
-            # already validated) — never per-row dicts
-            cbatch = {name: chunks[-1] for name, chunks
-                      in self.memtable._col_chunks.items()} \
-                if isinstance(self.memtable, mt.MemTable) else batch
             self._notify_delta(pks, cbatch, deleted=False)
         self.scheduler.on_write()
 
@@ -106,17 +120,19 @@ class LSMStore:
         pks = np.asarray(pks, np.int64)
         if len(pks) == 0:
             return
-        exists = self._contains_any_version(pks)
-        if not exists.any():
-            self.metrics["noop_deletes"] += len(pks)
-            return
-        live = pks[exists]
-        self.unique_pks = False
-        self._seqno = self.memtable.put_batch(live, {}, self._seqno,
-                                              tombstone=True)
-        self._mt_epoch += 1
-        self.metrics["deletes"] += len(live)
-        self.metrics["noop_deletes"] += int(len(pks) - len(live))
+        with self._lock:
+            exists = self._contains_any_version(pks)
+            if not exists.any():
+                self.metrics["noop_deletes"] += len(pks)
+                return
+            live = pks[exists]
+            self.unique_pks = False
+            self._seqno = self.memtable.put_batch(live, {}, self._seqno,
+                                                  tombstone=True)
+            self._mt_epoch += 1
+            self._mt_cache = None
+            self.metrics["deletes"] += len(live)
+            self.metrics["noop_deletes"] += int(len(pks) - len(live))
         self._notify_delta(live, None, deleted=True)
         self.scheduler.on_write()
 
@@ -172,13 +188,15 @@ class LSMStore:
     # ------------------------------------------------- flush / compaction
     def seal(self) -> bool:
         """Move the active memtable onto the flush queue (O(1) swap)."""
-        if not len(self.memtable):
-            return False
-        self.sealed.append(self.memtable)
-        self.memtable = self._memtable_factory(self.schema)
-        self._mt_epoch += 1
-        self.metrics["seals"] += 1
-        return True
+        with self._lock:
+            if not len(self.memtable):
+                return False
+            self.sealed.append(self.memtable)
+            self.memtable = self._memtable_factory(self.schema)
+            self._mt_epoch += 1
+            self._mt_cache = None
+            self.metrics["seals"] += 1
+            return True
 
     def flush(self) -> Optional[seg_lib.Segment]:
         """Seal the active memtable and drain all queued work; returns
@@ -197,25 +215,30 @@ class LSMStore:
         its indexes, then extend the visibility cache incrementally (a
         flush relocates versions without changing any pk's winner)."""
         from repro.core import visibility as vis_lib
-        mtab = self.sealed[0]
+        with self._lock:
+            mtab = self.sealed[0]
         t0 = time.perf_counter()
+        # build outside the lock: the sealed memtable is immutable (only
+        # the active one takes writes) and the segment is private until
+        # published, so index construction never blocks writers/readers
         pk, seqno, tomb, cols = mtab.scan_arrays()
         seg = seg_lib.Segment(self.schema, pk, seqno, tomb, cols, level=0)
         self._build_indexes(seg)
         self._quantize_segment(seg)
-        pre_key = (self._seqno, tuple(s.seg_id for s in self.segments))
-        self.segments.append(seg)
-        self.sealed.pop(0)
-        self._mt_epoch += 1
-        # explicit invalidation too: `+= 1` from two threads can lose an
-        # update (background mode); a None cache always rebuilds
-        self._mt_cache = None
-        self.global_index.on_new_segment(seg)
-        if vis_lib.extend_cache_on_flush(self, pre_key, seg, len(pk)):
-            self.metrics["vis_extends"] += 1
-        seg.sort_order = None          # one-shot; don't retain 8B/row
-        self.metrics["flushes"] += 1
-        self.metrics["flush_s"] += time.perf_counter() - t0
+        with self._lock:
+            # atomic publish: readers see (old segments + sealed) or
+            # (new segment, sealed popped) — never the torn middle
+            pre_key = (self._seqno, tuple(s.seg_id for s in self.segments))
+            self.segments.append(seg)
+            self.sealed.pop(0)
+            self._mt_epoch += 1
+            self._mt_cache = None
+            self.global_index.on_new_segment(seg)
+            if vis_lib.extend_cache_on_flush(self, pre_key, seg, len(pk)):
+                self.metrics["vis_extends"] += 1
+            seg.sort_order = None      # one-shot; don't retain 8B/row
+            self.metrics["flushes"] += 1
+            self.metrics["flush_s"] += time.perf_counter() - t0
         return seg
 
     def _build_indexes(self, seg: seg_lib.Segment) -> None:
@@ -228,7 +251,8 @@ class LSMStore:
             if idx is not None:
                 idx.build(seg, col)
                 seg.indexes[col.name] = idx
-        self.metrics["index_build_s"] += time.perf_counter() - t0
+        with self._lock:
+            self.metrics["index_build_s"] += time.perf_counter() - t0
 
     # ------------------------------------------------ quantized residence
     def _vector_columns(self):
@@ -245,8 +269,10 @@ class LSMStore:
         t0 = time.perf_counter()
         for col in self._vector_columns():
             self._encode_quantized(seg, col.name)
-        self.metrics["quantize_s"] = self.metrics.get("quantize_s", 0.0) \
-            + (time.perf_counter() - t0)
+        with self._lock:
+            self.metrics["quantize_s"] = \
+                self.metrics.get("quantize_s", 0.0) \
+                + (time.perf_counter() - t0)
 
     def _encode_quantized(self, seg: seg_lib.Segment, name: str) -> None:
         from repro.core import quantize as qz
@@ -256,7 +282,8 @@ class LSMStore:
         cached = self._pq_books.get(name)
         if cached is None:
             qc = qz.quantize_column(vecs, m=self.cfg.pq_m)
-            self._pq_books[name] = (qc.book_id, qc.codebooks)
+            with self._lock:
+                self._pq_books[name] = (qc.book_id, qc.codebooks)
         else:
             bid, books = cached
             qc = qz.QuantizedColumn(qz.encode(vecs, books), books, bid)
@@ -278,8 +305,10 @@ class LSMStore:
                     parts, merged.columns[col.name], row_maps)
             else:
                 self._encode_quantized(merged, col.name)
-        self.metrics["quantize_s"] = self.metrics.get("quantize_s", 0.0) \
-            + (time.perf_counter() - t0)
+        with self._lock:
+            self.metrics["quantize_s"] = \
+                self.metrics.get("quantize_s", 0.0) \
+                + (time.perf_counter() - t0)
 
     def _compactable_level(self) -> Optional[int]:
         """Lowest level whose tier reached the size-tiered fanout."""
@@ -295,10 +324,13 @@ class LSMStore:
         """Merge one full tier into a level+1 segment, *merging* the
         per-segment indexes through the compaction row maps instead of
         rebuilding them (paper §4's compaction-aware maintenance)."""
-        tier = [s for s in self.segments if s.level == level]
+        with self._lock:
+            tier = [s for s in self.segments if s.level == level]
+            bottom = level + 1 >= self.cfg.max_levels or not any(
+                s.level > level for s in self.segments)
         t0 = time.perf_counter()
-        bottom = level + 1 >= self.cfg.max_levels or not any(
-            s.level > level for s in self.segments)
+        # merge + index maintenance outside the lock: inputs are immutable
+        # segments, the output is private until published below
         merged, row_maps = seg_lib.merge_segments(
             self.schema, tier, level + 1, drop_tombstones=bottom,
             return_maps=True)
@@ -307,13 +339,17 @@ class LSMStore:
             self._merge_or_rebuild_indexes(tier, merged, row_maps)
         if self.cfg.quantize_vectors:
             self._merge_quantized(tier, merged, row_maps)
-        self.segments = [s for s in self.segments if s not in tier]
-        self.segments.append(merged)
-        for s in tier:
-            self.global_index.on_drop_segment(s.seg_id)
-        self.global_index.on_new_segment(merged)
-        self.metrics["compactions"] += 1
-        self.metrics["compact_s"] += time.perf_counter() - t0
+        with self._lock:
+            # single-assignment swap so concurrent readers iterating
+            # self.segments never observe a half-replaced tier
+            keep = [s for s in self.segments if s not in tier]
+            keep.append(merged)
+            self.segments = keep
+            for s in tier:
+                self.global_index.on_drop_segment(s.seg_id)
+            self.global_index.on_new_segment(merged)
+            self.metrics["compactions"] += 1
+            self.metrics["compact_s"] += time.perf_counter() - t0
         return merged
 
     def _merge_or_rebuild_indexes(self, tier, merged, row_maps) -> None:
@@ -331,12 +367,16 @@ class LSMStore:
             t0 = time.perf_counter()
             if mergeable:
                 idx.merge(parts, merged, col, row_maps)
-                self.metrics["index_merge_s"] += time.perf_counter() - t0
-                self.metrics["index_merges"] += 1
+                with self._lock:
+                    self.metrics["index_merge_s"] += \
+                        time.perf_counter() - t0
+                    self.metrics["index_merges"] += 1
             else:
                 idx.build(merged, col)
-                self.metrics["index_rebuild_s"] += time.perf_counter() - t0
-                self.metrics["index_rebuilds"] += 1
+                with self._lock:
+                    self.metrics["index_rebuild_s"] += \
+                        time.perf_counter() - t0
+                    self.metrics["index_rebuilds"] += 1
             merged.indexes[col.name] = idx
 
     # ------------------------------------------------------------------- read
@@ -378,11 +418,15 @@ class LSMStore:
         """Columnar view over ALL RAM-resident rows (sealed memtables
         oldest-first, then the active one) — the read paths' single
         window onto unflushed data, cached per write epoch."""
-        if self._mt_cache is None or self._mt_cache[0] != self._mt_epoch:
-            parts = [m.scan_arrays() for m in (*self.sealed, self.memtable)]
-            self._mt_cache = (self._mt_epoch,
-                              mt.concat_memtable_arrays(parts, self.schema))
-        return self._mt_cache[1]
+        with self._lock:
+            if self._mt_cache is None or \
+                    self._mt_cache[0] != self._mt_epoch:
+                parts = [m.scan_arrays()
+                         for m in (*self.sealed, self.memtable)]
+                self._mt_cache = (
+                    self._mt_epoch,
+                    mt.concat_memtable_arrays(parts, self.schema))
+            return self._mt_cache[1]
 
     # visible-version resolution across segments (newest seqno per pk wins)
     def resolve_visible(self, per_segment_rows: Dict[int, np.ndarray]

@@ -23,7 +23,8 @@ scores for the returned k (the paper returns "sorted by LB").
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+import contextlib
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -43,9 +44,9 @@ def _per_segment_lookup(masks: Dict[int, np.ndarray], sids: np.ndarray,
     return keep
 
 
-def _modality_stream(store, rank, stats) -> Optional[MergedSortedAccess]:
+def _modality_stream(segments, rank, stats) -> Optional[MergedSortedAccess]:
     streams = []
-    for seg in store.segments:
+    for seg in segments:
         idx = seg.indexes.get(rank.col)
         if idx is None or seg.n_rows == 0:
             return None
@@ -73,10 +74,16 @@ def nra_topk(store, catalog, query: q.HybridQuery, stats) -> List:
     weights = np.asarray([r.weight for r in ranks], np.float32)
     dmax = np.asarray([catalog.dist_bound(r) for r in ranks], np.float32)
     k = query.k
-    seg_by_id = {s.seg_id: s for s in store.segments}
-    vis = None if store.unique_pks else vis_lib.visibility_index(store)
+    # snapshot under the store lock: the whole NRA walk (sorted-access
+    # streams, filter bitmaps, refinement) runs against one segment list
+    # even while a background flush republishes mid-walk
+    lock = getattr(store, "_lock", None)
+    with lock if lock is not None else contextlib.nullcontext():
+        segments = list(store.segments)
+        vis = None if store.unique_pks else vis_lib.visibility_index(store)
+    seg_by_id = {s.seg_id: s for s in segments}
 
-    streams = [_modality_stream(store, r, stats) for r in ranks]
+    streams = [_modality_stream(segments, r, stats) for r in ranks]
     if any(s is None for s in streams):
         # missing index: planner should not have chosen NRA; full-scan
         from repro.core.optimizer import planner as pl
@@ -88,7 +95,7 @@ def nra_topk(store, catalog, query: q.HybridQuery, stats) -> List:
     masks: Dict[int, np.ndarray] = {}
     if query.filters:
         dummy = ex.ExecStats()
-        for seg in store.segments:
+        for seg in segments:
             m = np.ones(seg.n_rows, bool)
             for pred in query.filters:
                 m &= ex.eval_predicate_seg(seg, pred, dummy)
@@ -186,8 +193,9 @@ def nra_topk(store, catalog, query: q.HybridQuery, stats) -> List:
                             int(enc_arr[i]) & 0xFFFFFFFF) for i in top_idx]
                 break
         if not progressed:
-            # everything exhausted: all candidates fully seen
-            order = np.argsort(ubs)[:k]
+            # everything exhausted: all candidates fully seen — rank by
+            # (score, key) so equal scores break deterministically
+            order = np.lexsort((enc_arr[:n_seen], ubs))[:k]
             winners = [(int(enc_arr[i]) >> 32,
                         int(enc_arr[i]) & 0xFFFFFFFF) for i in order]
             break

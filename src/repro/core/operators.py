@@ -20,6 +20,7 @@ sequential segment sweeps become one.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
@@ -293,37 +294,47 @@ class PipelineContext:
         self.stats = list(stats)
         self.nq = len(self.queries)
         self._pred_cache: Dict = pred_cache if pred_cache is not None else {}
-        self._mt = None
         self._mt_pred: Dict = {}
-        self._vis = False            # lazily resolved (False = unset)
-        # zone-map pruning per query (filter plans only, matching the
-        # sequential executor: NN scans visit every segment)
-        self._allowed: List[Optional[set]] = []
-        for qq, plan in zip(self.queries, self.plans):
-            if plan.kind in ("full_scan", "index_intersect"):
-                preds = plan.indexed or plan.residual
-                segs = store.segments
-                for p in preds:
-                    segs = store.global_index.prune(segs, p)
-                self._allowed.append({s.seg_id for s in segs})
-            elif plan.kind == "union":
-                # a segment is needed if ANY conjunct may match in it
-                allowed: set = set()
-                for sub in plan.subplans:
-                    segs = store.segments
-                    for p in list(sub.indexed) + list(sub.residual):
-                        segs = store.global_index.prune(segs, p)
-                    allowed |= {s.seg_id for s in segs}
-                self._allowed.append(allowed)
+        # snapshot the store's shared state under its lock: every operator
+        # in this pass reads ctx.segments / ctx.memtable_arrays() so the
+        # whole batch executes against ONE consistent store state even
+        # while a background flush republishes mid-pass
+        lock = getattr(store, "_lock", None)
+        with lock if lock is not None else contextlib.nullcontext():
+            self.segments: List = list(store.segments)
+            self._mt = store.memtable_arrays()
+            if not store.unique_pks:
+                # eagerly pin the matching visibility index; resolving it
+                # lazily could pick up a post-flush index whose winner
+                # rows don't exist in the snapshotted segment list
+                self._vis = vis_lib.visibility_index(store)
             else:
-                self._allowed.append(None)
+                self._vis = None
+            # zone-map pruning per query (filter plans only, matching the
+            # sequential executor: NN scans visit every segment)
+            self._allowed: List[Optional[set]] = []
+            for qq, plan in zip(self.queries, self.plans):
+                if plan.kind in ("full_scan", "index_intersect"):
+                    preds = plan.indexed or plan.residual
+                    segs = self.segments
+                    for p in preds:
+                        segs = store.global_index.prune(segs, p)
+                    self._allowed.append({s.seg_id for s in segs})
+                elif plan.kind == "union":
+                    # a segment is needed if ANY conjunct may match in it
+                    allowed: set = set()
+                    for sub in plan.subplans:
+                        segs = self.segments
+                        for p in list(sub.indexed) + list(sub.residual):
+                            segs = store.global_index.prune(segs, p)
+                        allowed |= {s.seg_id for s in segs}
+                    self._allowed.append(allowed)
+                else:
+                    self._allowed.append(None)
 
     # ------------------------------------------------------------- caches
     @property
     def visibility(self):
-        if self._vis is False:
-            self._vis = None if self.store.unique_pks else \
-                vis_lib.visibility_index(self.store)
         return self._vis
 
     def allowed(self, qi: int, seg) -> bool:
@@ -346,9 +357,8 @@ class PipelineContext:
         return hit
 
     def memtable_arrays(self):
-        if self._mt is None:
-            # sealed-aware: includes memtables queued for flush
-            self._mt = self.store.memtable_arrays()
+        # sealed-aware (includes memtables queued for flush), captured at
+        # snapshot time in __init__
         return self._mt
 
     def memtable_pred_mask(self, pred) -> np.ndarray:
@@ -441,7 +451,7 @@ class SegmentScan(PhysicalOp):
     name = "SegmentScan"
 
     def batches(self, ctx):
-        for seg in ctx.store.segments:
+        for seg in ctx.segments:
             if seg.n_rows == 0:
                 continue
             mask = np.zeros((ctx.nq, seg.n_rows), bool)
@@ -459,7 +469,7 @@ class IndexProbe(PhysicalOp):
     name = "IndexProbe"
 
     def batches(self, ctx):
-        for seg in ctx.store.segments:
+        for seg in ctx.segments:
             if seg.n_rows == 0:
                 continue
             mask = np.zeros((ctx.nq, seg.n_rows), bool)
@@ -544,7 +554,7 @@ class BitmapUnion(PhysicalOp):
         return m
 
     def batches(self, ctx):
-        for seg in ctx.store.segments:
+        for seg in ctx.segments:
             if seg.n_rows == 0:
                 continue
             # residual literals evaluated row-restricted but at most once
@@ -777,9 +787,9 @@ class MemtableOverlay(PhysicalOp):
 
     def apply(self, ctx: PipelineContext,
               cands: List[Candidates]) -> List[Candidates]:
-        if not ctx.store.memtable_rows:
-            return cands
         pk, _, tomb, cols = ctx.memtable_arrays()
+        if not len(pk):
+            return cands
         base = vis_lib.memtable_visible(pk, tomb)
         out = []
         for qi, (qq, c) in enumerate(zip(ctx.queries, cands)):
@@ -854,7 +864,7 @@ class ShardConcat(PhysicalOp):
 
 def candidate_pks(ctx: PipelineContext, c: Candidates) -> np.ndarray:
     pks = np.empty(len(c.sids), np.int64)
-    seg_by_id = {s.seg_id: s for s in ctx.store.segments}
+    seg_by_id = {s.seg_id: s for s in ctx.segments}
     for sid in np.unique(c.sids):
         sel = c.sids == sid
         if sid < 0:
@@ -874,7 +884,7 @@ def materialize(ctx: PipelineContext, query, c: Candidates,
     if k is not None:
         order = order[:k]
     select = query.select or [col.name for col in ctx.store.schema.columns]
-    seg_by_id = {s.seg_id: s for s in ctx.store.segments}
+    seg_by_id = {s.seg_id: s for s in ctx.segments}
     out: List[ResultRow] = []
     for t in order:
         sid, row = int(c.sids[t]), int(c.rows[t])

@@ -23,6 +23,7 @@ import dataclasses
 import itertools
 from typing import List, Optional, Sequence
 
+from repro.analysis.plan_validator import maybe_validate
 from repro.core import query as q
 from repro.core.optimizer import cost as cost_lib
 from repro.core.optimizer.stats import Catalog
@@ -329,7 +330,7 @@ def plan_shared_scan(catalog: Catalog, query: q.HybridQuery) -> Plan:
         c = cost_lib.full_scan_cost(catalog, list(query.ranks))
         chosen = Plan(kind="full_scan_nn", ranks=list(query.ranks),
                       k=query.k, cost=c.total, note="batched shared scan")
-    return _choose_dispatch(catalog, chosen, query)
+    return maybe_validate(_choose_dispatch(catalog, chosen, query))
 
 
 def plan(catalog: Catalog, query: q.HybridQuery) -> Plan:
@@ -349,4 +350,4 @@ def plan(catalog: Catalog, query: q.HybridQuery) -> Plan:
     else:
         chosen = plan_hybrid_search(catalog, query)
     chosen.operator_tree(catalog)      # attach EXPLAIN tree with estimates
-    return chosen
+    return maybe_validate(chosen)

@@ -9,12 +9,11 @@ bounds and cost estimates.
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional
 
 import numpy as np
 
 from repro.core import query as q
-from repro.core.types import BLOCK_ROWS, ColumnType
+from repro.core.types import BLOCK_ROWS
 
 
 class Catalog:

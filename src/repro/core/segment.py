@@ -10,13 +10,13 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import threading
 from collections import OrderedDict
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Sequence
 
 import numpy as np
 
-from repro.core.types import (BLOCK_ROWS, Column, ColumnType, IndexKind,
-                              Schema)
+from repro.core.types import BLOCK_ROWS, Schema
 
 _seg_counter = itertools.count()
 
@@ -119,15 +119,20 @@ class PackedColumn:
 # full fp32 copy of the packed column, so the cap is deliberately tight)
 _pack_cache: "OrderedDict[Tuple, PackedColumn]" = OrderedDict()
 _PACK_CACHE_CAP = 4
+# query threads and the background flush worker share the LRU: an
+# unguarded move_to_end/popitem pair from two threads corrupts the
+# OrderedDict's internal links
+_pack_lock = threading.Lock()
 
 
 def pack_segments(segments: Sequence[Segment], col: str) -> PackedColumn:
     """Concatenate ``col`` across ``segments`` into one superbatch."""
     key = (col,) + tuple(s.seg_id for s in segments)
-    hit = _pack_cache.get(key)
-    if hit is not None:
-        _pack_cache.move_to_end(key)
-        return hit
+    with _pack_lock:
+        hit = _pack_cache.get(key)
+        if hit is not None:
+            _pack_cache.move_to_end(key)
+            return hit
     xs = [np.asarray(s.columns[col], np.float32) for s in segments]
     ns = [s.n_rows for s in segments]
     packed = PackedColumn(
@@ -137,9 +142,10 @@ def pack_segments(segments: Sequence[Segment], col: str) -> PackedColumn:
                              for s, n in zip(segments, ns)]),
         rows=np.concatenate([np.arange(n, dtype=np.int64) for n in ns]),
         offsets=np.cumsum([0] + ns).astype(np.int64))
-    while len(_pack_cache) >= _PACK_CACHE_CAP:
-        _pack_cache.popitem(last=False)           # evict least-recent
-    _pack_cache[key] = packed
+    with _pack_lock:
+        while len(_pack_cache) >= _PACK_CACHE_CAP:
+            _pack_cache.popitem(last=False)       # evict least-recent
+        _pack_cache[key] = packed
     return packed
 
 
@@ -167,17 +173,19 @@ def pack_quantized(segments: Sequence[Segment],
     if any(qc.book_id != book_id for qc in qcols[1:]):
         return None
     key = ("#codes", col) + tuple(s.seg_id for s in segments)
-    hit = _pack_cache.get(key)
-    if hit is not None:
-        _pack_cache.move_to_end(key)
-        return hit
+    with _pack_lock:
+        hit = _pack_cache.get(key)
+        if hit is not None:
+            _pack_cache.move_to_end(key)
+            return hit
     packed = PackedCodes(
         codes=np.concatenate([qc.codes for qc in qcols]),
         codebooks=qcols[0].codebooks,
         book_id=book_id)
-    while len(_pack_cache) >= _PACK_CACHE_CAP:
-        _pack_cache.popitem(last=False)
-    _pack_cache[key] = packed
+    with _pack_lock:
+        while len(_pack_cache) >= _PACK_CACHE_CAP:
+            _pack_cache.popitem(last=False)
+        _pack_cache[key] = packed
     return packed
 
 

@@ -15,7 +15,6 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core import query as q
 from repro.core.views.view import SpatialRangeView, VectorNNView
 
 
@@ -77,11 +76,11 @@ class CoverageIndex:
     def vector_views_for(self, vec) -> List[VectorNNView]:
         if self._centers is None:
             return []
-        d = np.sqrt(((self._centers - np.asarray(vec)[None, :]) ** 2)
-                    .sum(axis=1))
+        d2 = ((self._centers - np.asarray(vec)[None, :]) ** 2).sum(axis=1)
         out = []
         for i, v in enumerate(self.vector):
-            if d[i] <= v.coverage_radius():
+            r = v.coverage_radius()
+            if d2[i] <= r * r:
                 out.append(v)
         return out
 
@@ -144,7 +143,9 @@ class ViewMaintainer:
             v.insert_many(pks[inside], pts[inside])
         for v in self.coverage.vector:
             vecs = np.asarray(batch[v.col], np.float32)
-            d = np.sqrt(((vecs - v.center[None, :]) ** 2).sum(axis=1))
-            m = d <= v.coverage_radius()
-            v.insert_many(pks[m], vecs[m], d[m])
+            d2 = ((vecs - v.center[None, :]) ** 2).sum(axis=1)
+            r = v.coverage_radius()
+            m = d2 <= r * r
+            # sqrt only for the admitted rows (the view stores euclid)
+            v.insert_many(pks[m], vecs[m], np.sqrt(d2[m]))
         self.deltas_applied += len(pks)

@@ -9,7 +9,7 @@ first/highest-hit matching view wins).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Optional
 
 import numpy as np
 

@@ -13,7 +13,7 @@ classic 1/2-approximation.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
 import numpy as np
 

@@ -12,9 +12,8 @@ incrementally from write deltas (maintenance.py).
 """
 from __future__ import annotations
 
-import dataclasses
 import itertools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -117,7 +116,9 @@ class VectorNNView:
         vecs = np.asarray(vecs, np.float32)
         if dists is None:
             dists = np.sqrt(((vecs - self.center[None, :]) ** 2).sum(axis=1))
-        cut = np.argsort(dists, kind="stable")
+        # (score, pk) comparator keeps the candidate list's tie order
+        # identical to the query-path ranking
+        cut = np.lexsort((np.asarray(pks, np.int64), dists))
         if len(cut) > self.xk:
             cut = cut[:self.xk]
         new = [(float(dists[i]), int(pks[i]), vecs[i]) for i in cut]
@@ -156,9 +157,9 @@ class VectorNNView:
         d = np.sqrt(((vecs - qvec[None, :]) ** 2).sum(axis=1))
         if k < len(d):
             idx = np.argpartition(d, k)[:k]
-            idx = idx[np.argsort(d[idx])]
+            idx = idx[np.lexsort((pks[idx], d[idx]))]
         else:
-            idx = np.argsort(d)
+            idx = np.lexsort((pks, d))
         return [(float(d[i]), int(pks[i])) for i in idx]
 
     @property

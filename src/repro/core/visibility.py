@@ -16,9 +16,17 @@ invalidates it.
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Dict, Tuple
 
 import numpy as np
+
+
+def _store_lock(store):
+    """The store's lock, or a no-op context for lock-less store stand-ins
+    (unit-test doubles).  LSMStore always carries ``_lock`` (re-entrant),
+    so flush-time callers already inside the publish window re-enter."""
+    return getattr(store, "_lock", None) or contextlib.nullcontext()
 
 
 def memtable_visible(pk: np.ndarray, tomb: np.ndarray) -> np.ndarray:
@@ -156,13 +164,19 @@ def _encode(sids: np.ndarray, rows: np.ndarray) -> np.ndarray:
 
 
 def visibility_index(store) -> VisibilityIndex:
-    """Cached VisibilityIndex for the store's current write state."""
-    key = (store._seqno, tuple(s.seg_id for s in store.segments))
-    cached = getattr(store, "_vis_cache", None)
-    if cached is None or cached[0] != key:
-        cached = (key, VisibilityIndex(store))
-        store._vis_cache = cached
-    return cached[1]
+    """Cached VisibilityIndex for the store's current write state.
+
+    Key computation, index build, and cache publish all happen under the
+    store lock: the build walks ``store.segments`` and the memtable, and
+    a background flush republishing mid-walk would hand back an index
+    keyed for a state it was not built from."""
+    with _store_lock(store):
+        key = (store._seqno, tuple(s.seg_id for s in store.segments))
+        cached = getattr(store, "_vis_cache", None)
+        if cached is None or cached[0] != key:
+            cached = (key, VisibilityIndex(store))
+            store._vis_cache = cached
+        return cached[1]
 
 
 def extend_cache_on_flush(store, pre_key, seg, n_flushed: int) -> bool:
@@ -170,11 +184,12 @@ def extend_cache_on_flush(store, pre_key, seg, n_flushed: int) -> bool:
     the pre-flush state, remap it in place (``extend_on_flush``) and
     re-key it for the post-flush state instead of discarding it.  Returns
     whether the incremental path was taken."""
-    cached = getattr(store, "_vis_cache", None)
-    if cached is None or cached[0] != pre_key or n_flushed == 0:
-        return False
-    vis = cached[1]
-    vis.extend_on_flush(seg, n_flushed)
-    new_key = (store._seqno, tuple(s.seg_id for s in store.segments))
-    store._vis_cache = (new_key, vis)
-    return True
+    with _store_lock(store):
+        cached = getattr(store, "_vis_cache", None)
+        if cached is None or cached[0] != pre_key or n_flushed == 0:
+            return False
+        vis = cached[1]
+        vis.extend_on_flush(seg, n_flushed)
+        new_key = (store._seqno, tuple(s.seg_id for s in store.segments))
+        store._vis_cache = (new_key, vis)
+        return True

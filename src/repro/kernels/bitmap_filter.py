@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# analysis: allow[kernel/tile-constants] mask-filter tile, deliberately
+# larger than the scan-tile family (int8 rows, VMEM is cheap here)
 BLOCK_N = 1024
 
 

@@ -12,7 +12,6 @@ tiles are hardware-aligned.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -62,6 +62,10 @@ class KernelStats:
 
 _tls = threading.local()
 _seen_shapes: set = set()
+# the jit shape cache is process-global while the counters are
+# per-thread; guard membership+insert so concurrent first-seens from a
+# query thread and the flush worker don't corrupt the set
+_seen_lock = threading.Lock()
 
 
 def thread_stats() -> KernelStats:
@@ -85,8 +89,11 @@ def _dispatched(out_bytes: int, tag: str = None, shape: Tuple = ()) -> None:
     s.bytes_to_host += int(out_bytes)
     if tag is not None:
         key = (tag,) + tuple(shape)
-        if key not in _seen_shapes:
-            _seen_shapes.add(key)
+        with _seen_lock:
+            fresh = key not in _seen_shapes
+            if fresh:
+                _seen_shapes.add(key)
+        if fresh:
             s.shape_misses += 1
 
 
@@ -221,7 +228,9 @@ def block_topk(q: np.ndarray, vecs: np.ndarray, k: int,
     d = l2_distances(q[None, :], vecs, use_pallas=use_pallas)[0]
     k = min(k, len(d))
     idx = np.argpartition(d, k - 1)[:k]
-    order = np.argsort(d[idx], kind="stable")
+    # (score, row) comparator: ties break by row index, deterministic
+    # regardless of argpartition's arbitrary intra-tie order
+    order = np.lexsort((idx, d[idx]))
     return d[idx][order], idx[order]
 
 
@@ -370,7 +379,6 @@ def fused_scan_topk(q: np.ndarray, x: np.ndarray, mask: np.ndarray,
                     shape_tag or ())
         return out_d, out_r
     BQ, BN = fs_kernel.BLOCK_Q, fs_kernel.BLOCK_N
-    n = len(x)
     # pad rows to a block multiple (mask=0 => padding is never selected)
     xp = _pad_to(x, BN, 0)
     mp = _pad_to(mask.astype(np.uint8), BN, 1)

@@ -20,7 +20,6 @@ def ivf_scan_ref(q: jnp.ndarray, vecs: jnp.ndarray) -> jnp.ndarray:
 
 def pq_adc_ref(codes: jnp.ndarray, lut: jnp.ndarray) -> jnp.ndarray:
     """ADC: codes (n, m) uint8; lut (m, 256) fp32 -> (n,) summed distances."""
-    m = codes.shape[1]
     take = jnp.take_along_axis(lut.T, codes.astype(jnp.int32), axis=0)
     # lut.T: (256, m); gather per column j at codes[:, j]
     return jnp.sum(take.astype(jnp.float32), axis=1)
@@ -39,8 +38,24 @@ def topk_merge_ref(dists: jnp.ndarray, ids: jnp.ndarray, k: int):
     """Merge S sorted top-k lists: dists/ids (s, k) -> global (k,), (k,)."""
     flat_d = dists.reshape(-1)
     flat_i = ids.reshape(-1)
+    # analysis: allow[parity/raw-score-sort] ties break by flattened
+    # position here, matching the kernel's argmin selection order
     order = jnp.argsort(flat_d)[:k]
     return flat_d[order], flat_i[order]
+
+
+def batched_topk_merge_ref(dists: jnp.ndarray, ids: jnp.ndarray, k: int):
+    """Batched cross-shard merge oracle (topk_merge.batched_topk_merge).
+
+    dists (nq, s, kk) fp32; ids (nq, s, kk) int32 -> ((nq, k), (nq, k)):
+    per query the k smallest candidates across all shard lists in
+    ascending (score, id) lexicographic order; padded slots carry
+    (+inf, INT32_MAX) and sort last."""
+    nq = dists.shape[0]
+    flat_d = dists.reshape(nq, -1).astype(jnp.float32)
+    flat_i = ids.reshape(nq, -1)
+    sd, si = jax.lax.sort((flat_d, flat_i), dimension=1, num_keys=2)
+    return sd[:, :k], si[:, :k]
 
 
 def fused_topk_ref(q: jnp.ndarray, x: jnp.ndarray, mask: jnp.ndarray,

@@ -17,7 +17,6 @@ Usage:
 
 import argparse
 import dataclasses
-import functools
 import json
 import time
 import traceback

@@ -23,7 +23,6 @@ from repro.launch.mesh import make_production_mesh
 def run(multi_pod: bool, n_per_shard: int = 1 << 16, dim: int = 128,
         k: int = 100):
     mesh = make_production_mesh(multi_pod=multi_pod)
-    data_shards = mesh.shape["data"] * mesh.shape.get("pod", 1)
     n_global = n_per_shard * mesh.devices.size
     name = "2x16x16" if multi_pod else "16x16"
 

@@ -1,3 +1,3 @@
-from repro.models.model import (decode_step, encode, forward, init_cache,
-                                init_params, loss_fn, param_axes,
-                                param_shapes, trunk)
+from repro.models.model import (  # noqa: F401
+    decode_step, encode, forward, init_cache, init_params, loss_fn,
+    param_axes, param_shapes, trunk)

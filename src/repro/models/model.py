@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import layers
-from repro.models.transformer import Ctx, Stage, build_stages, stack_axes
+from repro.models.transformer import Ctx, build_stages
 from repro.models.transformer import DenseBlock
 from repro.sharding.partition import constrain
 

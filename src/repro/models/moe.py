@@ -22,8 +22,7 @@ reduced scales this repo executes.
 """
 from __future__ import annotations
 
-import math
-from typing import Callable, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

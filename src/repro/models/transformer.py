@@ -15,7 +15,6 @@ Block interface (per layer):
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, List, Optional, Tuple
 
 import jax

@@ -10,10 +10,8 @@ checkpointed cursor. This is the standard straggler-free input design for
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 

@@ -8,7 +8,7 @@ distributed-optimization trick for cross-pod all-reduces (DESIGN.md §6).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

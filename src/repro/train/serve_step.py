@@ -5,7 +5,7 @@ the ARCADE embedding path.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -65,8 +65,6 @@ def greedy_generate(params: Pytree, cfg: ModelConfig, prompt: jnp.ndarray,
     step = jax.jit(functools.partial(decode_step, cfg=cfg),
                    static_argnames=())
 
-    tok = prompt[:, :1]
-    out = [tok]
     # feed the prompt one token at a time (simple, exercises the cache path)
     for i in range(p_len - 1):
         _, cache = step(params, token=prompt[:, i:i + 1], cache=cache,

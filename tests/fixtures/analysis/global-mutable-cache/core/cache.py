@@ -1,0 +1,15 @@
+"""Fixture: a module-level memo mutated without a lock (fires once);
+the guarded writer below is clean."""
+import threading
+
+_memo: dict = {}
+_lock = threading.Lock()
+
+
+def bad_put(key, value):
+    _memo[key] = value                # fires: unguarded shared cache
+
+
+def good_put(key, value):
+    with _lock:
+        _memo[key] = value

@@ -1,0 +1,22 @@
+"""Fixture: a tiled wrapper whose grid divides by the tile without an
+assert guarding divisibility (fires once)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 8
+
+
+def _kern(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def ragged_call(x):
+    n = x.shape[0]
+    return pl.pallas_call(                 # fires: no `assert n % TILE`
+        _kern,
+        grid=(n // TILE,),
+        in_specs=[pl.BlockSpec((TILE,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((TILE,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.float32)],
+    )(x)

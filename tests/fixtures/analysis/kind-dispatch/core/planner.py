@@ -1,0 +1,21 @@
+"""Fixture: a constructed Plan kind no dispatcher names (fires once);
+the dispatched kind is clean."""
+
+
+class Plan:
+    def __init__(self, kind=""):
+        self.kind = kind
+
+
+def make_ghost():
+    return Plan(kind="ghost_kind")     # fires: never dispatched
+
+
+def make_scan():
+    return Plan(kind="full_scan")
+
+
+def dispatch(plan):
+    if plan.kind == "full_scan":
+        return "scan"
+    return None

@@ -1,0 +1,21 @@
+"""Fixture: a pallas_call whose BlockSpec index map takes one grid
+coordinate while the grid has rank 2 (fires once)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kern(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def bad_call(x):
+    n, d = x.shape
+    assert n % 8 == 0 and d % 8 == 0
+    return pl.pallas_call(
+        _kern,
+        grid=(n // 8, d // 8),
+        in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],  # fires
+        out_specs=[pl.BlockSpec((8, 8), lambda i, j: (i, j))],
+        out_shape=[jax.ShapeDtypeStruct((n, d), jnp.float32)],
+    )(x)

@@ -1,0 +1,20 @@
+"""Fixture: a Pallas kernel module absent from the CI interpret-mode
+sweep (fires once)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kern(x_ref, o_ref):
+    o_ref[...] = x_ref[...] + 1.0
+
+
+def sweep_scan(x, interpret=True):
+    return pl.pallas_call(
+        _kern,
+        grid=(1,),
+        in_specs=[pl.BlockSpec(x.shape, lambda i: (0, 0))],
+        out_specs=[pl.BlockSpec(x.shape, lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct(x.shape, jnp.float32)],
+        interpret=interpret,
+    )(x)

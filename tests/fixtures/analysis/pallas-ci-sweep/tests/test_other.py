@@ -1,0 +1,5 @@
+"""Fixture sweep test: exercises no kernel module at all."""
+
+
+def test_nothing():
+    assert True

@@ -1,0 +1,16 @@
+"""Fixture: one raw argsort over distances (fires), one sanctioned
+lexsort and one key= comparator (clean)."""
+import numpy as np
+
+
+def bad_rank(dists):
+    return np.argsort(dists)          # fires: no pk tie-break
+
+
+def good_rank(dists, pks):
+    return np.lexsort((pks, dists))   # sanctioned comparator
+
+
+def good_rows(rows):
+    rows.sort(key=lambda r: (r.score, r.pk))   # explicit (score, pk) key
+    return rows

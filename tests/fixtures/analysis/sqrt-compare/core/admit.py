@@ -1,0 +1,13 @@
+"""Fixture: a sqrt-derived distance feeding an ordering comparison
+(fires once); the squared-form rewrite below is clean."""
+import numpy as np
+
+
+def bad_admit(vecs, q, r):
+    d = np.sqrt(((vecs - q[None, :]) ** 2).sum(1))
+    return d <= r                     # fires: compare in squared form
+
+
+def good_admit(vecs, q, r):
+    d2 = ((vecs - q[None, :]) ** 2).sum(1)
+    return d2 <= r * r

@@ -1,0 +1,7 @@
+"""Fixture canonical kernel module: the contract constants."""
+import jax.numpy as jnp
+
+BLOCK_Q = 8
+BLOCK_N = 512
+KMAX = 128
+SENTINEL = jnp.iinfo(jnp.int32).max    # int32 pk tie-break range

@@ -1,0 +1,4 @@
+"""Fixture: a kernel module redefining a tile constant with a different
+value (fires once)."""
+
+BLOCK_N = 256                          # fires: canon says 512

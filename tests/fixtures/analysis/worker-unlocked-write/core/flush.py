@@ -1,0 +1,21 @@
+"""Fixture: the flush worker reaches an unlocked store mutation through
+``step`` (fires once); the locked sibling is clean."""
+import threading
+
+
+class FlushScheduler:
+    def __init__(self, store):
+        self.store = store
+        self._cv = threading.Condition()
+
+    def _run_worker(self):
+        while True:
+            self.step()
+            self.locked_step()
+
+    def step(self):
+        self.store.metrics["flushes"] += 1     # fires: no store lock
+
+    def locked_step(self):
+        with self.store._lock:
+            self.store.metrics["compactions"] += 1

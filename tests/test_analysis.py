@@ -1,0 +1,171 @@
+"""Tests for ``repro.analysis``: the fixture corpus (each rule fires
+exactly once on its known-bad mini-root), the clean-tree gate (HEAD has
+zero unbaselined findings), and the runtime plan validator (every TRACY
+template validates; hand-broken plans raise).
+"""
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from benchmarks import tracy
+from repro.analysis import RepoModel, all_rules, run_rules
+from repro.analysis.findings import load_baseline, split_baselined
+from repro.analysis.plan_validator import (
+    PlanContractError, maybe_validate, validate_plan)
+from repro.core import query as q
+from repro.core.executor import Executor
+from repro.core.optimizer import planner as planner_lib
+from repro.kernels import fused_scan as fs_kernel
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+FIXTURES = REPO_ROOT / "tests" / "fixtures" / "analysis"
+
+# fixture mini-root -> the one rule it must trigger exactly once
+CORPUS = [
+    ("raw-score-sort", "parity/raw-score-sort"),
+    ("sqrt-compare", "parity/sqrt-compare"),
+    ("twin-kernel", "parity/twin-kernel"),
+    ("pallas-ci-sweep", "parity/pallas-ci-sweep"),
+    ("worker-unlocked-write", "locks/worker-unlocked-write"),
+    ("global-mutable-cache", "locks/global-mutable-cache"),
+    ("tile-constants", "kernel/tile-constants"),
+    ("pallas-call-contract", "kernel/pallas-call-contract"),
+    ("grid-divisibility-guard", "kernel/grid-divisibility-guard"),
+    ("kind-dispatch", "plan/kind-dispatch"),
+]
+
+
+def test_registry_has_all_families():
+    rules = all_rules()
+    assert len(rules) >= 8
+    families = {r.family for r in rules.values()}
+    assert {"parity", "locks", "kernel", "plan"} <= families
+
+
+@pytest.mark.parametrize("fixture,rule_id", CORPUS,
+                         ids=[c[0] for c in CORPUS])
+def test_fixture_fires_exactly_once(fixture, rule_id):
+    root = FIXTURES / fixture
+    assert root.is_dir(), f"missing fixture corpus {root}"
+    model = RepoModel(root)
+    findings = run_rules(model, ids=[rule_id])
+    assert [f.rule for f in findings] == [rule_id], (
+        f"{fixture}: expected exactly one {rule_id} finding, got "
+        f"{[(f.rule, f.path, f.line, f.message) for f in findings]}")
+
+
+def test_clean_tree_at_head():
+    """The gate CI enforces: zero unbaselined findings on the real tree."""
+    model = RepoModel(REPO_ROOT)
+    findings = run_rules(model)
+    baseline = load_baseline(REPO_ROOT / "analysis_baseline.json")
+    new = split_baselined(findings, baseline)
+    assert not new, "unbaselined findings at HEAD:\n" + "\n".join(
+        f"{f.path}:{f.line}: [{f.rule}] {f.message}" for f in new)
+
+
+def test_allow_comment_suppresses(tmp_path):
+    core = tmp_path / "core"
+    core.mkdir()
+    (core / "ranker.py").write_text(
+        "import numpy as np\n\n\n"
+        "def rank(dists):\n"
+        "    # analysis: allow[parity/raw-score-sort] fixture reason,\n"
+        "    # continued over a second comment line\n"
+        "    return np.argsort(dists)\n")
+    model = RepoModel(tmp_path)
+    assert run_rules(model, ids=["parity/raw-score-sort"]) == []
+
+
+# ---------------------------------------------------------------------------
+# runtime plan validation
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tracy_ex():
+    cfg = tracy.TracyConfig(n_rows=1500, dim=32, seed=11, flush_rows=400)
+    store, data = tracy.build_store(cfg)
+    pks, batch = data.batch(32)     # live memtable rows on top
+    store.put(pks, batch)
+    return Executor(store), data
+
+
+def test_validate_plan_all_tracy_templates(tracy_ex):
+    ex, data = tracy_ex
+    search, nn = tracy.make_templates(data)
+    for ti, tmpl in enumerate(search + nn):
+        data.rng = np.random.default_rng(100 + ti)
+        for _ in range(3):
+            plan = planner_lib.plan(ex.catalog, tmpl())
+            validate_plan(plan)    # must not raise
+    qq = q.HybridQuery(ranks=[q.VectorRank(
+        "embedding", data.query_vec(), 1.0)], k=10)
+    validate_plan(planner_lib.plan_shared_scan(ex.catalog, qq))
+
+
+def _problems(plan):
+    with pytest.raises(PlanContractError) as ei:
+        validate_plan(plan)
+    return "\n".join(ei.value.problems)
+
+
+def test_validate_plan_rejects_unknown_kind():
+    assert "unknown plan kind" in _problems(
+        planner_lib.Plan(kind="ghost_kind"))
+
+
+def test_validate_plan_rejects_fused_over_budget(tracy_ex):
+    ex, data = tracy_ex
+    kmax = int(fs_kernel.KMAX)
+    rank = q.VectorRank("embedding", data.query_vec(), 1.0)
+    plan = planner_lib.Plan(kind="full_scan_nn", ranks=[rank],
+                            k=kmax + 1, fused=True)
+    assert f"outside (0, KMAX={kmax}]" in _problems(plan)
+
+
+def test_validate_plan_rejects_fused_on_search_kind():
+    plan = planner_lib.Plan(kind="full_scan", fused=True)
+    assert "no scan->top-k to fuse" in _problems(plan)
+
+
+def test_validate_plan_rejects_quantized_refine_overflow(tracy_ex):
+    ex, data = tracy_ex
+    kmax = int(fs_kernel.KMAX)
+    rank = q.VectorRank("embedding", data.query_vec(), 1.0)
+    plan = planner_lib.Plan(kind="full_scan_nn", ranks=[rank], k=kmax // 2,
+                            fused=True, quantized=True, pq_m=8, refine=4)
+    assert f"exceeds KMAX={kmax}" in _problems(plan)
+
+
+def test_validate_plan_rejects_union_without_subplans():
+    assert "no subplans" in _problems(planner_lib.Plan(kind="union"))
+
+
+def test_validate_plan_rejects_double_charged_predicate():
+    pred = q.Range("time", 0.0, 1.0)
+    plan = planner_lib.Plan(kind="full_scan", indexed=[pred],
+                            residual=[pred])
+    assert "both indexed and residual" in _problems(plan)
+
+
+def test_maybe_validate_env_gated(monkeypatch):
+    bad = planner_lib.Plan(kind="ghost_kind")
+    monkeypatch.delenv("REPRO_VALIDATE_PLANS", raising=False)
+    assert maybe_validate(bad) is bad          # off: pass-through
+    monkeypatch.setenv("REPRO_VALIDATE_PLANS", "0")
+    assert maybe_validate(bad) is bad
+    monkeypatch.setenv("REPRO_VALIDATE_PLANS", "1")
+    with pytest.raises(PlanContractError):
+        maybe_validate(bad)
+
+
+def test_planner_validates_under_env(tracy_ex, monkeypatch):
+    """End-to-end: the planner hook validates every emitted plan."""
+    ex, data = tracy_ex
+    monkeypatch.setenv("REPRO_VALIDATE_PLANS", "1")
+    search, nn = tracy.make_templates(data)
+    data.rng = np.random.default_rng(7)
+    for tmpl in (search[0], nn[0]):
+        res, stats = ex.execute(tmpl())
+        assert stats.plan

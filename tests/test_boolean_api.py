@@ -12,7 +12,6 @@ from conftest import make_batch, tweet_schema
 from repro.core import query as q
 from repro.core.api import Database, LSMConfig
 from repro.core.continuous import ContinuousEngine
-from repro.core.executor import Executor
 from repro.core.index.text import tokenize
 from repro.core.lsm import LSMStore
 from repro.core.optimizer import planner as pl

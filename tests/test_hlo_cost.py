@@ -1,7 +1,6 @@
 """The trip-count-aware HLO cost walker (roofline methodology)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch import hlo_cost

@@ -2,7 +2,6 @@
 import numpy as np
 import pytest
 
-from conftest import WORDS, make_batch, tweet_schema
 from repro.core import query as q
 from repro.core.index.base import MergedSortedAccess
 from repro.core.index.spatial import morton_codes

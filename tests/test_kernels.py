@@ -1,6 +1,5 @@
 """Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle,
 swept over shapes and dtypes (assignment requirement)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -57,6 +56,26 @@ def test_topk_merge_kernel_matches_ref(s, kk, k):
     np.testing.assert_allclose(np.asarray(od), np.asarray(wd), rtol=1e-6)
     # ids may differ on exact ties; distances define correctness
     assert set(np.asarray(oi).tolist()) == set(np.asarray(wi).tolist())
+
+
+@pytest.mark.parametrize("nq,s,kk,k", [(4, 3, 8, 5), (8, 5, 16, 10),
+                                       (2, 2, 4, 8)])
+def test_batched_topk_merge_matches_ref(nq, s, kk, k):
+    rng = np.random.default_rng(9)
+    d = np.sort(rng.normal(size=(nq, s, kk)) ** 2, axis=2)
+    ids = rng.integers(0, 10**6, (nq, s, kk))
+    # duplicate scores across shards so the (score, id) tie-break matters,
+    # and pad one shard tail with the sentinel slot encoding
+    d[:, 1, :] = d[:, 0, :]
+    sent = np.iinfo(np.int32).max
+    d[:, -1, kk // 2:] = np.inf
+    ids[:, -1, kk // 2:] = sent
+    d = jnp.asarray(d, jnp.float32)
+    ids = jnp.asarray(ids, jnp.int32)
+    od, oi = tkm.batched_topk_merge(d, ids, k, interpret=True)
+    wd, wi = ref.batched_topk_merge_ref(d, ids, k)
+    np.testing.assert_allclose(np.asarray(od), np.asarray(wd), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(oi), np.asarray(wi))
 
 
 def test_ops_backends_agree():

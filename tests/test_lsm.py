@@ -1,6 +1,5 @@
 """LSM store behaviour: write path, flush, compaction, MVCC."""
 import numpy as np
-import pytest
 
 from conftest import make_batch, tweet_schema
 from repro.core.lsm import LSMConfig, LSMStore

@@ -6,9 +6,7 @@ import numpy as np
 import pytest
 
 from benchmarks import tracy
-from repro.core import quantize as qz
 from repro.core import query as q
-from repro.core import segment as seg_lib
 from repro.core.executor import Executor
 from repro.core.optimizer import planner as planner_lib
 from repro.core.shards import ShardedExecutor, ShardRouter

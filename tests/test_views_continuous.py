@@ -1,6 +1,5 @@
 """Materialized views + continuous engines (paper §6, Fig. 5 semantics)."""
 import numpy as np
-import pytest
 
 from conftest import make_batch, tweet_schema
 from repro.core import query as q
