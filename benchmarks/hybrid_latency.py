@@ -146,6 +146,129 @@ def run_fused_vs_staged(n_rows: int = 6000, n_segments: int = 8,
 
 
 # ---------------------------------------------------------------------------
+# graph vs IVF vs exact recall-latency study
+# ---------------------------------------------------------------------------
+
+GRAPH_GATHER_CEILING = 0.35     # candidate rows gathered / segment rows
+
+
+def run_graph_vs_ivf_vs_exact(n_rows: int = 8000, n_segments: int = 8,
+                              dim: int = 128, n_queries: int = 12,
+                              recall_target: float = 0.95,
+                              seed: int = 0) -> Dict:
+    """Recall-vs-latency study for the graph dispatch: every
+    recall-targeted NN template (``tracy.make_graph_templates``) runs on
+    three engines over identical data and identical query streams —
+
+      * ``graph``: GRAPH-resident store, per-query ``recall_target`` (the
+        planner prices the CSR beam walk against the exact paths);
+      * ``ivf``:   IVF-resident store, same targeted queries (no graph
+        residence, so the planner falls back to its index-walk/scan
+        choices — the probe baseline);
+      * ``exact``: the GRAPH store with the targets stripped (default
+        exact contract; doubles as recall ground truth).
+
+    Records per-engine p50/p95 latency, the fraction of queries whose
+    chosen plan was the graph dispatch, recall@k against the exact run,
+    and the traversal's gathered-row fraction (``rows_scanned`` under the
+    graph dispatch is the visited-bitmap popcount, not a scan length)."""
+    base = dict(n_rows=n_rows, dim=dim, seed=seed,
+                flush_rows=max(1, n_rows // n_segments),
+                fanout=4 * n_segments)
+    g_store, g_data = tracy.build_store(tracy.TracyConfig(**base),
+                                        vector_index=tracy.IndexKind.GRAPH,
+                                        quantize=False)
+    i_store, i_data = tracy.build_store(tracy.TracyConfig(**base),
+                                        vector_index=tracy.IndexKind.IVF,
+                                        quantize=False)
+    total_rows = sum(s.n_rows for s in g_store.segments)
+    # identical seeds => identical topic centers => identical query draws
+    engines = {"graph": (Executor(g_store), g_data, recall_target),
+               "ivf": (Executor(i_store), i_data, recall_target),
+               "exact": (Executor(g_store), g_data, None)}
+    out: Dict = {"config": {"n_rows": n_rows, "dim": dim,
+                            "n_segments": len(g_store.segments),
+                            "n_queries": n_queries,
+                            "recall_target": recall_target},
+                 "templates": {}}
+    names = [n for n, _ in tracy.make_graph_templates(g_data)]
+    for ti, tname in enumerate(names):
+        rec: Dict = {}
+        pks_by_engine: Dict[str, List] = {}
+        for ename, (ex, data, rt) in engines.items():
+            tmpl = dict(tracy.make_graph_templates(data, rt))[tname]
+            data.rng = np.random.default_rng(seed + 777)
+            ex.execute(tmpl())                       # warm/compile
+            data.rng = np.random.default_rng(seed + 1000 + ti)
+            lat, pks, chosen, gathered = [], [], 0, []
+            for _ in range(n_queries):
+                query = tmpl()
+                t0 = time.perf_counter()
+                rows, st = ex.execute(query)
+                lat.append(time.perf_counter() - t0)
+                pks.append({r.pk for r in rows})
+                if "dispatch=graph" in st.plan:
+                    chosen += 1
+                    gathered.append(st.rows_scanned / max(1, total_rows))
+            pks_by_engine[ename] = pks
+            rec[ename] = {
+                "p50_ms": float(np.percentile(lat, 50) * 1e3),
+                "p95_ms": float(np.percentile(lat, 95) * 1e3),
+                "graph_chosen_frac": chosen / n_queries,
+                "gathered_frac": float(np.mean(gathered))
+                if gathered else 0.0,
+            }
+        k = 10
+        for ename in ("graph", "ivf"):
+            hits = sum(len(a & b) for a, b in
+                       zip(pks_by_engine[ename], pks_by_engine["exact"]))
+            denom = sum(min(k, len(b)) for b in pks_by_engine["exact"])
+            rec[ename]["recall_at_k"] = hits / max(1, denom)
+        out["templates"][tname] = rec
+    g6 = out["templates"]["g6"]
+    out["summary"] = {
+        "graph_p50_vs_exact": g6["graph"]["p50_ms"] / g6["exact"]["p50_ms"],
+        "graph_p50_vs_ivf": g6["graph"]["p50_ms"] / g6["ivf"]["p50_ms"],
+        "graph_beats_exact_p50": g6["graph"]["p50_ms"]
+        < g6["exact"]["p50_ms"],
+        "graph_beats_ivf_p50": g6["graph"]["p50_ms"] < g6["ivf"]["p50_ms"],
+    }
+    return out
+
+
+def _check_graph_baseline(result: Dict, baseline: Dict) -> List[str]:
+    """Machine-independent gates for the graph-smoke CI job: the planner
+    keeps choosing the graph dispatch wherever the committed baseline
+    says it did, recall@k holds the target on every template where the
+    graph ran, and the traversal stays sub-linear (gathered-row fraction
+    under the ceiling).  Latency ratios are recorded, never gated — they
+    are machine-dependent."""
+    failures = []
+    rt = result["config"]["recall_target"]
+    for tname, rec in result["templates"].items():
+        g = rec["graph"]
+        bfrac = baseline.get("templates", {}).get(tname, {}) \
+            .get("graph", {}).get("graph_chosen_frac", 0.0)
+        if g["graph_chosen_frac"] < bfrac:
+            failures.append(
+                f"{tname}: graph chosen on {g['graph_chosen_frac']:.2f} "
+                f"of queries < baseline {bfrac:.2f}")
+        if g["graph_chosen_frac"] > 0 and g["recall_at_k"] < rt:
+            failures.append(
+                f"{tname}: recall@10 {g['recall_at_k']:.3f} < "
+                f"target {rt}")
+        if g["graph_chosen_frac"] > 0 and \
+                g["gathered_frac"] > GRAPH_GATHER_CEILING:
+            failures.append(
+                f"{tname}: gathered {g['gathered_frac']:.2f} of rows > "
+                f"ceiling {GRAPH_GATHER_CEILING}")
+    if result["templates"]["g6"]["graph"]["graph_chosen_frac"] < 1.0:
+        failures.append("g6 (pure NN): graph dispatch not chosen on "
+                        "every query")
+    return failures
+
+
+# ---------------------------------------------------------------------------
 # harness hooks (run.py) and CLI
 # ---------------------------------------------------------------------------
 
@@ -162,7 +285,9 @@ def bench(scale: float = 1.0) -> List[str]:
                 f"tab1_{kind}_{engine},{r['avg_ms'] * 1e3:.0f},"
                 f"p95_ms={r['p95_ms']:.1f};blocks={r['blocks_per_q']:.0f}")
     rows.extend(csv_from_json(
-        {"fused_vs_staged": run_fused_vs_staged(n_rows=int(6000 * scale))}))
+        {"fused_vs_staged": run_fused_vs_staged(n_rows=int(6000 * scale)),
+         "graph_study": run_graph_vs_ivf_vs_exact(
+             n_rows=int(8000 * scale))}))
     return rows
 
 
@@ -176,6 +301,8 @@ def bench_json(scale: float = 1.0) -> Dict:
             out["tab1"][f"{kind}_{engine}"] = run_latency(
                 n_rows=n_rows, n_queries=nq, kind=kind, engine=engine)
     out["fused_vs_staged"] = run_fused_vs_staged(n_rows=n_rows)
+    out["graph_study"] = run_graph_vs_ivf_vs_exact(
+        n_rows=int(8000 * scale))
     return out
 
 
@@ -201,6 +328,24 @@ def csv_from_json(data: Dict) -> List[str]:
                 f"{r['staged']['launches']};"
                 f"bytes={r['fused']['bytes_to_host']}v"
                 f"{r['staged']['bytes_to_host']}")
+    gs = data.get("graph_study")
+    if gs:
+        for name, rec in gs["templates"].items():
+            g = rec["graph"]
+            rows.append(
+                f"graph_{name},{g['p50_ms'] * 1e3:.0f},"
+                f"chosen={g['graph_chosen_frac']:.2f};"
+                f"recall={g['recall_at_k']:.3f};"
+                f"gathered={g['gathered_frac']:.2f};"
+                f"exact_p50={rec['exact']['p50_ms']:.1f}ms;"
+                f"ivf_p50={rec['ivf']['p50_ms']:.1f}ms")
+        s = gs["summary"]
+        rows.append(
+            f"graph_summary,{s['graph_p50_vs_exact'] * 1e3:.0f},"
+            f"vs_exact={s['graph_p50_vs_exact']:.2f};"
+            f"vs_ivf={s['graph_p50_vs_ivf']:.2f};"
+            f"beats_exact={int(s['graph_beats_exact_p50'])};"
+            f"beats_ivf={int(s['graph_beats_ivf_p50'])}")
     return rows
 
 
@@ -232,10 +377,16 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small workload + baseline ratio gates")
+    ap.add_argument("--graph-smoke", action="store_true",
+                    help="graph study only: small workload + recall/"
+                         "dispatch/gather gates vs the committed baseline")
     ap.add_argument("--json", default=None)
     ap.add_argument("--baseline", default=None)
     args = ap.parse_args()
-    if args.smoke:
+    if args.graph_smoke:
+        result = {"graph_study": run_graph_vs_ivf_vs_exact(
+            n_rows=3200, n_segments=8, n_queries=6)}
+    elif args.smoke:
         result = {"fused_vs_staged": run_fused_vs_staged(
             n_rows=3200, n_segments=8, batch=8, n_batches=1)}
     else:
@@ -249,8 +400,13 @@ def main() -> None:
     if args.baseline:
         with open(args.baseline) as f:
             baseline = json.load(f)
-        failures = _check_against_baseline(
-            result["fused_vs_staged"], baseline["fused_vs_staged"])
+        failures = []
+        if "fused_vs_staged" in result:
+            failures += _check_against_baseline(
+                result["fused_vs_staged"], baseline["fused_vs_staged"])
+        if "graph_study" in result:
+            failures += _check_graph_baseline(
+                result["graph_study"], baseline["graph_study"])
         if failures:
             for msg in failures:
                 print(f"SMOKE FAIL: {msg}", file=sys.stderr)

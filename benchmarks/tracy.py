@@ -84,12 +84,19 @@ class TracyData:
 
 
 def build_store(cfg: TracyConfig,
-                vector_index: IndexKind = IndexKind.IVF
+                vector_index: IndexKind = IndexKind.IVF,
+                quantize: bool = True
                 ) -> Tuple[LSMStore, TracyData]:
+    """``quantize=False`` skips the PQ residence tier — the graph study
+    uses it so the proximity-graph dispatch competes against the exact
+    scan and IVF probe alone (a store operator picks ONE approximate
+    residence per column; pricing both on one store is a cost-model
+    exercise, not the serving configuration)."""
     data = TracyData(cfg)
     store = LSMStore(tweet_schema(cfg.dim, vector_index),
                      LSMConfig(flush_rows=cfg.flush_rows,
-                               fanout=cfg.fanout, pq_m=cfg.pq_m))
+                               fanout=cfg.fanout, pq_m=cfg.pq_m,
+                               quantize_vectors=quantize))
     done = 0
     while done < cfg.n_rows:
         # never out-batch the flush threshold: small flush_rows configs
@@ -196,3 +203,37 @@ def make_templates(data: TracyData):
     search = [t1, t2, t3, t4, t5, t12]
     nn = [t6, t7, t8, t9, t10, t11, t13]
     return search, nn
+
+
+def make_graph_templates(data: TracyData, recall_target=0.95):
+    """Recall-targeted analogs of the NN templates a proximity graph can
+    serve (single vector rank): t6 pure NN, t8 filtered NN and t13
+    disjunctive NN, each with the per-query ``recall_target`` that makes
+    the approximate graph dispatch admissible.  ``recall_target=None``
+    yields the exact twins (same parameter draws, default contract) for
+    ground-truth runs.  Returns ``[(name, template), ...]``."""
+    d = data
+    rt = recall_target
+
+    def g6():
+        return q.HybridQuery(ranks=[
+            q.VectorRank("embedding", d.query_vec(), 1.0)], k=10,
+            recall_target=rt)
+
+    def g8():
+        lo = float(d.rng.uniform(0, 800))
+        return q.HybridQuery(
+            where=q.Range("time", lo, lo + 200),
+            ranks=[q.VectorRank("embedding", d.query_vec(), 1.0)], k=10,
+            recall_target=rt)
+
+    def g13():
+        lo = float(d.rng.uniform(0, 800))
+        return q.HybridQuery(
+            where=q.Or(q.Range("time", lo, lo + 200),
+                       q.TextContains("content",
+                                      TOPICS[d.rng.integers(0, 10)])),
+            ranks=[q.VectorRank("embedding", d.query_vec(), 1.0)], k=10,
+            recall_target=rt)
+
+    return [("g6", g6), ("g8", g8), ("g13", g13)]

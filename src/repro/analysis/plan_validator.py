@@ -20,6 +20,9 @@ Contracts checked:
   budget);
 - quantized dispatch: additionally a vector rank, ``pq_m > 0`` and a
   refine ladder whose ``refine * k`` survivor set still fits ``KMAX``;
+- graph dispatch: additionally a vector rank, positive out-degree and
+  hop count, ``k <= beam <= KMAX`` (the beam survivors are the re-rank
+  candidate set), and never combined with the quantized dispatch;
 - the operator tree finishes candidates in visibility order: top-k
   truncation happens ABOVE the memtable overlay, which sits ABOVE
   visibility resolution (TopKMerge -> MemtableOverlay ->
@@ -89,6 +92,10 @@ def _check_dispatch(plan, problems: List[str]) -> None:
         if plan.quantized and not isinstance(r, q.VectorRank):
             problems.append("quantized dispatch requires a vector rank "
                             "(ADC tables are per-subspace codebooks)")
+        if getattr(plan, "graph", False) and \
+                not isinstance(r, q.VectorRank):
+            problems.append("graph dispatch requires a vector rank "
+                            "(the CSR graph is a vector proximity graph)")
     if not 0 < plan.k <= kmax:
         problems.append(
             f"fused dispatch with k={plan.k} outside (0, KMAX={kmax}] — "
@@ -104,6 +111,22 @@ def _check_dispatch(plan, problems: List[str]) -> None:
             problems.append(
                 f"quantized survivor set refine*k={plan.refine * plan.k} "
                 f"exceeds KMAX={kmax}")
+    if getattr(plan, "graph", False):
+        if plan.quantized:
+            problems.append(
+                "graph and quantized dispatch on one plan — the executor "
+                "groups by a single candidate-generation strategy")
+        if plan.graph_r <= 0:
+            problems.append(f"graph dispatch with R={plan.graph_r}")
+        if plan.graph_hops <= 0:
+            problems.append(
+                f"graph dispatch with hops={plan.graph_hops} — the "
+                f"traversal would never leave the entry points")
+        if not plan.k <= plan.graph_beam <= kmax:
+            problems.append(
+                f"graph beam={plan.graph_beam} outside [k={plan.k}, "
+                f"KMAX={kmax}] — the beam survivors are the re-rank "
+                f"candidate set")
 
 
 def _check_tree(plan, problems: List[str]) -> None:
@@ -158,10 +181,10 @@ def validate_plan(plan) -> None:
             problems.append(f"NN kind {kind!r} with no ranks")
         if plan.k <= 0:
             problems.append(f"NN kind {kind!r} with k={plan.k}")
-    if kind in SEARCH_KINDS and (plan.fused or plan.quantized):
+    if kind in SEARCH_KINDS and (plan.fused or plan.quantized or
+                                 getattr(plan, "graph", False)):
         problems.append(
-            f"search kind {kind!r} carries a "
-            f"{'quantized' if plan.quantized else 'fused'} dispatch — "
+            f"search kind {kind!r} carries a scan dispatch — "
             f"there is no scan->top-k to fuse")
 
     if kind in UNION_KINDS:
@@ -188,7 +211,7 @@ def validate_plan(plan) -> None:
             f"predicate(s) in both indexed and residual: {overlap} — "
             f"selectivity is charged twice and NOT probes are unsound")
 
-    if plan.fused or plan.quantized:
+    if plan.fused or plan.quantized or getattr(plan, "graph", False):
         _check_dispatch(plan, problems)
 
     _check_tree(plan, problems)

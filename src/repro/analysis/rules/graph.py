@@ -1,0 +1,129 @@
+"""Graph-kernel contract rules (family: graph).
+
+The CSR graph index pads every fixed-degree neighbor row with -1
+(``core/index/graph.py``), and jnp gathers clamp negative indices instead
+of failing — an unguarded ``jnp.take(x, cand)`` over raw neighbor ids
+silently reads row 0 (or row n-1) for every padding lane and corrupts
+distances without an error anywhere.  Every kernel that consumes a CSR
+therefore masks ``cand >= 0`` (or ``< 0``) BEFORE any gather keyed by the
+candidate ids; this rule makes that convention machine-checked.
+
+Detection is function-scoped dataflow-lite: a name is *neighbor-derived*
+if it matches the neighbor-array naming convention or is assigned from an
+expression that uses a neighbor-derived name; it is *guarded* if it (or a
+name in its definition chain) appears in a ``>= 0`` / ``< 0`` comparison
+in the same function.  A ``take``/``take_along_axis`` whose index uses an
+unguarded neighbor-derived name is a finding.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Set
+
+from repro.analysis.asthelpers import dotted_name, terminal_idents
+from repro.analysis.findings import Finding
+from repro.analysis.model import RepoModel
+from repro.analysis.registry import finding, rule
+
+# names that hold a CSR neighbor matrix in this codebase
+NEIGHBOR_RE = re.compile(r"(^|_)(nbr|nbrs|neighbor|neighbors|adj)(_|$|s$)")
+
+GATHER_FUNCS = ("take", "take_along_axis")
+_GUARD_OPS = (ast.GtE, ast.Lt)       # x >= 0 / x < 0 padding guards
+
+
+def _is_zero_guard(node: ast.Compare) -> Set[str]:
+    """Names guarded by this comparison when it is a `>= 0` / `< 0`
+    (or the mirrored `0 <= x` / `0 > x`) padding check."""
+    out: Set[str] = set()
+    if len(node.ops) != 1 or len(node.comparators) != 1:
+        return out
+    op, left, right = node.ops[0], node.left, node.comparators[0]
+    def const0(n):
+        return isinstance(n, ast.Constant) and n.value == 0
+    if isinstance(op, _GUARD_OPS) and const0(right):
+        out.update(t for t in terminal_idents(left))
+    elif isinstance(op, (ast.LtE, ast.Gt)) and const0(left):
+        out.update(t for t in terminal_idents(right))
+    return out
+
+
+def _function_findings(fm, fn: ast.AST) -> List[Finding]:
+    assigns: Dict[str, List[ast.AST]] = {}
+    for n in ast.walk(fn):
+        if isinstance(n, ast.Assign):
+            for tgt in n.targets:
+                for t in ast.walk(tgt):
+                    if isinstance(t, ast.Name):
+                        assigns.setdefault(t.id, []).append(n.value)
+
+    # neighbor-derived names: seed on naming convention, close over
+    # assignments (a value computed FROM neighbor ids carries the -1
+    # padding forward until a guard rewrites it)
+    derived: Set[str] = {name for name in assigns
+                         if NEIGHBOR_RE.search(name)}
+    for a in fn.args.args if hasattr(fn, "args") else []:
+        if NEIGHBOR_RE.search(a.arg):
+            derived.add(a.arg)
+    changed = True
+    while changed:
+        changed = False
+        for name, values in assigns.items():
+            if name in derived:
+                continue
+            for v in values:
+                if derived & set(terminal_idents(v)):
+                    derived.add(name)
+                    changed = True
+                    break
+
+    # guarded names: compared against 0, closed over assignments the
+    # same way (`safe = where(cand >= 0, cand, 0)` launders the guard
+    # into the new name)
+    guarded: Set[str] = set()
+    for n in ast.walk(fn):
+        if isinstance(n, ast.Compare):
+            guarded |= _is_zero_guard(n)
+    changed = True
+    while changed:
+        changed = False
+        for name, values in assigns.items():
+            if name in guarded:
+                continue
+            for v in values:
+                if guarded & set(terminal_idents(v)):
+                    guarded.add(name)
+                    changed = True
+                    break
+
+    out: List[Finding] = []
+    for n in ast.walk(fn):
+        if not (isinstance(n, ast.Call) and
+                dotted_name(n.func).split(".")[-1] in GATHER_FUNCS):
+            continue
+        if len(n.args) < 2:
+            continue
+        idx = n.args[1]
+        bad = [t for t in terminal_idents(idx)
+               if t in derived and t not in guarded]
+        for name in sorted(set(bad)):
+            out.append(finding(
+                "graph/neighbor-pad-guard", fm, n.lineno,
+                f"gather indexed by neighbor-derived `{name}` with no "
+                f">= 0 / < 0 padding guard in scope — -1 CSR padding "
+                f"clamps to row 0 and silently corrupts the gather"))
+    return out
+
+
+@rule("graph/neighbor-pad-guard", "graph",
+      "CSR-consuming kernels must guard -1 neighbor padding before gather")
+def neighbor_pad_guard(model: RepoModel) -> List[Finding]:
+    # top-level functions only: nested defs are scanned as part of their
+    # enclosing function so closure-captured guards stay visible
+    out: List[Finding] = []
+    for fm in model.scoped("kernels"):
+        for node in fm.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                out.extend(_function_findings(fm, node))
+    return out

@@ -114,10 +114,13 @@ class QueryBuilder:
     def rank(self, *terms: q.RankTerm,
              recall_target: Optional[float] = None) -> "QueryBuilder":
         """Add rank terms.  ``recall_target`` (in (0, 1]) opts the query
-        into approximate dispatch: the planner may stream the PQ code
-        column through the quantized ADC kernel and exact-re-rank the
-        survivors instead of scanning full-precision vectors.  Leaving
-        it unset (or 1.0) keeps the exact read path."""
+        into approximate dispatch: the planner prices the candidate
+        generators it has built for the rank column — the quantized ADC
+        stream over PQ codes, or a beam search over the per-segment
+        proximity graphs — against the exact scan, and exact-re-ranks
+        whichever candidate set wins, so scores stay full-precision
+        either way.  Leaving it unset (or 1.0) keeps the exact read
+        path."""
         self._ranks.extend(terms)
         if recall_target is not None:
             self._recall_target = float(recall_target)

@@ -115,7 +115,8 @@ class Executor:
                 # their query vectors into one kernel call) AND dispatch
                 # mode (fused vs staged take different operators)
                 key = ("nn", ops.rank_signature(qq.ranks), plan.fused,
-                       getattr(plan, "quantized", False)) \
+                       getattr(plan, "quantized", False),
+                       getattr(plan, "graph", False)) \
                     if qq.ranks else ("filter",)
                 groups.setdefault(key, []).append(i)
             elif plan.kind == "nra" and given[i] is None:
@@ -135,7 +136,8 @@ class Executor:
                         self.catalog, queries[i])
                     groups.setdefault(
                         ("nn", key[1], plans[i].fused,
-                         getattr(plans[i], "quantized", False)),
+                         getattr(plans[i], "quantized", False),
+                         getattr(plans[i], "graph", False)),
                         []).append(i)
             else:
                 solo.extend(idxs)

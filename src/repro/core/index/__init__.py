@@ -4,6 +4,7 @@ from __future__ import annotations
 from repro.core.index.base import (  # noqa: F401
     ExactSortedAccess, MergedSortedAccess, SecondaryIndex, SortedAccess)
 from repro.core.index.global_index import GlobalIndex, GlobalIndexSet  # noqa: F401
+from repro.core.index.graph import GraphIndex, PackedGraph, pack_graphs  # noqa: F401
 from repro.core.index.ivf import IVFIndex
 from repro.core.index.scalar import ScalarIndex
 from repro.core.index.spatial import ZOrderIndex
@@ -20,6 +21,8 @@ def default_index_factory(column: Column):
         return IVFIndex()
     if k == IndexKind.PQIVF:
         return IVFIndex(use_pq=True)
+    if k == IndexKind.GRAPH:
+        return GraphIndex()
     if k == IndexKind.ZORDER:
         return ZOrderIndex()
     if k == IndexKind.INVERTED:

@@ -255,9 +255,22 @@ class IVFIndex(SecondaryIndex):
         return min(1.0, max(1.0 / segment.n_rows, frac))
 
     def probe_cost_blocks(self, segment, predicate) -> float:
-        per_list = max(1.0, segment.n_rows / max(1, len(self.centroids))
-                       / BLOCK_ROWS)
-        return 1.0 + self.n_probe * per_list     # metadata + posting blocks
+        """Blocks touched by an n_probe-deep probe.  Priced from the
+        ACTUAL trained list sizes, not n_rows/n_lists: k-means on skewed
+        data leaves some posting lists holding most of the rows, and the
+        probe order follows query-centroid distance — worst case it
+        lands on the heaviest lists, so the conservative estimate sums
+        the n_probe LARGEST lists."""
+        if self.post_offsets is None:       # not trained yet: balanced guess
+            n_lists = len(self.centroids) if self.centroids is not None else 1
+            per_list = max(1.0, segment.n_rows / max(1, n_lists) / BLOCK_ROWS)
+            return 1.0 + self.n_probe * per_list
+        sizes = np.diff(self.post_offsets).astype(np.float64)
+        if not len(sizes):
+            return 1.0
+        top = np.sort(sizes)[::-1][:self.n_probe]
+        # every probed list costs at least one block fetch
+        return 1.0 + float(np.maximum(top / BLOCK_ROWS, 1.0).sum())
 
 
 class IVFSortedAccess(SortedAccess):

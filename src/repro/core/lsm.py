@@ -288,6 +288,7 @@ class LSMStore:
             bid, books = cached
             qc = qz.QuantizedColumn(qz.encode(vecs, books), books, bid)
         seg.quantized[name] = qc
+        seg.content_gen += 1      # invalidate packed-code cache entries
 
     def _merge_quantized(self, tier, merged, row_maps) -> None:
         """Compaction maintenance for the quantized tier: donate the
@@ -303,6 +304,7 @@ class LSMStore:
                     len(p.codes) for p in parts):
                 merged.quantized[col.name] = qz.merge_quantized(
                     parts, merged.columns[col.name], row_maps)
+                merged.content_gen += 1
             else:
                 self._encode_quantized(merged, col.name)
         with self._lock:

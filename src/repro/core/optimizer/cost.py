@@ -29,6 +29,12 @@ C_D2H_ROW = 1.0 / BLOCK_ROWS   # ship one row of distances device->host
 # quantized dispatch model (PQ-ADC candidate generation + exact re-rank)
 C_RERANK_ROW = C_VECTOR_BLOCK / BLOCK_ROWS  # gather + exact-score 1 row
 
+# graph dispatch model (CSR beam-search candidate generation + re-rank)
+C_HOP = 2.0                # one frontier expansion: neighbor gather +
+#                            distance batch + sort-network beam prune
+C_GATHER_ROW = 2.0 / BLOCK_ROWS  # random-access row gather — pricier
+#                            per row than a streamed block read
+
 
 @dataclasses.dataclass
 class PlanCost:
@@ -130,6 +136,36 @@ def quantized_dispatch_cost(catalog, passing_rows: float, k: int,
     merge_extra = blocks * code_ratio * (C_FUSED_BLOCK - C_VECTOR_BLOCK)
     rerank = C_LAUNCH + refine * k * C_RERANK_ROW
     return C_LAUNCH + k * C_D2H_ROW + merge_extra + rerank - scan_savings
+
+
+def graph_dispatch_cost(catalog, passing_rows: float, k: int, beam: int,
+                        hops: int, r_degree: int) -> float:
+    """Dispatch surcharge of the graph read path, charged (like the other
+    ``*_dispatch_cost`` terms) ON TOP of a logical plan that already paid
+    ``C_VECTOR_BLOCK`` per scanned block for a full-precision scan.  The
+    beam search never streams the column: it gathers only the rows the
+    traversal touches, so the dominant term is NEGATIVE — the whole scan
+    the logical plan assumed.  Against it: per-hop frontier expansion,
+    the gathered rows, the exact re-rank of the beam survivors, and k
+    result rows shipped back.
+
+    The gather estimate discounts the naive ``beam * R * hops``: the
+    visited bitmap dedups re-expansions, so after the opening fan-out
+    (~``beam * R / 4`` rows survive the prune) each hop contributes only
+    about half a beam of fresh rows.  Traversal cost is deliberately
+    mask-INDEPENDENT — the kernel's beam routes through predicate-
+    failing rows (dual accumulators), so a filter changes what is
+    admitted, not what is gathered.  Selectivity still decides the
+    dispatch: the scan savings shrink with the passing-row count, so
+    below the point where a pre-filtered exact scan touches fewer rows
+    than the fixed traversal, the graph prices itself out."""
+    blocks = passing_rows / BLOCK_ROWS
+    scan_savings = blocks * C_VECTOR_BLOCK
+    gathered = min(float(catalog.total_rows),
+                   beam * (r_degree / 4.0 + hops / 2.0))
+    probe = hops * C_HOP + gathered * C_GATHER_ROW
+    rerank = C_LAUNCH + beam * C_RERANK_ROW
+    return C_LAUNCH + k * C_D2H_ROW + probe + rerank - scan_savings
 
 
 def nra_cost(catalog, ranks: List, filters: List, k: int) -> PlanCost:

@@ -55,6 +55,13 @@ class Plan:
     #                                bounded; only with a recall_target)
     pq_m: int = 0                  # subquantizers of the quantized dispatch
     refine: int = 0                # exact re-rank factor (k' = refine*k)
+    graph: bool = False            # scan-NN dispatch: CSR beam-search
+    #                                candidate generation + exact re-rank
+    #                                (recall-bounded; only with a
+    #                                recall_target and per-segment graphs)
+    graph_r: int = 0               # CSR out-degree of the probed graphs
+    graph_beam: int = 0            # beam width (survivors re-ranked)
+    graph_hops: int = 0            # fixed frontier-expansion count
     root: object = None            # operator tree (operators.PhysicalOp)
 
     def operator_tree(self, catalog=None):
@@ -78,7 +85,10 @@ class Plan:
         if self._describe_cache is not None:
             return self._describe_cache
         from repro.core.operators import _pred_detail
-        if self.quantized:
+        if self.graph:
+            disp = (f" dispatch=graph(R={self.graph_r}, "
+                    f"beam={self.graph_beam}, hops={self.graph_hops})")
+        elif self.quantized:
             disp = (f" dispatch=quantized(pq m={self.pq_m}, "
                     f"refine={self.refine})")
         elif self.fused:
@@ -261,6 +271,39 @@ def _quantized_params(catalog: Catalog, query: q.HybridQuery):
     return ms.pop(), refine
 
 
+def _graph_params(catalog: Catalog, query: q.HybridQuery):
+    """(r_degree, beam, hops) when the graph dispatch is admissible for
+    this query, else None.  Requires an explicit per-query
+    ``recall_target`` below 1.0 (the default contract stays exact) and a
+    single vector rank whose column carries a built proximity graph on
+    EVERY visible segment — a segment without a graph would silently
+    fall back to scanning, voiding the cost advantage (execution still
+    checks at pack time and falls back to the exact scan, never to wrong
+    answers).  The beam ladder widens with the target: tighter recall
+    needs more survivors re-ranked, and the fixed hop count grows so the
+    traversal converges before the cut."""
+    rt = getattr(query, "recall_target", None)
+    if rt is None or rt >= 1.0:
+        return None
+    r = query.ranks[0]
+    if not isinstance(r, q.VectorRank):
+        return None
+    segs = [s for s in catalog.store.segments if s.n_rows]
+    if not segs:
+        return None
+    idxs = [s.indexes.get(r.col) for s in segs]
+    if any(ix is None or getattr(ix, "kind", None) != "graph"
+           or getattr(ix, "neighbors", None) is None for ix in idxs):
+        return None
+    r_deg = max(int(ix.R) for ix in idxs)
+    base = 2 if rt <= 0.9 else (4 if rt <= 0.95 else 8)
+    beam = min(int(fs_kernel.KMAX), max(32, base * query.k))
+    if beam < query.k:
+        return None
+    hops = 8 if rt <= 0.95 else 10
+    return r_deg, beam, hops
+
+
 def _choose_dispatch(catalog: Catalog, plan: Plan,
                      query: q.HybridQuery) -> Plan:
     """Physical dispatch choice for scan-shaped NN plans: fused packed
@@ -283,19 +326,33 @@ def _choose_dispatch(catalog: Catalog, plan: Plan,
         plan.cost += staged
         return plan
     fused = cost_lib.fused_dispatch_cost(catalog, passing, query.k)
+    gp = _graph_params(catalog, query)
     qp = _quantized_params(catalog, query)
+    quant = None
     if qp is not None:
         pq_m, refine = qp
         d = query.ranks[0].q.shape[0]
         quant = cost_lib.quantized_dispatch_cost(
             catalog, passing, query.k, refine,
             code_ratio=pq_m / (4.0 * d))
-        if quant <= fused and quant < staged:
-            plan.quantized = True
-            plan.pq_m = pq_m
-            plan.refine = refine
-            plan.cost += quant
+    if gp is not None:
+        r_deg, beam, hops = gp
+        graph = cost_lib.graph_dispatch_cost(
+            catalog, passing, query.k, beam, hops, r_deg)
+        if graph <= fused and graph < staged and \
+                (quant is None or graph <= quant):
+            plan.graph = True
+            plan.graph_r = r_deg
+            plan.graph_beam = beam
+            plan.graph_hops = hops
+            plan.cost += graph
             return plan
+    if quant is not None and quant <= fused and quant < staged:
+        plan.quantized = True
+        plan.pq_m = pq_m
+        plan.refine = refine
+        plan.cost += quant
+        return plan
     if fused < staged:
         plan.fused = True
         plan.cost += fused
@@ -337,15 +394,15 @@ def plan(catalog: Catalog, query: q.HybridQuery) -> Plan:
     if query.is_nn:
         chosen = _choose_dispatch(catalog, plan_hybrid_nn(catalog, query),
                                   query)
-        if not chosen.quantized and \
+        if not (chosen.quantized or chosen.graph) and \
                 getattr(query, "recall_target", None) is not None:
             # the logical-kind choice above compares exact-scan costs, so
-            # an index walk (nra/postfilter) can shadow the quantized
-            # scan even though the ADC pass streams ~code_ratio of the
-            # bytes; re-price the scan shape with its quantized dispatch
-            # and switch when that wins
+            # an index walk (nra/postfilter) can shadow the quantized or
+            # graph scan even though those dispatches touch a fraction
+            # of the bytes; re-price the scan shape with its recall-
+            # bounded dispatch and switch when that wins
             alt = plan_shared_scan(catalog, query)
-            if alt.quantized and alt.cost < chosen.cost:
+            if (alt.quantized or alt.graph) and alt.cost < chosen.cost:
                 chosen = alt
     else:
         chosen = plan_hybrid_search(catalog, query)

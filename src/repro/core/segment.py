@@ -57,6 +57,11 @@ class Segment:
         # quantized residence tier: col name -> quantize.QuantizedColumn
         # (PQ codes in segment row order), populated at flush/compaction
         self.quantized: Dict[str, Any] = {}
+        # bumped whenever derived per-segment content (quantized codes)
+        # is assigned after construction: pack caches key on it, because
+        # seg_id alone cannot distinguish a segment packed before its
+        # codes arrived from the same segment packed after
+        self.content_gen = 0
         # per-segment zone map (fence pointers) for the global index
         self.pk_min = int(self.pk[0]) if self.n_rows else 0
         self.pk_max = int(self.pk[-1]) if self.n_rows else 0
@@ -127,7 +132,7 @@ _pack_lock = threading.Lock()
 
 def pack_segments(segments: Sequence[Segment], col: str) -> PackedColumn:
     """Concatenate ``col`` across ``segments`` into one superbatch."""
-    key = (col,) + tuple(s.seg_id for s in segments)
+    key = (col,) + tuple((s.seg_id, s.content_gen) for s in segments)
     with _pack_lock:
         hit = _pack_cache.get(key)
         if hit is not None:
@@ -172,7 +177,8 @@ def pack_quantized(segments: Sequence[Segment],
     book_id = qcols[0].book_id
     if any(qc.book_id != book_id for qc in qcols[1:]):
         return None
-    key = ("#codes", col) + tuple(s.seg_id for s in segments)
+    key = ("#codes", col) + tuple((s.seg_id, s.content_gen)
+                                  for s in segments)
     with _pack_lock:
         hit = _pack_cache.get(key)
         if hit is not None:

@@ -127,6 +127,22 @@ class ShardedPlan:
         return self.logical.refine
 
     @property
+    def graph(self) -> bool:
+        return self.logical.graph
+
+    @property
+    def graph_r(self) -> int:
+        return self.logical.graph_r
+
+    @property
+    def graph_beam(self) -> int:
+        return self.logical.graph_beam
+
+    @property
+    def graph_hops(self) -> int:
+        return self.logical.graph_hops
+
+    @property
     def cost(self) -> float:
         return self.logical.cost
 
@@ -205,7 +221,10 @@ class ShardedExecutor:
                 est_cost=float(n * max(1, plan.k)))
         else:
             root = ops.ShardConcat([fan], detail="pk-disjoint concat")
-        if plan.quantized:
+        if plan.graph:
+            disp = (f" dispatch=graph(R={plan.graph_r}, "
+                    f"beam={plan.graph_beam}, hops={plan.graph_hops})")
+        elif plan.quantized:
             disp = (f" dispatch=quantized(pq m={plan.pq_m}, "
                     f"refine={plan.refine})")
         elif plan.fused:

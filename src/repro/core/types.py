@@ -28,6 +28,7 @@ class IndexKind(enum.Enum):
     BTREE = "btree"         # sorted scalar secondary index
     IVF = "ivf"             # vector inverted-file index
     PQIVF = "pqivf"         # IVF with product quantization
+    GRAPH = "graph"         # Vamana-style CSR proximity graph
     ZORDER = "zorder"       # spatial (local per-segment; 'hybrid' adds global)
     INVERTED = "inverted"   # text inverted index
 

@@ -1,0 +1,185 @@
+"""Pallas kernel: batched beam search over a packed CSR graph index.
+
+One launch answers a whole query batch against the STACKED per-segment
+graphs (``core/index/graph.py``): the segments' flat-array CSRs are
+concatenated with neighbor ids shifted into packed row space (the -1
+out-degree padding survives the shift), and every segment's medoid seeds
+the walk, so a single frontier explores all segments at once.
+
+Per BLOCK_Q query tile the kernel runs a fixed number of hops.  Each hop
+expands the current beam's neighbor lists (one int32 gather), drops -1
+padding and already-visited rows, scores the fresh candidates with the
+difference-form squared L2 (per-element rounding independent of the
+batch tiling, so the tiled kernel is bitwise equal to the full-batch
+oracle in ``ref.py``), and merges them into two fixed-width accumulators
+with the fused scan's ``lax.sort`` (distance, pk) comparator:
+
+  * the traversal beam keeps UNfiltered distances — greedy routing must
+    walk through rows the predicate rejects or recall collapses under
+    selective filters;
+  * the result accumulator admits only bitmap-passing rows, masking
+    rejected lanes to (+inf, SENTINEL) exactly like ``FusedScanTopK``.
+
+The visited set lives in an int32 bitmask that is also the kernel's
+revisited-output block: callers popcount it for the "candidate rows
+gathered" statistic the planner's C_GATHER_ROW term models.  Emitted
+distances are approximate only in coverage, never in value — survivors
+are re-ranked through the exact fused kernel by the operator layer.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.fused_scan import BLOCK_Q, SENTINEL
+
+
+def _graph_search_kernel(q_ref, x_ref, nbr_ref, entry_ref, mask_ref, pk_ref,
+                         out_d_ref, out_p_ref, out_i_ref, vis_ref,
+                         *, beam: int, hops: int):
+    q = q_ref[...].astype(jnp.float32)             # (BQ, d)
+    x = x_ref[...].astype(jnp.float32)             # (n, d)
+    nbrs = nbr_ref[...]                            # (n, R) int32, -1 padded
+    mask = mask_ref[...] != 0                      # (BQ, n)
+    pks = pk_ref[...][0, :]                        # (n,) int32
+    entries = entry_ref[...][0, :]                 # (E,) int32, SENTINEL pad
+    bq = q.shape[0]
+    n_rows = x.shape[0]
+    r_deg = nbrs.shape[1]
+    nw = vis_ref.shape[1]                          # visited words = n/32
+    n_ent = entries.shape[0]
+    iota_w = jax.lax.broadcasted_iota(jnp.int32, (1, 1, nw), 2)
+
+    def dists_to(safe_ids):
+        # difference-form squared L2: each output element sums only its
+        # own (q_i, x_j) pair over d, so rounding never depends on what
+        # the row is batched with (bitwise parity with the ref twin)
+        xv = jnp.take(x, safe_ids, axis=0)         # (BQ, C, d)
+        diff = xv - q[:, None, :]
+        return jnp.sum(diff * diff, axis=2)
+
+    def scatter_bits(safe_ids, live):
+        # OR each live id's bit into the per-query visited words.  A SUM
+        # implements the OR exactly: callers guarantee live ids are
+        # unique within the call and not yet visited, so every (word,
+        # bit) position is hit at most once and distinct single-bit
+        # patterns add carry-free (int32 wraparound on bit 31 included).
+        bit = jnp.where(live, jnp.int32(1) << (safe_ids & 31), 0)
+        hit = (safe_ids >> 5)[:, :, None] == iota_w
+        return jnp.sum(jnp.where(hit, bit[:, :, None], 0), axis=1)
+
+    def merge_topm(acc, cd, cp, ci):
+        md = jnp.concatenate([acc[0], cd], axis=1)
+        mp = jnp.concatenate([acc[1], cp], axis=1)
+        mi = jnp.concatenate([acc[2], ci], axis=1)
+        sd, sp, si = jax.lax.sort((md, mp, mi), dimension=1, num_keys=2)
+        return sd[:, :beam], sp[:, :beam], si[:, :beam]
+
+    # ---- seed: every segment medoid, visited from hop 0 -------------------
+    ev = jnp.broadcast_to((entries != SENTINEL)[None, :], (bq, n_ent))
+    esafe = jnp.broadcast_to(
+        jnp.where(entries != SENTINEL, entries, 0)[None, :], (bq, n_ent))
+    ed = jnp.where(ev, dists_to(esafe), jnp.inf)
+    epk = jnp.where(ev, jnp.take(pks, esafe), SENTINEL)
+    eid = jnp.where(ev, esafe, SENTINEL)
+    empty = (jnp.full((bq, beam), jnp.inf, jnp.float32),
+             jnp.full((bq, beam), SENTINEL, jnp.int32),
+             jnp.full((bq, beam), SENTINEL, jnp.int32))
+    bd, bp, bi = merge_topm(empty, ed, epk, eid)
+    epass = ev & jnp.take_along_axis(mask, esafe, axis=1)
+    rd, rp, ri = merge_topm(empty,
+                            jnp.where(epass, ed, jnp.inf),
+                            jnp.where(epass, epk, SENTINEL),
+                            jnp.where(epass, eid, SENTINEL))
+    vis = scatter_bits(esafe, ev)
+
+    def hop(_, state):
+        bd, bp, bi, rd, rp, ri, vis = state
+        fval = bi != SENTINEL
+        fsafe = jnp.where(fval, bi, 0)
+        cand = jnp.take(nbrs, fsafe, axis=0).reshape(bq, beam * r_deg)
+        # guard BEFORE any gather keyed by cand: -1 out-degree padding
+        # (and dead frontier lanes) would otherwise clamp to row 0
+        cval = (cand >= 0) & jnp.repeat(fval, r_deg, axis=1)
+        csafe = jnp.where(cval, cand, 0)
+        words = jnp.take_along_axis(vis, csafe >> 5, axis=1)
+        seen = ((words >> (csafe & 31)) & 1) != 0
+        fresh = cval & ~seen
+        cd = jnp.where(fresh, dists_to(csafe), jnp.inf)
+        cp = jnp.where(fresh, jnp.take(pks, csafe), SENTINEL)
+        ci = jnp.where(fresh, csafe, SENTINEL)
+        # in-hop dedup: one row reachable from several frontier lanes.
+        # Sort by id; repeated ids are adjacent and carry identical
+        # (d, pk) payloads, so invalidating all but the first is exact.
+        si_, sd_, sp_ = jax.lax.sort((ci, cd, cp), dimension=1, num_keys=1)
+        dup = jnp.concatenate(
+            [jnp.zeros((bq, 1), bool), si_[:, 1:] == si_[:, :-1]],
+            axis=1) & (si_ != SENTINEL)
+        uniq = (si_ != SENTINEL) & ~dup
+        usafe = jnp.where(uniq, si_, 0)
+        ud = jnp.where(uniq, sd_, jnp.inf)
+        up = jnp.where(uniq, sp_, SENTINEL)
+        ui = jnp.where(uniq, si_, SENTINEL)
+        vis = vis | scatter_bits(usafe, uniq)
+        bd, bp, bi = merge_topm((bd, bp, bi), ud, up, ui)
+        admit = uniq & jnp.take_along_axis(mask, usafe, axis=1)
+        rd, rp, ri = merge_topm((rd, rp, ri),
+                                jnp.where(admit, ud, jnp.inf),
+                                jnp.where(admit, up, SENTINEL),
+                                jnp.where(admit, ui, SENTINEL))
+        return bd, bp, bi, rd, rp, ri, vis
+
+    bd, bp, bi, rd, rp, ri, vis = jax.lax.fori_loop(
+        0, hops, hop, (bd, bp, bi, rd, rp, ri, vis))
+    del bd, bp, bi, n_rows
+    out_d_ref[...] = rd
+    out_p_ref[...] = rp
+    out_i_ref[...] = ri
+    vis_ref[...] = vis
+
+
+def graph_search_topk(q, x, neighbors, entries, mask, pks,
+                      beam: int, hops: int, interpret: bool = True):
+    """q (nq, d); x (n, d) packed vectors; neighbors (n, R) int32 CSR in
+    packed row space, -1 padded; entries (1, E) int32 seed rows, SENTINEL
+    padded; mask (nq, n) uint8 predicate bitmap; pks (1, n) int32.
+
+    Returns ((nq, beam) fp32 squared-L2 ascending, (nq, beam) int32 pks,
+    (nq, beam) int32 packed row ids, (nq, n/32) int32 visited bitmask);
+    empty result slots hold (+inf, SENTINEL, SENTINEL)."""
+    nq, d = q.shape
+    n, r_deg = neighbors.shape
+    n_ent = entries.shape[1]
+    assert nq % BLOCK_Q == 0, (nq,)
+    assert n % 32 == 0, n            # visited bitmask packs 32 rows/word
+    nw = n // 32
+    grid = (nq // BLOCK_Q,)
+    kernel = functools.partial(_graph_search_kernel, beam=beam, hops=hops)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_Q, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((n, r_deg), lambda i: (0, 0)),
+            pl.BlockSpec((1, n_ent), lambda i: (0, 0)),
+            pl.BlockSpec((BLOCK_Q, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_Q, beam), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_Q, beam), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_Q, beam), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_Q, nw), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, beam), jnp.float32),
+            jax.ShapeDtypeStruct((nq, beam), jnp.int32),
+            jax.ShapeDtypeStruct((nq, beam), jnp.int32),
+            jax.ShapeDtypeStruct((nq, nw), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, x, neighbors, entries, mask, pks)

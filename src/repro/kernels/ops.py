@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.kernels import bitmap_filter as bf_kernel
 from repro.kernels import fused_scan as fs_kernel
+from repro.kernels import graph_search as gs_kernel
 from repro.kernels import ivf_scan as ivf_kernel
 from repro.kernels import pq_adc as pq_kernel
 from repro.kernels import quantized_scan as qs_kernel
@@ -416,6 +417,143 @@ def fused_scan_topk(q: np.ndarray, x: np.ndarray, mask: np.ndarray,
     rows = keep[safe // BN] * BN + safe % BN
     rows = np.where(idx == int(fs_kernel.SENTINEL), -1, rows)
     return d2, rows.astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# graph beam search -> top-beam (candidate generation)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _jit_graph_ref(beam: int, hops: int):
+    return jax.jit(functools.partial(ref.graph_search_topk_ref,
+                                     beam=beam, hops=hops))
+
+
+def _graph_host(q, x, nbr, ent, mask, pks64, beam, hops):
+    """Host numpy beam search: same hop/dedup/comparator structure as the
+    kernel, per query.  Candidate COVERAGE can differ from the device
+    paths by float ulps at the beam margin; the operator layer's exact
+    re-rank normalizes scores either way."""
+    nq, n = len(q), len(x)
+    out_d = np.full((nq, beam), np.inf, np.float32)
+    out_r = np.full((nq, beam), -1, np.int64)
+    gathered = np.zeros(nq, np.int64)
+    for qi in range(nq):
+        qv = q[qi]
+        visited = np.zeros(n, bool)
+        visited[ent] = True
+        diff = x[ent] - qv
+        bd = (diff * diff).sum(axis=1).astype(np.float32)
+        bi = ent.copy()
+        adm = mask[qi][bi]
+        res_d, res_i = [bd[adm]], [bi[adm]]
+        order = np.lexsort((bi, pks64[bi], bd))[:beam]
+        bd, bi = bd[order], bi[order]
+        for _ in range(hops):
+            cand = nbr[bi].ravel()
+            cand = np.unique(cand[cand >= 0])
+            cand = cand[~visited[cand]]
+            if not len(cand):
+                break
+            visited[cand] = True
+            diff = x[cand] - qv
+            cd = (diff * diff).sum(axis=1).astype(np.float32)
+            adm = mask[qi][cand]
+            res_d.append(cd[adm])
+            res_i.append(cand[adm])
+            md = np.concatenate([bd, cd])
+            mi = np.concatenate([bi, cand])
+            order = np.lexsort((mi, pks64[mi], md))[:beam]
+            bd, bi = md[order], mi[order]
+        gathered[qi] = int(visited.sum())
+        rd = np.concatenate(res_d)
+        ri = np.concatenate(res_i)
+        order = np.lexsort((ri, pks64[ri], rd))[:beam]
+        out_d[qi, :len(order)] = rd[order]
+        out_r[qi, :len(order)] = ri[order]
+    _dispatched(out_d.nbytes + out_r.nbytes)
+    return out_d, out_r, gathered
+
+
+def graph_search_topk(q: np.ndarray, x: np.ndarray, neighbors: np.ndarray,
+                      entries: np.ndarray, mask: np.ndarray,
+                      pks: np.ndarray, beam: int, hops: int,
+                      use_pallas: bool = None
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Graph-index candidate generation over a packed CSR superbatch.
+
+    q (nq, d) queries; x (n, d) packed vectors; neighbors (n, R) int32
+    CSR adjacency in packed row space (-1 out-degree padding); entries
+    (e,) int32 seed rows (the per-segment medoids); mask (nq, n) bool
+    predicate bitmap; pks (n,) primary keys.  Returns (d2 (nq, beam)
+    fp32 squared-L2 ascending, rows (nq, beam) int64 packed row ids, -1
+    beyond a query's candidate count, gathered (nq,) int64 count of rows
+    whose vectors the walk touched — the sub-linear-access statistic).
+    Ties break by (distance, pk) like every scan kernel.
+
+    Distances are exact but coverage is approximate: callers re-rank the
+    survivors through ``fused_scan_topk`` with the survivor mask, so the
+    final (score, pk) results match the exact dispatch bit-for-bit
+    whenever the beam covered the true top-k.
+
+    Host-side prep pads rows to a bucketed BLOCK_N multiple (padding
+    rows are unreachable: their adjacency is all -1 and no real row
+    points at them) and queries to BLOCK_Q tiles.
+    """
+    use_pallas = USE_PALLAS if use_pallas is None else use_pallas
+    q = np.asarray(q, np.float32)
+    x = np.asarray(x, np.float32)
+    nbr = np.asarray(neighbors, np.int32)
+    mask = np.asarray(mask, bool)
+    pks64 = np.asarray(pks, np.int64).ravel()
+    nq, n = len(q), len(x)
+    beam = int(min(beam, fs_kernel.KMAX))
+    hops = int(hops)
+    empty = (np.full((nq, beam), np.inf, np.float32),
+             np.full((nq, beam), -1, np.int64),
+             np.zeros(nq, np.int64))
+    ent = np.asarray(entries, np.int64).ravel()
+    ent = ent[(ent >= 0) & (ent < n)]
+    if n == 0 or beam == 0 or len(ent) == 0 or not mask.any():
+        return empty
+    work = nq * (hops * beam * nbr.shape[1] + len(ent)) * x.shape[1]
+    if not use_pallas and work < HOST_FLOP_CUTOFF:
+        return _graph_host(q, x, nbr, ent, mask, pks64, beam, hops)
+    BQ, BN = fs_kernel.BLOCK_Q, fs_kernel.BLOCK_N
+    sent = int(fs_kernel.SENTINEL)
+    xp = _pad_bucket(_pad_to(x, BN, 0), 0, floor=BN)
+    npad = len(xp)
+    nbp = np.full((npad, nbr.shape[1]), -1, np.int32)
+    nbp[:n] = nbr
+    mp = np.zeros((nq, npad), np.uint8)
+    mp[:, :n] = mask
+    pkp = np.full(npad, sent, np.int64)
+    pkp[:n] = pks64
+    ep = np.full((1, _bucket(len(ent), floor=8)), sent, np.int32)
+    ep[0, :len(ent)] = ent
+    qp = _pad_to(q, BQ, 0)
+    mq = _pad_to(mp, BQ, 0)
+    pk32 = pkp.astype(np.int32)[None, :]
+    if use_pallas:
+        d2, _, ids, vis = gs_kernel.graph_search_topk(
+            jnp.asarray(qp), jnp.asarray(xp), jnp.asarray(nbp),
+            jnp.asarray(ep), jnp.asarray(mq), jnp.asarray(pk32),
+            beam, hops)
+        tag = "graph_search.pallas"
+    else:
+        d2, _, ids, vis = _jit_graph_ref(beam, hops)(
+            jnp.asarray(qp), jnp.asarray(xp), jnp.asarray(nbp),
+            jnp.asarray(ep), jnp.asarray(mq), jnp.asarray(pk32))
+        tag = "graph_search.ref"
+    d2 = np.asarray(d2)[:nq]
+    ids = np.asarray(ids)[:nq]
+    vis = np.asarray(vis)[:nq]
+    _dispatched(d2.nbytes + ids.nbytes + vis.nbytes, tag,
+                qp.shape + xp.shape + (beam, hops))
+    rows = np.where(ids == sent, -1, ids).astype(np.int64)
+    gathered = np.unpackbits(
+        vis.view(np.uint8), axis=1).sum(axis=1).astype(np.int64)
+    return d2, rows, gathered
 
 
 # ---------------------------------------------------------------------------

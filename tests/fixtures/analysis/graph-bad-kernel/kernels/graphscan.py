@@ -1,0 +1,29 @@
+"""Fixture: a graph beam-search kernel breaking two parity contracts —
+no oracle twin in ref.py (parity/twin-kernel fires once) and a raw
+argsort over distances in the prune (parity/raw-score-sort fires once).
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kern(x_ref, nbr_ref, o_ref):
+    x = x_ref[...]
+    nbrs = nbr_ref[...]
+    safe = jnp.where(nbrs >= 0, nbrs, 0)
+    cand = jnp.take(x, safe, axis=0)
+    d = jnp.sum(cand * cand, axis=-1)
+    order = jnp.argsort(d)          # fires: no (distance, pk) comparator
+    o_ref[...] = jnp.take_along_axis(d, order, axis=-1)
+
+
+def graph_probe(x, nbrs, interpret=True):   # fires: no graph_probe_ref
+    return pl.pallas_call(
+        _kern,
+        grid=(1,),
+        in_specs=[pl.BlockSpec(x.shape, lambda i: (0, 0)),
+                  pl.BlockSpec(nbrs.shape, lambda i: (0, 0))],
+        out_specs=[pl.BlockSpec(nbrs.shape, lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct(nbrs.shape, jnp.float32)],
+        interpret=interpret,
+    )(x, nbrs)

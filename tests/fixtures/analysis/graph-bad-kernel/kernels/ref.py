@@ -1,0 +1,6 @@
+"""Fixture ref module: carries an unrelated oracle only."""
+import jax.numpy as jnp
+
+
+def other_ref(x):
+    return jnp.asarray(x) * 2.0

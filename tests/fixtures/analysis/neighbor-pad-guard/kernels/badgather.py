@@ -1,0 +1,9 @@
+"""Fixture: CSR gather without a -1 padding guard (fires once)."""
+import jax.numpy as jnp
+
+
+def expand_frontier(x, nbrs, frontier):
+    cand = jnp.take(nbrs, frontier, axis=0)
+    # fires: cand still carries -1 padding lanes, which clamp to row 0
+    vals = jnp.take(x, cand, axis=0)
+    return vals.sum(axis=-1)

@@ -33,6 +33,10 @@ CORPUS = [
     ("pallas-call-contract", "kernel/pallas-call-contract"),
     ("grid-divisibility-guard", "kernel/grid-divisibility-guard"),
     ("kind-dispatch", "plan/kind-dispatch"),
+    ("neighbor-pad-guard", "graph/neighbor-pad-guard"),
+    # one known-bad graph kernel, two existing contracts it breaks
+    ("graph-bad-kernel", "parity/twin-kernel"),
+    ("graph-bad-kernel", "parity/raw-score-sort"),
 ]
 
 
@@ -40,7 +44,7 @@ def test_registry_has_all_families():
     rules = all_rules()
     assert len(rules) >= 8
     families = {r.family for r in rules.values()}
-    assert {"parity", "locks", "kernel", "plan"} <= families
+    assert {"parity", "locks", "kernel", "plan", "graph"} <= families
 
 
 @pytest.mark.parametrize("fixture,rule_id", CORPUS,
@@ -136,6 +140,30 @@ def test_validate_plan_rejects_quantized_refine_overflow(tracy_ex):
     plan = planner_lib.Plan(kind="full_scan_nn", ranks=[rank], k=kmax // 2,
                             fused=True, quantized=True, pq_m=8, refine=4)
     assert f"exceeds KMAX={kmax}" in _problems(plan)
+
+
+def test_validate_plan_rejects_graph_contract_breaks(tracy_ex):
+    ex, data = tracy_ex
+    kmax = int(fs_kernel.KMAX)
+    rank = q.VectorRank("embedding", data.query_vec(), 1.0)
+    base = dict(kind="full_scan_nn", ranks=[rank], k=10)
+    # beam below k: the survivors cannot cover the result set
+    plan = planner_lib.Plan(graph=True, graph_r=16, graph_beam=4,
+                            graph_hops=8, **base)
+    assert "beam" in _problems(plan)
+    # beam above KMAX
+    plan = planner_lib.Plan(graph=True, graph_r=16, graph_beam=kmax + 8,
+                            graph_hops=8, **base)
+    assert "beam" in _problems(plan)
+    # zero hops never leaves the entry points
+    plan = planner_lib.Plan(graph=True, graph_r=16, graph_beam=40,
+                            graph_hops=0, **base)
+    assert "entry points" in _problems(plan)
+    # graph + quantized are mutually exclusive dispatches
+    plan = planner_lib.Plan(graph=True, graph_r=16, graph_beam=40,
+                            graph_hops=8, quantized=True, pq_m=8,
+                            refine=2, **base)
+    assert "graph and quantized" in _problems(plan)
 
 
 def test_validate_plan_rejects_union_without_subplans():

@@ -1,0 +1,397 @@
+"""Graph ANN tier: CSR beam-search kernel parity vs the ref oracle, the
+ops wrapper contract on both backends, Vamana build/merge invariants
+(donation bound, merged-vs-rebuilt recall parity), and end-to-end
+graph-vs-exact equivalence on the TRACY workload (single-store, filtered
+and sharded).  The CI pallas-interpret job re-runs this file with
+REPRO_USE_PALLAS=1."""
+import types
+
+import numpy as np
+import pytest
+
+from benchmarks import tracy
+from repro.analysis.plan_validator import validate_plan
+from repro.core import query as q
+from repro.core.executor import Executor
+from repro.core.index.graph import GraphIndex
+from repro.core.optimizer import planner as planner_lib
+from repro.core.shards import ShardedExecutor, ShardRouter
+from repro.core.types import IndexKind
+from repro.kernels import fused_scan as fs
+from repro.kernels import graph_search as gs
+from repro.kernels import ops as kops
+
+import jax.numpy as jnp
+
+SENT = int(fs.SENTINEL)
+
+
+def _jit_ref(args, beam, hops):
+    """The oracle the ops layer actually dispatches: the JITTED ref twin
+    (eager eval can fuse float ops differently by a ulp)."""
+    return kops._jit_graph_ref(beam, hops)(*args)
+
+
+def _random_csr(n, r_deg, rng):
+    """Random adjacency shaped like a packed CSR: int32 (n, R) with a
+    sprinkling of -1 out-degree padding."""
+    nbr = rng.integers(0, n, (n, r_deg)).astype(np.int32)
+    nbr[rng.random((n, r_deg)) < 0.25] = -1
+    return nbr
+
+
+def _seg_col(vecs):
+    seg = types.SimpleNamespace(columns={"embedding": vecs},
+                                n_rows=len(vecs))
+    col = types.SimpleNamespace(name="embedding")
+    return seg, col
+
+
+def _brute_topk(vecs, qv, k):
+    d2 = ((vecs - qv) ** 2).sum(axis=1)
+    return set(np.argsort(d2)[:k].tolist())
+
+
+def _clustered(n, dim, n_clusters, rng, spread=0.3):
+    centers = rng.normal(size=(n_clusters, dim)).astype(np.float32)
+    labels = rng.integers(0, n_clusters, n)
+    return (centers[labels]
+            + spread * rng.normal(size=(n, dim))).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle parity (bitwise: same hop loop, same comparator)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nq,n,r_deg,beam", [(8, 512, 8, 32),
+                                             (8, 1024, 16, 64),
+                                             (16, 512, 4, 40)])
+@pytest.mark.parametrize("mask_kind", ["full", "partial", "one_empty"])
+def test_kernel_matches_ref(nq, n, r_deg, beam, mask_kind):
+    rng = np.random.default_rng(0)
+    d = 16
+    Q = rng.normal(size=(nq, d)).astype(np.float32)
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    nbr = _random_csr(n, r_deg, rng)
+    if mask_kind == "full":
+        mask = np.ones((nq, n), np.uint8)
+    elif mask_kind == "partial":
+        mask = (rng.random((nq, n)) < 0.3).astype(np.uint8)
+    else:           # one query admits nothing: traversal still runs
+        mask = np.ones((nq, n), np.uint8)
+        mask[0, :] = 0
+    pks = (np.arange(n, dtype=np.int32) * 7 + 3)[None, :]
+    ent = np.full((1, 8), SENT, np.int32)
+    ent[0, :5] = rng.choice(n, 5, replace=False).astype(np.int32)
+    args = (jnp.asarray(Q), jnp.asarray(X), jnp.asarray(nbr),
+            jnp.asarray(ent), jnp.asarray(mask), jnp.asarray(pks))
+    kd, kp, ki, kv = gs.graph_search_topk(*args, beam=beam, hops=4,
+                                          interpret=True)
+    rd, rp, ri, rv = _jit_ref(args, beam, 4)
+    np.testing.assert_array_equal(np.asarray(kd), np.asarray(rd))
+    np.testing.assert_array_equal(np.asarray(kp), np.asarray(rp))
+    np.testing.assert_array_equal(np.asarray(ki), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(kv), np.asarray(rv))
+    if mask_kind == "one_empty":
+        assert (np.asarray(ki)[0] == SENT).all()
+
+
+def test_kernel_entries_exceed_beam():
+    """E > beam seed sets must still work: the kernel folds ALL entries
+    through the same concat+sort merge, keeping the best `beam`."""
+    rng = np.random.default_rng(1)
+    nq, n, beam = 8, 512, 8
+    Q = rng.normal(size=(nq, 12)).astype(np.float32)
+    X = rng.normal(size=(n, 12)).astype(np.float32)
+    nbr = _random_csr(n, 8, rng)
+    mask = np.ones((nq, n), np.uint8)
+    pks = np.arange(n, dtype=np.int32)[None, :]
+    ent = np.full((1, 24), SENT, np.int32)
+    ent[0, :20] = rng.choice(n, 20, replace=False).astype(np.int32)
+    args = (jnp.asarray(Q), jnp.asarray(X), jnp.asarray(nbr),
+            jnp.asarray(ent), jnp.asarray(mask), jnp.asarray(pks))
+    kd, kp, ki, kv = gs.graph_search_topk(*args, beam=beam, hops=3,
+                                          interpret=True)
+    rd, rp, ri, rv = _jit_ref(args, beam, 3)
+    np.testing.assert_array_equal(np.asarray(kd), np.asarray(rd))
+    np.testing.assert_array_equal(np.asarray(ki), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(kv), np.asarray(rv))
+    assert (np.asarray(kd) < np.inf).all()
+
+
+# ---------------------------------------------------------------------------
+# ops wrapper contract: both device backends and the host fast path
+# ---------------------------------------------------------------------------
+
+def _check_wrapper_contract(Q, X, nbr, ent, mask, pks, beam, hops, up):
+    d2, rows, gathered = kops.graph_search_topk(
+        Q, X, nbr, ent, mask, pks, beam, hops, use_pallas=up)
+    nq = len(Q)
+    assert d2.shape == (nq, beam) and rows.shape == (nq, beam)
+    assert gathered.shape == (nq,)
+    for qi in range(nq):
+        got = rows[qi][rows[qi] >= 0]
+        # every emitted row passes the predicate and its distance is the
+        # exact squared L2 (approximate coverage, exact values)
+        assert mask[qi][got].all()
+        want = ((X[got] - Q[qi]) ** 2).sum(axis=1).astype(np.float32)
+        np.testing.assert_allclose(d2[qi][:len(got)], want,
+                                   rtol=1e-5, atol=1e-5)
+        assert (np.diff(d2[qi][:len(got)]) >= 0).all()      # ascending
+        assert np.isinf(d2[qi][len(got):]).all()
+        assert (rows[qi][len(got):] == -1).all()
+        assert gathered[qi] >= len(got)
+
+
+@pytest.mark.parametrize("use_pallas", [True, False])
+def test_ops_wrapper_backends(use_pallas, monkeypatch):
+    rng = np.random.default_rng(2)
+    nq, n, r_deg, beam = 5, 700, 8, 24
+    Q = rng.normal(size=(nq, 16)).astype(np.float32)
+    X = rng.normal(size=(n, 16)).astype(np.float32)
+    nbr = _random_csr(n, r_deg, rng)
+    ent = rng.choice(n, 6, replace=False).astype(np.int64)
+    mask = rng.random((nq, n)) < 0.5
+    mask[0, :] = True
+    pks = np.arange(n, dtype=np.int64) * 3 + 11
+    monkeypatch.setattr(kops, "HOST_FLOP_CUTOFF", 0)    # force device path
+    _check_wrapper_contract(Q, X, nbr, ent, mask, pks, beam, 6, use_pallas)
+
+
+def test_ops_wrapper_host_fast_path():
+    rng = np.random.default_rng(3)
+    nq, n = 3, 400
+    Q = rng.normal(size=(nq, 8)).astype(np.float32)
+    X = rng.normal(size=(n, 8)).astype(np.float32)
+    nbr = _random_csr(n, 8, rng)
+    ent = rng.choice(n, 4, replace=False).astype(np.int64)
+    mask = np.ones((nq, n), bool)
+    pks = np.arange(n, dtype=np.int64)
+    _check_wrapper_contract(Q, X, nbr, ent, mask, pks, 16, 4, False)
+
+
+def test_ops_wrapper_degenerate_inputs():
+    rng = np.random.default_rng(4)
+    X = rng.normal(size=(100, 8)).astype(np.float32)
+    Q = np.zeros((2, 8), np.float32)
+    nbr = _random_csr(100, 4, rng)
+    pks = np.arange(100, dtype=np.int64)
+    # all-masked bitmap, out-of-range entries, empty column
+    for up in (True, False):
+        d2, rows, g = kops.graph_search_topk(
+            Q, X, nbr, np.array([0]), np.zeros((2, 100), bool), pks,
+            8, 4, use_pallas=up)
+        assert (rows == -1).all() and np.isinf(d2).all()
+    d2, rows, g = kops.graph_search_topk(
+        Q, X, nbr, np.array([-1, 500]), np.ones((2, 100), bool), pks,
+        8, 4, use_pallas=False)
+    assert (rows == -1).all()
+    d2, rows, g = kops.graph_search_topk(
+        Q, np.zeros((0, 8), np.float32), np.zeros((0, 4), np.int32),
+        np.array([0]), np.ones((2, 0), bool), np.zeros(0, np.int64),
+        8, 4)
+    assert rows.shape == (2, 8) and (rows == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# index build + donation merge invariants
+# ---------------------------------------------------------------------------
+
+def test_build_recall_and_reachability():
+    rng = np.random.default_rng(5)
+    vecs = _clustered(600, 16, 6, rng)
+    seg, col = _seg_col(vecs)
+    idx = GraphIndex()
+    idx.build(seg, col)
+    deg = (idx.neighbors >= 0).sum(axis=1)
+    assert deg.mean() >= idx.R / 2          # refinement fills out-degree
+    assert idx._reachable().all()           # no stranded rows
+    assert len(idx.entries) > 1
+    assert ((idx.entries >= 0) & (idx.entries < 600)).all()
+    hits = total = 0
+    for _ in range(20):
+        qv = vecs[rng.integers(0, 600)] + \
+            0.1 * rng.normal(size=16).astype(np.float32)
+        _, rows, _ = idx.search(qv, 10, beam=64)
+        hits += len(set(rows.tolist()) & _brute_topk(vecs, qv, 10))
+        total += 10
+    assert hits / total >= 0.9
+
+
+def test_merge_donates_and_matches_rebuild():
+    """Compaction merges by donation: inserted_rows counts ONLY foreign
+    rows (never the donor's survivors) and recall stays within 1% of a
+    from-scratch rebuild."""
+    rng = np.random.default_rng(6)
+    sizes = [500, 400, 200]
+    parts, part_vecs = [], []
+    for si, sz in enumerate(sizes):
+        vecs = _clustered(sz, 16, 5, np.random.default_rng(40 + si))
+        seg, col = _seg_col(vecs)
+        gi = GraphIndex(seed=si)
+        gi.build(seg, col)
+        parts.append(gi)
+        part_vecs.append(vecs)
+    # compaction row maps: drop ~5% of each part, survivors keep order
+    row_maps, surv, off = [], [], 0
+    for vecs in part_vecs:
+        keep = rng.random(len(vecs)) >= 0.05
+        rmap = np.full(len(vecs), -1, np.int64)
+        rmap[keep] = off + np.arange(int(keep.sum()))
+        off += int(keep.sum())
+        row_maps.append(rmap)
+        surv.append(vecs[keep])
+    merged_vecs = np.concatenate(surv, axis=0)
+    mseg, col = _seg_col(merged_vecs)
+    gm = GraphIndex()
+    gm.merge(parts, mseg, col, row_maps)
+    donor_surv = max(int((rm >= 0).sum()) for rm in row_maps)
+    assert gm.donated_rows == donor_surv
+    assert gm.inserted_rows == len(merged_vecs) - donor_surv
+    assert gm._reachable().all()
+    rebuilt = GraphIndex()
+    rebuilt.build(mseg, col)
+    assert rebuilt.inserted_rows == len(merged_vecs)    # no donation
+    hits_m = hits_r = total = 0
+    for _ in range(30):
+        qv = merged_vecs[rng.integers(0, len(merged_vecs))] + \
+            0.1 * rng.normal(size=16).astype(np.float32)
+        want = _brute_topk(merged_vecs, qv, 10)
+        _, rm_, _ = gm.search(qv, 10, beam=64)
+        _, rr_, _ = rebuilt.search(qv, 10, beam=64)
+        hits_m += len(set(rm_.tolist()) & want)
+        hits_r += len(set(rr_.tolist()) & want)
+        total += 10
+    assert hits_m / total >= hits_r / total - 0.01
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: graph vs exact over the TRACY workload
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def graph_store():
+    # dim 128: at TRACY's embedding width the graph walk beats both the
+    # exact scan and the NRA index walk on cost, so the planner picks it
+    # unprompted (smaller dims make the exact paths too cheap to lose)
+    cfg = tracy.TracyConfig(n_rows=2400, dim=128, seed=7, flush_rows=600,
+                            fanout=64)
+    store, data = tracy.build_store(cfg, vector_index=IndexKind.GRAPH,
+                                    quantize=False)
+    return store, data
+
+
+def _results(pairs):
+    return [[(r.pk, float(r.score)) for r in rows] for rows, _ in pairs]
+
+
+def test_planner_graph_dispatch_and_explain(graph_store):
+    store, data = graph_store
+    ex = Executor(store)
+    qq = q.HybridQuery(ranks=[q.VectorRank(
+        "embedding", data.query_vec(), 1.0)], k=10, recall_target=0.95)
+    plan = planner_lib.plan(ex.catalog, qq)
+    assert plan.graph and plan.graph_r == 16
+    assert plan.k <= plan.graph_beam <= int(fs.KMAX)
+    assert plan.graph_hops > 0 and not plan.quantized
+    validate_plan(plan)                     # graph contract holds
+    text = plan.describe()
+    assert f"dispatch=graph(R=16, beam={plan.graph_beam}" in text
+    assert "GraphSearchTopK" in text
+    # no recall target (or target 1.0) keeps the exact read path
+    exact = q.HybridQuery(ranks=list(qq.ranks), k=10)
+    assert not planner_lib.plan(ex.catalog, exact).graph
+    full = q.HybridQuery(ranks=list(qq.ranks), k=10, recall_target=1.0)
+    assert not planner_lib.plan(ex.catalog, full).graph
+
+
+def test_graph_bitwise_identical_at_high_beam(graph_store):
+    """With the beam covering the true top-k, survivors re-ranked through
+    the exact fused kernel must return bitwise-identical (pk, score) to
+    the exact dispatch — on both backends (the CI pallas-interpret job
+    re-runs this file with REPRO_USE_PALLAS=1)."""
+    store, data = graph_store
+    ex = Executor(store)
+    for ti in range(2):
+        data.rng = np.random.default_rng(60 + ti)
+        qa = [q.HybridQuery(ranks=[q.VectorRank(
+            "embedding", data.query_vec(), 1.0)], k=10,
+            recall_target=0.95) for _ in range(4)]
+        data.rng = np.random.default_rng(60 + ti)
+        qb = [q.HybridQuery(ranks=[q.VectorRank(
+            "embedding", data.query_vec(), 1.0)], k=10)
+            for _ in range(4)]
+        plans = [planner_lib.plan(ex.catalog, qi) for qi in qa]
+        assert all(p.graph for p in plans)
+        for p in plans:                 # widen until top-k is covered
+            p.graph_beam = int(fs.KMAX)
+            p.graph_hops = 12
+        graph = ex.execute_many(qa, plans=plans)
+        exact = ex.execute_many(qb)
+        assert _results(graph) == _results(exact)
+        for (_, sg), (_, se) in zip(graph, exact):
+            assert "dispatch=graph" in sg.plan
+
+
+def test_graph_filtered_parity(graph_store):
+    """Filtered graph queries stay correct: the dual-accumulator kernel
+    walks through rejected rows but only admits bitmap-passing ones."""
+    store, data = graph_store
+    ex = Executor(store)
+    data.rng = np.random.default_rng(123)
+    qa = [q.HybridQuery(where=q.Range("time", 100, 600),
+                        ranks=[q.VectorRank("embedding", data.query_vec(),
+                                            1.0)],
+                        k=10, recall_target=0.95) for _ in range(4)]
+    data.rng = np.random.default_rng(123)
+    qb = [q.HybridQuery(where=q.Range("time", 100, 600),
+                        ranks=[q.VectorRank("embedding", data.query_vec(),
+                                            1.0)], k=10)
+          for _ in range(4)]
+    plans = [planner_lib.plan_shared_scan(ex.catalog, qi) for qi in qa]
+    assert all(p.graph for p in plans)
+    for p in plans:
+        p.graph_beam = int(fs.KMAX)
+        p.graph_hops = 12
+    graph = ex.execute_many(qa, plans=plans)
+    exact = ex.execute_many(qb)
+    assert _results(graph) == _results(exact)
+
+
+def test_sharded_graph_parity():
+    """Sharded scatter-gather threads the graph choice through and
+    matches the sharded exact path at high recall target."""
+    cfg = tracy.TracyConfig(n_rows=2400, dim=128, seed=11, flush_rows=600,
+                            fanout=64)
+    data = tracy.TracyData(cfg)
+    router = ShardRouter(tracy.tweet_schema(cfg.dim, IndexKind.GRAPH),
+                         tracy.LSMConfig(flush_rows=cfg.flush_rows,
+                                         fanout=cfg.fanout,
+                                         quantize_vectors=False),
+                         n_shards=2)
+    done = 0
+    while done < cfg.n_rows:
+        n = min(cfg.flush_rows, cfg.n_rows - done)
+        pks, batch = data.batch(n)
+        router.put(pks, batch)
+        done += n
+    router.flush()
+    ex = ShardedExecutor(router)
+    data.rng = np.random.default_rng(77)
+    qa = [q.HybridQuery(ranks=[q.VectorRank(
+        "embedding", data.query_vec(), 1.0)], k=10, recall_target=0.95)
+        for _ in range(4)]
+    data.rng = np.random.default_rng(77)
+    qb = [q.HybridQuery(ranks=[q.VectorRank(
+        "embedding", data.query_vec(), 1.0)], k=10) for _ in range(4)]
+    plan = ex.plan(qa[0])
+    assert plan.graph
+    assert "dispatch=graph(R=" in plan.describe()
+    logical = plan.logical
+    logical.graph_beam = int(fs.KMAX)
+    logical.graph_hops = 12
+    graph = ex.execute_many(qa, plans=[logical] * len(qa))
+    exact = ex.execute_many(qb)
+    assert _results(graph) == _results(exact)
+    for _, st in graph:
+        assert st.shards == 2

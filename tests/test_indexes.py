@@ -136,3 +136,40 @@ def test_morton_locality():
     d = np.sqrt(((pts[order][1:] - pts[order][:-1]) ** 2).sum(1))
     rand_d = np.sqrt(((pts[1:] - pts[:-1]) ** 2).sum(1))
     assert d.mean() < 0.5 * rand_d.mean()
+
+
+def test_ivf_probe_cost_prices_skewed_lists():
+    """probe_cost_blocks must use the TRAINED list sizes: on a 90/10-
+    skewed clustering the heaviest lists hold most rows, so the probe
+    estimate has to exceed the balanced n_rows/n_lists guess."""
+    from repro.core.index.ivf import IVFIndex
+    from repro.core.types import BLOCK_ROWS
+
+    rng = np.random.default_rng(0)
+    dim = 8
+    # one dominant mode with 90% of rows, the rest spread thin: k-means
+    # leaves a handful of giant posting lists
+    hot = rng.normal(0, 0.05, size=(2700, dim))
+    cold = rng.normal(0, 8.0, size=(300, dim))
+    vecs = np.concatenate([hot, cold]).astype(np.float32)
+
+    class Seg:
+        columns = {"embedding": vecs}
+        n_rows = len(vecs)
+
+    class Col:
+        name = "embedding"
+        dim = 8
+
+    idx = IVFIndex(n_probe=4)
+    idx.build(Seg(), Col())
+    sizes = np.diff(idx.post_offsets)
+    assert sizes.max() > 2 * sizes.mean()        # the skew took
+
+    cost = idx.probe_cost_blocks(Seg(), None)
+    balanced = 1.0 + idx.n_probe * max(
+        1.0, len(vecs) / len(idx.centroids) / BLOCK_ROWS)
+    top = np.sort(sizes)[::-1][:idx.n_probe]
+    expected = 1.0 + float(np.maximum(top / BLOCK_ROWS, 1.0).sum())
+    assert cost == pytest.approx(expected)
+    assert cost > balanced

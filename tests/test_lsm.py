@@ -104,3 +104,38 @@ def test_segment_block_reads():
     assert seg.n_blocks == (seg.n_rows + 127) // 128
     blk = seg.read_block("embedding", 0)
     assert blk.shape[0] <= 128
+
+
+def test_pack_cache_sees_late_quantized_codes():
+    """The pack LRU keys on (seg_id, content_gen): packing a segment's
+    codes, then re-assigning codes for the same seg_id (what a deferred
+    or repeated encode does), must NOT serve the stale cached entry."""
+    from repro.core import segment as seg_lib
+    from repro.core.lsm import LSMConfig, LSMStore
+
+    rng = np.random.default_rng(11)
+    store = LSMStore(tweet_schema(), LSMConfig(flush_rows=10**9,
+                                               quantize_vectors=True))
+    pks, batch = make_batch(rng, 200)
+    store.put(pks, batch)
+    seg = store.flush()
+    assert seg.quantized.get("embedding") is not None
+    gen0 = seg.content_gen
+    assert gen0 >= 1               # the flush encode bumped it
+
+    first = seg_lib.pack_quantized([seg], "embedding")
+    assert first is not None
+
+    # re-encode in place (same seg_id): a stale cache would return the
+    # old codes object
+    store._encode_quantized(seg, "embedding")
+    assert seg.content_gen > gen0
+    second = seg_lib.pack_quantized([seg], "embedding")
+    assert second is not first
+    np.testing.assert_array_equal(second.codes,
+                                  seg.quantized["embedding"].codes)
+
+    # fp32 pack keys the same way
+    p1 = seg_lib.pack_segments([seg], "embedding")
+    p2 = seg_lib.pack_segments([seg], "embedding")
+    assert p1 is p2                # unchanged generation still caches
