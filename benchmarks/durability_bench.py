@@ -1,0 +1,248 @@
+"""Durability study: what the WAL + manifest subsystem costs and how
+fast recovery runs.
+
+Three sections:
+
+  wal       — identical TRACY ingest with durability off (process-
+              resident store) and on (group-committed WAL + persistent
+              segments); the machine-independent ``overhead_ratio`` is
+              put-throughput(off) / put-throughput(on).
+  recovery  — ingest into a WAL-only store (flush threshold above the
+              row count), then time a cold open at X and 2X rows:
+              replay must stay linear in WAL bytes
+              (``linearity`` ~ 1.0 means perfectly proportional).
+  snapshot  — ``Database.snapshot`` -> ``Database.restore`` round-trip
+              on a sharded TRACY store; result parity is a hard gate,
+              timings are reported.
+
+CLI:  python benchmarks/durability_bench.py [--smoke] [--json PATH]
+                                            [--baseline PATH]
+With --baseline, machine-independent ratios are checked against the
+committed JSON (CI smoke job): fails if the WAL overhead ratio
+regressed by more than 2x, recovery stopped being linear in WAL bytes,
+or the snapshot round-trip loses parity.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+if __package__ in (None, ""):    # `python benchmarks/durability_bench.py`
+    sys.path.insert(
+        0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import tracy
+from repro.core import query as q
+from repro.core.api import Database
+from repro.core.lsm import LSMConfig, LSMStore
+
+DIM = 32
+
+
+def _ingest(store: LSMStore, n_rows: int, batch: int, seed: int = 0
+            ) -> Dict[str, float]:
+    """Feed TRACY batches until at least ``n_rows``; returns seconds
+    spent inside ``put`` and the actual row count (batch-aligned)."""
+    data = tracy.TracyData(tracy.TracyConfig(n_rows=0, seed=seed, dim=DIM))
+    put_s, done = 0.0, 0
+    while done < n_rows:
+        pks, b = data.batch(batch)
+        t0 = time.perf_counter()
+        store.put(pks, b)
+        put_s += time.perf_counter() - t0
+        done += batch
+    return {"put_s": put_s, "rows": float(done)}
+
+
+def run_wal_overhead(n_rows: int = 8000, batch: int = 256,
+                     flush_rows: int = 2048) -> Dict[str, float]:
+    schema = tracy.tweet_schema(DIM)
+    off = LSMStore(schema, LSMConfig(flush_rows=flush_rows))
+    off_r = _ingest(off, n_rows, batch)
+    root = tempfile.mkdtemp(prefix="durab-wal-")
+    try:
+        on = LSMStore(schema, LSMConfig(flush_rows=flush_rows, path=root))
+        on_r = _ingest(on, n_rows, batch)
+        on.close()
+        wal_bytes = sum(
+            os.path.getsize(os.path.join(on.storage.wal_dir, f))
+            for f in os.listdir(on.storage.wal_dir))
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return {"put_rows_per_s_off": off_r["rows"] / max(off_r["put_s"], 1e-9),
+            "put_rows_per_s_on": on_r["rows"] / max(on_r["put_s"], 1e-9),
+            "overhead_ratio":
+                max(on_r["put_s"], 1e-9) / max(off_r["put_s"], 1e-9),
+            "wal_bytes": float(wal_bytes)}
+
+
+def _cold_open_seconds(n_rows: int, batch: int) -> Dict[str, float]:
+    """Ingest into a WAL-only store (nothing flushed), close, and time a
+    cold open — pure manifest load + WAL replay."""
+    schema = tracy.tweet_schema(DIM)
+    root = tempfile.mkdtemp(prefix="durab-rec-")
+    try:
+        cfg = LSMConfig(flush_rows=10 ** 9, path=root)
+        st = LSMStore(schema, cfg)
+        rows = _ingest(st, n_rows, batch)["rows"]
+        st.close()
+        wal_bytes = sum(
+            os.path.getsize(os.path.join(st.storage.wal_dir, f))
+            for f in os.listdir(st.storage.wal_dir))
+        t0 = time.perf_counter()
+        rec = LSMStore(schema, cfg)
+        dt = time.perf_counter() - t0
+        assert rec.n_rows == rows
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return {"open_s": dt, "wal_bytes": float(wal_bytes),
+            "rows_per_s": rows / max(dt, 1e-9)}
+
+
+def run_recovery(n_rows: int = 6000, batch: int = 256) -> Dict[str, float]:
+    small = _cold_open_seconds(n_rows, batch)
+    big = _cold_open_seconds(2 * n_rows, batch)
+    # time growth normalized by byte growth: ~1.0 when replay is linear
+    linearity = (big["open_s"] / max(small["open_s"], 1e-9)) \
+        / (big["wal_bytes"] / max(small["wal_bytes"], 1.0))
+    return {"open_s_x": small["open_s"], "open_s_2x": big["open_s"],
+            "wal_bytes_x": small["wal_bytes"],
+            "wal_bytes_2x": big["wal_bytes"],
+            "replay_rows_per_s": big["rows_per_s"],
+            "linearity": linearity}
+
+
+def run_snapshot_restore(n_rows: int = 4000, batch: int = 256
+                         ) -> Dict[str, float]:
+    schema = tracy.tweet_schema(DIM)
+    root = tempfile.mkdtemp(prefix="durab-snap-")
+    try:
+        db = Database(schema, LSMConfig(flush_rows=1024),
+                      path=os.path.join(root, "db"), shards=2)
+        data = tracy.TracyData(tracy.TracyConfig(n_rows=0, seed=3, dim=DIM))
+        done = 0
+        while done < n_rows:
+            pks, b = data.batch(batch)
+            db.table().put(pks, b)
+            done += batch
+        rng = np.random.default_rng(9)
+        queries = [q.HybridQuery(
+            ranks=[q.VectorRank(
+                "embedding", rng.normal(size=DIM).astype(np.float32), 1.0)],
+            k=10) for _ in range(8)]
+        before = [[(r.pk, float(r.score))
+                   for r in db.table().execute(hq)[0]] for hq in queries]
+        snap = os.path.join(root, "snap")
+        t0 = time.perf_counter()
+        db.snapshot(snap)
+        snapshot_s = time.perf_counter() - t0
+        db.close()
+        t0 = time.perf_counter()
+        restored = Database.restore(snap)
+        restore_s = time.perf_counter() - t0
+        after = [[(r.pk, float(r.score))
+                  for r in restored.table().execute(hq)[0]]
+                 for hq in queries]
+        restored.close()
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return {"snapshot_s": snapshot_s, "restore_s": restore_s,
+            "rows": float(n_rows),
+            "parity_ok": float(before == after)}
+
+
+def bench_json(scale: float = 1.0) -> Dict[str, Any]:
+    return {
+        "wal": run_wal_overhead(n_rows=max(2048, int(8000 * scale))),
+        "recovery": run_recovery(n_rows=max(1536, int(6000 * scale))),
+        "snapshot": run_snapshot_restore(n_rows=max(1024,
+                                                    int(4000 * scale))),
+    }
+
+
+def csv_from_json(r: Dict[str, Any]) -> List[str]:
+    """CSV rows for benchmarks/run.py from a ``bench_json`` result."""
+    w, rec, s = r["wal"], r["recovery"], r["snapshot"]
+    return [
+        f"durability_wal_overhead,0.0,"
+        f"ratio={w['overhead_ratio']:.2f}x;"
+        f"on_rows_per_s={w['put_rows_per_s_on']:.0f}",
+        f"durability_recovery,{rec['open_s_2x'] * 1e6:.0f},"
+        f"replay_rows_per_s={rec['replay_rows_per_s']:.0f};"
+        f"linearity={rec['linearity']:.2f}",
+        f"durability_snapshot,{s['snapshot_s'] * 1e6:.0f},"
+        f"restore_us={s['restore_s'] * 1e6:.0f};"
+        f"parity={int(s['parity_ok'])}",
+    ]
+
+
+def bench(scale: float = 1.0) -> List[str]:
+    return csv_from_json(bench_json(scale))
+
+
+def check_baseline(result: Dict[str, Any], baseline: Dict[str, Any]
+                   ) -> List[str]:
+    """Machine-independent regression gate."""
+    errors = []
+    got = result["wal"]["overhead_ratio"]
+    want = baseline["wal"]["overhead_ratio"]
+    # floor of 2.0x absorbs noise when the baseline ratio is ~1 (WAL
+    # cost hides under flush + index build); the 2x-vs-baseline clause
+    # catches regressions once the ratio is genuinely above that
+    if got > max(want * 2.0, 2.0):
+        errors.append(f"WAL ingest overhead regressed >2x: {got:.2f}x "
+                      f"(baseline {want:.2f}x)")
+    if got > 10.0:
+        errors.append(f"WAL ingest overhead above the 10x ceiling: "
+                      f"{got:.2f}x")
+    lin = result["recovery"]["linearity"]
+    if lin > 2.5:
+        errors.append(f"recovery no longer linear in WAL bytes: 2x the "
+                      f"bytes took {lin:.2f}x the proportional time")
+    if not result["snapshot"]["parity_ok"]:
+        errors.append("snapshot/restore round-trip lost result parity")
+    return errors
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fast run (CI)")
+    ap.add_argument("--json", default=None,
+                    help="write structured results to PATH ('-' = stdout)")
+    ap.add_argument("--baseline", default=None,
+                    help="committed baseline JSON to check ratios against")
+    args = ap.parse_args(argv)
+    scale = 0.33 if args.smoke else args.scale
+    result = bench_json(scale)
+    text = json.dumps(result, indent=2, sort_keys=True)
+    if args.json == "-":
+        print(text)
+    elif args.json:
+        with open(args.json, "w") as f:
+            f.write(text + "\n")
+    else:
+        print(text)
+    if args.baseline:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        errors = check_baseline(result, baseline)
+        for e in errors:
+            print(f"REGRESSION: {e}", file=sys.stderr)
+        if errors:
+            return 1
+        print("baseline check passed", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

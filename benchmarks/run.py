@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV (assignment contract).
              per-row baseline and the global in-memory index (paper §1),
              mixed read/write, index merge-vs-rebuild at compaction
   mq_*     — batched execute_many vs sequential execute throughput
+  durability_* — WAL ingest overhead, recovery replay, snapshot/restore
 
 ``--scale`` shrinks/grows the workload (CPU container default 1.0).
 ``--json PATH`` additionally writes structured results for every section
@@ -23,15 +24,16 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--only", default=None,
-                    help="comma list: fig4,tab1,fig5,ingest,mq,sharded")
+                    help="comma list: fig4,tab1,fig5,ingest,mq,sharded,"
+                         "durability")
     ap.add_argument("--json", default=None,
                     help="write structured per-section results to PATH")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (continuous_bench, dynamic_workload,
-                            hybrid_latency, ingestion, multi_query,
-                            pq_study, sharded_bench)
+    from benchmarks import (continuous_bench, durability_bench,
+                            dynamic_workload, hybrid_latency, ingestion,
+                            multi_query, pq_study, sharded_bench)
     sections = [
         ("tab1", hybrid_latency),
         ("fig4", dynamic_workload),
@@ -40,6 +42,7 @@ def main() -> None:
         ("pq", pq_study),
         ("mq", multi_query),
         ("sharded", sharded_bench),
+        ("durability", durability_bench),
     ]
     structured = {}
     print("name,us_per_call,derived")

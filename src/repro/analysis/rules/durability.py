@@ -1,0 +1,69 @@
+"""Durability rules (family: durability).
+
+The publish protocol for every durable artifact in ``core/`` — manifest
+generations, segment files, the facade catalog — is write-temp, fsync,
+rename: ``os.replace`` makes the new file visible atomically, but only
+the preceding ``fsync``/``fdatasync`` guarantees the bytes being
+published are on stable storage.  A rename without the sync can publish
+a file whose content is still only in the page cache; after a crash the
+manifest names a segment (or the catalog names a manifest) whose bytes
+never made it to disk — exactly the torn state recovery is supposed to
+be immune to.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from repro.analysis.asthelpers import dotted_name
+from repro.analysis.callgraph import CallGraph
+from repro.analysis.findings import Finding
+from repro.analysis.model import RepoModel
+from repro.analysis.registry import finding, rule
+
+_RENAMES = {"os.replace", "os.rename"}
+_SYNCS = {"fsync", "fdatasync"}
+
+
+def _is_sync_call(node: ast.AST) -> bool:
+    return isinstance(node, ast.Call) and \
+        dotted_name(node.func).split(".")[-1] in _SYNCS
+
+
+def _syncing_funcs(cg: CallGraph) -> Set[str]:
+    """Functions that (transitively) reach an fsync/fdatasync call."""
+    direct = {qual for qual, info in cg.funcs.items()
+              if any(_is_sync_call(n) for n in ast.walk(info.node))}
+    return {qual for qual in cg.funcs
+            if cg.reachable([qual]) & direct}
+
+
+@rule("durability/fsync-before-publish", "durability",
+      "atomic publish renames must fsync the temp file first")
+def fsync_before_publish(model: RepoModel) -> List[Finding]:
+    out: List[Finding] = []
+    cg = CallGraph(model)
+    syncing = _syncing_funcs(cg)
+    core_files = {fm.rel for fm in model.scoped("core")}
+    for qual, info in cg.funcs.items():
+        if info.fm.rel not in core_files:
+            continue
+        for node in ast.walk(info.node):
+            if not (isinstance(node, ast.Call)
+                    and dotted_name(node.func) in _RENAMES):
+                continue
+            # satisfied by a direct fsync/fdatasync earlier in this
+            # function, or by calling (anywhere in the def chain) a
+            # helper that syncs — e.g. a shared write-and-sync routine
+            direct = any(_is_sync_call(n) and n.lineno < node.lineno
+                         for n in ast.walk(info.node))
+            via_chain = bool((cg.reachable([qual]) - {qual}) & syncing)
+            if direct or via_chain:
+                continue
+            out.append(finding(
+                "durability/fsync-before-publish", info.fm, node.lineno,
+                f"{dotted_name(node.func)} publishes a file without an "
+                f"fsync/fdatasync of its content first — a crash after "
+                f"the rename can surface a file whose bytes never left "
+                f"the page cache"))
+    return out

@@ -32,8 +32,12 @@ bitmaps with ``BitmapUnion`` (see core/optimizer/planner.py).
 """
 from __future__ import annotations
 
+import dataclasses
+import json
+import os
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
+from repro.core import manifest as manifest_lib
 from repro.core import query as q
 from repro.core.continuous import ContinuousEngine
 from repro.core.executor import Executor
@@ -215,6 +219,12 @@ class Table:
         meaningful with ``LSMConfig(pipeline=True)``)."""
         self.store.drain()
 
+    def close(self) -> None:
+        """Stop background flush workers and seal the WAL (durable
+        tables); idempotent, and a no-op beyond worker shutdown for
+        process-resident tables."""
+        self.store.close()
+
     # --------------------------------------------------------------- read
     def get(self, pk: int) -> Optional[Dict[str, Any]]:
         return self.store.get(pk)
@@ -296,19 +306,86 @@ class Database:
     continuous virtual clock.  ``Database(schema)`` creates a default
     table; ``create_table`` adds named ones.  ``Database(schema,
     shards=N)`` makes the default table a hash-partitioned N-shard LSM
-    with transparent scatter-gather execution (core/shards)."""
+    with transparent scatter-gather execution (core/shards).
+
+    ``Database(schema, path=dir)`` makes the database durable: every
+    table gets its own store directory under ``dir/tables/<name>`` (WAL
+    + segments + manifest, per shard), and the table catalog — schemas,
+    shard counts, store configs — is published atomically to
+    ``dir/db.json``.  Reopening is ``Database(path=dir)`` with no
+    schema: the catalog rebuilds every table and each store replays its
+    manifest + WAL.  ``close()`` (or the context-manager form) seals the
+    WALs; ``snapshot(dir)``/``Database.restore(dir)`` round-trip a
+    consistent on-disk copy."""
 
     def __init__(self, schema: Optional[Schema] = None,
                  cfg: Optional[LSMConfig] = None, *,
+                 path: Optional[str] = None,
                  shards: int = 1,
                  continuous_mode: str = "views",
                  view_budget_bytes: float = 64 * 2**20):
         self.continuous_mode = continuous_mode
         self.view_budget_bytes = view_budget_bytes
         self.default_shards = int(shards)
+        self.path = path
+        self._closed = False
         self._tables: Dict[str, Table] = {}
-        if schema is not None:
+        catalog = os.path.join(path, "db.json") if path else None
+        if catalog and os.path.exists(catalog):
+            if schema is not None:
+                raise ValueError(
+                    f"{path!r} already holds a database; reopen it with "
+                    "Database(path=...) alone (no schema)")
+            self._open_catalog(catalog)
+        elif schema is not None:
             self.create_table(DEFAULT_TABLE, schema, cfg)
+        elif path is not None:
+            raise FileNotFoundError(
+                f"no database at {path!r} (missing db.json); pass schema= "
+                "to create one")
+
+    # ------------------------------------------------------------- catalog
+    def _table_cfg(self, name: str, cfg: Optional[LSMConfig]) -> \
+            Optional[LSMConfig]:
+        """Thread this database's directory into a table's store config:
+        each table owns ``<path>/tables/<name>`` (shards subdivide it)."""
+        if self.path is None:
+            return cfg
+        return dataclasses.replace(
+            cfg or LSMConfig(),
+            path=os.path.join(self.path, "tables", name))
+
+    def _write_catalog(self) -> None:
+        """Publish the table catalog atomically (write-temp, fsync,
+        rename) — a crash between ``create_table`` calls leaves the
+        previous catalog intact."""
+        cat: Dict[str, Any] = {"version": 1, "tables": {}}
+        for name, t in self._tables.items():
+            if t.store.cfg.path is None:
+                continue            # adopted in-memory store: not durable
+            cfg_json = dataclasses.asdict(t.store.cfg)
+            cfg_json.pop("path", None)   # derived from the db directory
+            cat["tables"][name] = {
+                "schema": manifest_lib.schema_to_json(t.schema),
+                "shards": t.n_shards,
+                "cfg": cfg_json,
+            }
+        manifest_lib.atomic_write_json(
+            os.path.join(self.path, "db.json"), cat)
+
+    def _open_catalog(self, catalog: str) -> None:
+        with open(catalog, "r", encoding="utf-8") as f:
+            cat = json.load(f)
+        fields = {f.name for f in dataclasses.fields(LSMConfig)}
+        for name, entry in cat["tables"].items():
+            cfg = LSMConfig(**{k: v for k, v in entry["cfg"].items()
+                               if k in fields})
+            self._tables[name] = Table(
+                name, manifest_lib.schema_from_json(entry["schema"]),
+                self._table_cfg(name, cfg),
+                shards=int(entry.get("shards", 1)),
+                continuous_mode=self.continuous_mode,
+                view_budget_bytes=self.view_budget_bytes)
 
     # -------------------------------------------------------------- tables
     def create_table(self, name: str, schema: Schema,
@@ -317,10 +394,12 @@ class Database:
         if name in self._tables:
             raise ValueError(f"table {name!r} already exists")
         self._tables[name] = Table(
-            name, schema, cfg,
+            name, schema, self._table_cfg(name, cfg),
             shards=self.default_shards if shards is None else int(shards),
             continuous_mode=self.continuous_mode,
             view_budget_bytes=self.view_budget_bytes)
+        if self.path is not None:
+            self._write_catalog()
         return self._tables[name]
 
     def adopt_store(self, name: str,
@@ -375,3 +454,49 @@ class Database:
         """Tick every table's continuous engine at virtual time ``now``."""
         return {name: t.advance(now) for name, t in self._tables.items()
                 if t._engine is not None}
+
+    # ----------------------------------------------------------- durability
+    def close(self) -> None:
+        """Close every table: stop background flush workers, seal and
+        fsync the WALs.  Idempotent; the database object stays readable
+        for already-materialized state but accepts no more writes on
+        durable tables (their WALs are closed)."""
+        if self._closed:
+            return
+        self._closed = True
+        for t in self._tables.values():
+            t.close()
+
+    def __enter__(self) -> "Database":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+    def snapshot(self, path: str) -> None:
+        """Write a consistent copy of every table to ``path``: flush all
+        pending rows, save segments + manifests per store, then publish
+        the catalog.  The snapshot is itself a database directory —
+        ``Database.restore(path)`` (or ``Database(path=path)``) opens
+        it."""
+        cat: Dict[str, Any] = {"version": 1, "tables": {}}
+        for name, t in self._tables.items():
+            t.store.snapshot(os.path.join(path, "tables", name))
+            cfg_json = dataclasses.asdict(t.store.cfg)
+            cfg_json.pop("path", None)
+            cat["tables"][name] = {
+                "schema": manifest_lib.schema_to_json(t.schema),
+                "shards": t.n_shards,
+                "cfg": cfg_json,
+            }
+        manifest_lib.atomic_write_json(os.path.join(path, "db.json"), cat)
+
+    @classmethod
+    def restore(cls, path: str, **kwargs: Any) -> "Database":
+        """Open the database at ``path`` (a live directory or a
+        ``snapshot()`` output): rebuild every table from the catalog,
+        load manifests, replay WALs.  The restored database continues
+        journaling into the same directory."""
+        if not os.path.exists(os.path.join(path, "db.json")):
+            raise FileNotFoundError(f"no database catalog at {path!r}")
+        return cls(path=path, **kwargs)

@@ -29,6 +29,8 @@ from __future__ import annotations
 import threading
 from typing import List, Optional
 
+from repro.core.faults import InjectedCrash
+
 
 class FlushScheduler:
     def __init__(self, store):
@@ -124,6 +126,15 @@ class FlushScheduler:
                 self._busy = True
             try:
                 self.step()
+            except InjectedCrash:
+                # fault-injection harness: the simulated process died at
+                # a crash point — the worker thread dies with it (a real
+                # kill would take every thread), leaving the on-disk
+                # state exactly as the crash left it
+                with self._cv:
+                    self._busy = False
+                    self._cv.notify_all()
+                return
             finally:
                 with self._cv:
                     self._busy = False

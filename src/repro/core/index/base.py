@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import abc
 import heapq
-from typing import Iterator, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -160,6 +160,22 @@ class SecondaryIndex(abc.ABC):
         Z-order re-sort, centroid reuse).
         """
         self.build(merged_seg, column)
+
+    # persistence -----------------------------------------------------------
+    def to_arrays(self) -> Dict[str, np.ndarray]:
+        """Serialize the *built* state to named numpy arrays — the
+        segment file's pickle-free on-disk contract (core/segment.py
+        stores them under ``idx.<column>.<key>``). Hyperparameters
+        (n_probe, R, ...) are NOT persisted: they are serving policy and
+        come from the index factory at load time."""
+        raise NotImplementedError(f"{self.kind} is not persistable")
+
+    def from_arrays(self, arrays: Dict[str, np.ndarray],
+                    segment, column) -> None:
+        """Restore built state from ``to_arrays`` output onto a
+        factory-fresh instance. ``segment`` supplies the raw columns
+        for indexes that keep references into them (the graph's vecs)."""
+        raise NotImplementedError(f"{self.kind} is not persistable")
 
     def bitmap(self, segment, predicate) -> np.ndarray:
         raise NotImplementedError(f"{self.kind} has no bitmap access")

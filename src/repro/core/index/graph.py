@@ -344,6 +344,24 @@ class GraphIndex(SecondaryIndex):
                         indeg[m] += 1
                         break
 
+    # ------------------------------------------------------- persistence
+    def to_arrays(self):
+        """The CSR survives as-is; ``vecs`` is a reference into the
+        segment column and is re-pointed at load, never duplicated."""
+        return {"neighbors": np.asarray(self.neighbors, np.int32),
+                "entries": np.asarray(self.entries, np.int64),
+                "meta": np.asarray([self.medoid, self.R], np.int64)}
+
+    def from_arrays(self, arrays, segment, column) -> None:
+        self.neighbors = np.asarray(arrays["neighbors"], np.int32)
+        self.entries = np.asarray(arrays["entries"], np.int64)
+        self.medoid = int(arrays["meta"][0])
+        self.R = int(arrays["meta"][1])
+        self.vecs = np.asarray(segment.columns[column.name], np.float32)
+        self._built = np.ones(len(self.vecs), bool)
+        self.inserted_rows = 0
+        self.donated_rows = len(self.vecs)
+
     # ------------------------------------------------------------ reads
     def search(self, q: np.ndarray, k: int, beam: Optional[int] = None):
         """Host-side greedy beam search -> (sqrt dists, rows, blocks)."""

@@ -182,6 +182,35 @@ class IVFIndex(SecondaryIndex):
         codes = np.stack(codes, axis=1).astype(np.uint8)       # (n, m)
         self.codes = codes[self.post_rows]                     # grouped order
 
+    # ------------------------------------------------------- persistence
+    def to_arrays(self):
+        out = {"centroids": np.asarray(self.centroids, np.float32),
+               "post_rows": np.asarray(self.post_rows, np.int64),
+               "post_vecs": np.asarray(self.post_vecs, np.float32),
+               "post_offsets": np.asarray(self.post_offsets, np.int64),
+               "radii": np.asarray(
+                   getattr(self, "radii",
+                           np.zeros(len(self.centroids), np.float32)),
+                   np.float32),
+               "blocks_total": np.asarray([self.blocks_total], np.int64)}
+        if self.codes is not None:
+            out["codes"] = np.asarray(self.codes, np.uint8)
+            out["codebooks"] = np.asarray(self.codebooks, np.float32)
+        return out
+
+    def from_arrays(self, arrays, segment, column) -> None:
+        self.centroids = np.asarray(arrays["centroids"], np.float32)
+        self.post_rows = np.asarray(arrays["post_rows"], np.int64)
+        self.post_vecs = np.asarray(arrays["post_vecs"], np.float32)
+        self.post_offsets = np.asarray(arrays["post_offsets"], np.int64)
+        self.radii = np.asarray(arrays["radii"], np.float32)
+        self.blocks_total = int(arrays["blocks_total"][0])
+        if "codes" in arrays:
+            self.codes = np.asarray(arrays["codes"], np.uint8)
+            self.codebooks = np.asarray(arrays["codebooks"], np.float32)
+            self.use_pq = True
+            self.pq_m = int(self.codebooks.shape[0])
+
     # ------------------------------------------------------------- query
     def _probe_order(self, q: np.ndarray) -> np.ndarray:
         cd = kops.l2_distances(q[None, :], self.centroids)[0]

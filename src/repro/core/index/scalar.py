@@ -54,6 +54,17 @@ class ScalarIndex(SecondaryIndex):
             self.vmin = float(self.values[0])
             self.vmax = float(self.values[-1])
 
+    def to_arrays(self):
+        return {"values": np.asarray(self.values, np.float64),
+                "rows": np.asarray(self.rows, np.int64)}
+
+    def from_arrays(self, arrays, segment, column) -> None:
+        self.values = np.asarray(arrays["values"], np.float64)
+        self.rows = np.asarray(arrays["rows"], np.int64)
+        if len(self.values):
+            self.vmin = float(self.values[0])
+            self.vmax = float(self.values[-1])
+
     def bitmap(self, segment, predicate) -> np.ndarray:
         lo, hi = predicate.lo, predicate.hi
         mask = np.zeros(segment.n_rows, bool)

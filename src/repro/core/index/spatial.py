@@ -105,6 +105,18 @@ class ZOrderIndex(SecondaryIndex):
         self.points = pts[order]
         self.block_bbox = _block_bboxes(self.points)
 
+    def to_arrays(self):
+        return {"rows": np.asarray(self.rows, np.int64),
+                "points": np.asarray(self.points, np.float32),
+                "block_bbox": np.asarray(self.block_bbox, np.float32),
+                "bbox": np.asarray(self.bbox, np.float64)}
+
+    def from_arrays(self, arrays, segment, column) -> None:
+        self.rows = np.asarray(arrays["rows"], np.int64)
+        self.points = np.asarray(arrays["points"], np.float32)
+        self.block_bbox = np.asarray(arrays["block_bbox"], np.float32)
+        self.bbox = tuple(float(v) for v in arrays["bbox"])
+
     # --------------------------------------------------------------- range
     def _overlapping_blocks(self, rect) -> np.ndarray:
         if self.block_bbox is None or len(self.block_bbox) == 0:

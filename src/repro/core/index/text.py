@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.core.index.base import ExactSortedAccess, SecondaryIndex
 from repro.core.types import BLOCK_ROWS
+from repro.core.wal import pack_object_array, unpack_object_array
 
 _TOKEN_RE = re.compile(r"[a-z0-9]+")
 
@@ -85,6 +86,47 @@ class InvertedTextIndex(SecondaryIndex):
                 tfs = np.concatenate([c[1] for c in chunks])
             order = np.argsort(rows)
             self.postings[term] = (rows[order], tfs[order])
+
+    # -------------------------------------------------------- persistence
+    def to_arrays(self):
+        """Dictionary + postings flattened to flat arrays: sorted terms
+        as an offsets+utf8 blob, per-term posting ranges, concatenated
+        (row, tf) pairs."""
+        terms = sorted(self.postings)
+        term_offsets, term_blob = pack_object_array(
+            np.asarray(terms, object))
+        rows = [self.postings[t][0] for t in terms]
+        tfs = [self.postings[t][1] for t in terms]
+        post_offsets = np.zeros(len(terms) + 1, np.int64)
+        np.cumsum([len(r) for r in rows], out=post_offsets[1:])
+        return {
+            "term_blob": term_blob,
+            "term_offsets": term_offsets,
+            "post_offsets": post_offsets,
+            "post_rows": np.concatenate(rows).astype(np.int64)
+            if rows else np.zeros(0, np.int64),
+            "post_tfs": np.concatenate(tfs).astype(np.float32)
+            if tfs else np.zeros(0, np.float32),
+            "doc_len": np.asarray(
+                self.doc_len if self.doc_len is not None else [],
+                np.float32),
+            "meta": np.asarray([self.avg_len, float(self.n_docs)],
+                               np.float64),
+        }
+
+    def from_arrays(self, arrays, segment, column) -> None:
+        terms = unpack_object_array(
+            np.asarray(arrays["term_offsets"], np.int64),
+            np.asarray(arrays["term_blob"], np.uint8), as_str=True)
+        off = np.asarray(arrays["post_offsets"], np.int64)
+        rows = np.asarray(arrays["post_rows"], np.int64)
+        tfs = np.asarray(arrays["post_tfs"], np.float32)
+        self.postings = {
+            str(t): (rows[off[i]:off[i + 1]], tfs[off[i]:off[i + 1]])
+            for i, t in enumerate(terms)}
+        self.doc_len = np.asarray(arrays["doc_len"], np.float32)
+        self.avg_len = float(arrays["meta"][0])
+        self.n_docs = int(arrays["meta"][1])
 
     # ------------------------------------------------------------- access
     def bitmap(self, segment, predicate) -> np.ndarray:

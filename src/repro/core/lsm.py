@@ -17,16 +17,20 @@ core.nra driven by the optimizer.
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import manifest as manifest_lib
 from repro.core import memtable as mt
 from repro.core import segment as seg_lib
+from repro.core import wal as wal_lib
+from repro.core.faults import NO_FAULTS, FaultInjector
 from repro.core.flush import FlushScheduler
-from repro.core.types import Column, ColumnType, Schema
+from repro.core.types import Column, ColumnType, Schema, validate_batch
 
 
 @dataclasses.dataclass
@@ -42,6 +46,10 @@ class LSMConfig:
     background: bool = False      # drain on a worker thread (benchmarks)
     quantize_vectors: bool = True  # PQ residence tier for vector columns
     pq_m: int = 8                  # subquantizers (halved until d % m == 0)
+    # durability (None = process-resident store, the pre-durability mode)
+    path: Optional[str] = None    # store directory: WAL + segments + manifest
+    wal_group_records: int = 8    # group-commit every N records ...
+    wal_group_bytes: int = 1 << 20  # ... or on a record this large
 
 
 class LSMStore:
@@ -84,7 +92,180 @@ class LSMStore:
         # locked.  Lock order: never hold _lock while waiting on the
         # scheduler's condition variable.
         self._lock = threading.RLock()
+        # durability: storage dir + WAL attach (and recovery) BEFORE the
+        # scheduler exists, so a background worker never observes a
+        # half-recovered store
+        self.faults: FaultInjector = NO_FAULTS
+        self.storage: Optional[manifest_lib.StoreDir] = None
+        self.wal: Optional[wal_lib.WriteAheadLog] = None
+        self._flushed_seqno = -1   # manifest frontier: max seqno durable
+        #                            in segments (monotone; WAL GC bound)
+        self._closed = False
+        if self.cfg.path:
+            self._attach_storage(self.cfg.path)
         self.scheduler = FlushScheduler(self)
+
+    def set_faults(self, faults: FaultInjector) -> None:
+        """Wire a fault injector into every crash point this store (and
+        its WAL) passes through — test-only."""
+        self.faults = faults
+        if self.wal is not None:
+            self.wal.faults = faults
+
+    # ------------------------------------------------- durability / recovery
+    def _attach_storage(self, path: str) -> None:
+        """Recovery: load the latest manifest (segments with their
+        indexes and PQ codes), GC orphan files from crashed flushes,
+        then replay every WAL row past the durable frontier into a
+        fresh memtable — a handful of vectorized ``put_batch`` calls
+        with the original seqnos."""
+        self.storage = manifest_lib.StoreDir(path)
+        state = self.storage.load_latest()
+        tracked_to = 0
+        if state is not None:
+            tracked_to = self._load_state(state)
+        self.storage.gc_orphans(
+            [f"seg-{s.seg_id:08d}.npz" for s in self.segments])
+        self.wal = wal_lib.WriteAheadLog(
+            self.storage.wal_dir, self.cfg.wal_group_records,
+            self.cfg.wal_group_bytes, faults=self.faults)
+        # materialize before applying: sealing below rotates the WAL,
+        # which must not race the replay iterator's file walk
+        records = list(self.wal.replay())
+        for rec in records:
+            self._apply_wal_record(rec, tracked_to)
+            # re-run the live write path's seal decision after each
+            # record so recovery converges to the exact memtable/segment
+            # layout an uncrashed store fed the same batches would have
+            # (the memtable must never sit above the flush threshold —
+            # plans assume that invariant, and result parity with an
+            # uncrashed twin depends on the layout matching)
+            if len(self.memtable) >= self.cfg.flush_rows or (
+                    self.cfg.flush_bytes > 0
+                    and self.memtable.approx_bytes >= self.cfg.flush_bytes):
+                self.seal()
+        while self.sealed:
+            self._flush_sealed()
+        level = self._compactable_level()
+        while level is not None:
+            self._compact_level(level)
+            level = self._compactable_level()
+        # every replayed row is already on disk: acknowledged again
+        self.wal.durable_seqno = self._seqno - 1
+
+    def _load_state(self, state: Dict[str, Any]) -> int:
+        """Rebuild the segment set from one manifest generation; returns
+        the manifest's ``next_seqno`` (the boundary above which WAL rows
+        were never reflected in the persisted unique-pk tracking)."""
+        from repro.core import quantize as qz
+        if state["schema"] != manifest_lib.schema_to_json(self.schema):
+            raise ValueError("schema mismatch with on-disk manifest")
+        for ent in state["segments"]:
+            seg = seg_lib.load_segment(
+                self.schema,
+                os.path.join(self.storage.segments_dir, ent["file"]),
+                self._index_factory)
+            self.segments.append(seg)
+            self.global_index.on_new_segment(seg)
+        # re-key loaded PQ codes: one fresh shared book id per column, so
+        # pack_quantized's same-book gate spans loaded + future segments
+        for col in self._vector_columns():
+            loaded = [s.quantized[col.name] for s in self.segments
+                      if col.name in s.quantized]
+            if loaded:
+                bid = qz.fresh_book_id()
+                for qc in loaded:
+                    qc.book_id = bid
+                self._pq_books[col.name] = (bid, loaded[0].codebooks)
+        self._flushed_seqno = int(state["frontier"])
+        self._seqno = self._flushed_seqno + 1
+        self.unique_pks = bool(state["unique_pks"])
+        self._seen_max_pk = int(state["seen_max_pk"])
+        return int(state["next_seqno"])
+
+    def _apply_wal_record(self, rec: wal_lib.WalRecord,
+                          tracked_to: int) -> None:
+        """Re-apply one logged batch: keep the contiguous suffix of rows
+        past the durable frontier, with their original seqnos."""
+        last = rec.seqno_start + rec.n_rows - 1
+        if last <= self._flushed_seqno:
+            return
+        skip = max(0, self._flushed_seqno + 1 - rec.seqno_start)
+        pks = rec.pks[skip:]
+        start = rec.seqno_start + skip
+        if rec.rtype == wal_lib.REC_DELETE:
+            if last >= tracked_to:
+                self.unique_pks = False
+            self._seqno = self.memtable.put_batch(pks, {}, start,
+                                                  tombstone=True)
+            self.metrics["deletes"] += len(pks)
+        else:
+            tskip = max(0, tracked_to - start)
+            if tskip < len(pks):
+                self._track_unique(pks[tskip:])
+            batch = {k: v[skip:] for k, v in rec.batch.items()}
+            self._seqno = self.memtable.put_batch(pks, batch, start)
+            self.metrics["puts"] += len(pks)
+        self._mt_epoch += 1
+        self._mt_cache = None
+
+    def _durable_state(self) -> Dict[str, Any]:
+        """Manifest payload for the current segment set (caller holds
+        ``_lock``).  The frontier is monotone: compaction may drop the
+        row carrying the previous max seqno, but WAL GC already trusted
+        it, so it never moves backwards."""
+        new_max = max((int(s.seqno.max()) for s in self.segments
+                       if s.n_rows), default=-1)
+        return {"schema": manifest_lib.schema_to_json(self.schema),
+                "segments": [manifest_lib.segment_entry(s)
+                             for s in self.segments],
+                "frontier": int(max(self._flushed_seqno, new_max)),
+                "next_seqno": int(self._seqno),
+                "unique_pks": bool(self.unique_pks),
+                "seen_max_pk": int(self._seen_max_pk)}
+
+    def _publish_manifest(self) -> None:
+        """Atomically commit the segment set (caller holds ``_lock``),
+        then drop WAL files fully covered by the new frontier."""
+        state = self._durable_state()
+        self._flushed_seqno = state["frontier"]
+        self.storage.publish(state, self.faults)
+        if self.wal is not None:
+            self.wal.gc(self._flushed_seqno)
+
+    @property
+    def durable_seqno(self) -> int:
+        """Highest seqno the store acknowledges as crash-durable:
+        group-committed in the WAL or captured in a published segment.
+        In-memory stores acknowledge everything (nothing survives)."""
+        if self.wal is None:
+            return self._seqno - 1
+        return max(self.wal.durable_seqno, self._flushed_seqno)
+
+    def close(self) -> None:
+        """Idempotent shutdown: stop the background flush worker (it
+        drains queued work first), then group-commit and seal the WAL."""
+        if self._closed:
+            return
+        self._closed = True
+        self.scheduler.close()
+        with self._lock:
+            if self.wal is not None:
+                self.wal.close()
+
+    def snapshot(self, path: str) -> None:
+        """Write a self-contained copy of the store to ``path``: flush
+        everything (so the WAL side is empty), save each segment file,
+        publish a manifest.  ``Database.restore(path)`` — or any store
+        configured with ``path=...`` — opens it."""
+        self.flush()
+        sd = manifest_lib.StoreDir(path)
+        with self._lock:
+            segs = list(self.segments)
+            state = self._durable_state()
+        for s in segs:
+            seg_lib.save_segment(s, sd.segment_path(s.seg_id))
+        sd.publish(state)
 
     # ------------------------------------------------------------------ write
     def put(self, pks: Sequence[int], batch: Dict[str, Any]) -> None:
@@ -95,8 +276,16 @@ class LSMStore:
         pks = np.asarray(pks, np.int64)
         if len(pks) == 0:
             return
+        if self.wal is not None:
+            # canonicalize outside the lock so the WAL logs exactly the
+            # arrays the memtable stores (replay re-applies them as-is)
+            validate_batch(self.schema, batch, len(pks))
+            batch = {c.name: mt.as_column_array(c, batch[c.name], len(pks))
+                     for c in self.schema.columns}
         cbatch = batch
         with self._lock:
+            if self.wal is not None:
+                self.wal.append(pks, batch, self._seqno)
             self._track_unique(pks)
             self._seqno = self.memtable.put_batch(pks, batch, self._seqno)
             self._mt_epoch += 1
@@ -126,6 +315,8 @@ class LSMStore:
                 self.metrics["noop_deletes"] += len(pks)
                 return
             live = pks[exists]
+            if self.wal is not None:
+                self.wal.append(live, {}, self._seqno, tombstone=True)
             self.unique_pks = False
             self._seqno = self.memtable.put_batch(live, {}, self._seqno,
                                                   tombstone=True)
@@ -196,6 +387,11 @@ class LSMStore:
             self._mt_epoch += 1
             self._mt_cache = None
             self.metrics["seals"] += 1
+            if self.wal is not None:
+                # group-commit everything the sealed memtable holds and
+                # start a fresh file: WAL files align with flush units,
+                # so GC can drop whole files once a publish covers them
+                self.wal.rotate(self._seqno)
             return True
 
     def flush(self) -> Optional[seg_lib.Segment]:
@@ -225,6 +421,12 @@ class LSMStore:
         seg = seg_lib.Segment(self.schema, pk, seqno, tomb, cols, level=0)
         self._build_indexes(seg)
         self._quantize_segment(seg)
+        if self.storage is not None:
+            # the file must be durable BEFORE the manifest names it
+            # (durability/fsync-before-publish): save fsyncs + renames
+            seg_lib.save_segment(
+                seg, self.storage.segment_path(seg.seg_id), self.faults)
+            self.faults.crash("flush.before-publish")
         with self._lock:
             # atomic publish: readers see (old segments + sealed) or
             # (new segment, sealed popped) — never the torn middle
@@ -239,6 +441,8 @@ class LSMStore:
             seg.sort_order = None      # one-shot; don't retain 8B/row
             self.metrics["flushes"] += 1
             self.metrics["flush_s"] += time.perf_counter() - t0
+            if self.storage is not None:
+                self._publish_manifest()
         return seg
 
     def _build_indexes(self, seg: seg_lib.Segment) -> None:
@@ -341,6 +545,11 @@ class LSMStore:
             self._merge_or_rebuild_indexes(tier, merged, row_maps)
         if self.cfg.quantize_vectors:
             self._merge_quantized(tier, merged, row_maps)
+        if self.storage is not None:
+            seg_lib.save_segment(
+                merged, self.storage.segment_path(merged.seg_id),
+                self.faults)
+            self.faults.crash("compact.before-publish")
         with self._lock:
             # single-assignment swap so concurrent readers iterating
             # self.segments never observe a half-replaced tier
@@ -352,6 +561,15 @@ class LSMStore:
             self.global_index.on_new_segment(merged)
             self.metrics["compactions"] += 1
             self.metrics["compact_s"] += time.perf_counter() - t0
+            if self.storage is not None:
+                self._publish_manifest()
+                self.faults.crash("compact.after-publish")
+                # the swap is durable: the inputs are garbage now
+                for s in tier:
+                    try:
+                        os.remove(self.storage.segment_path(s.seg_id))
+                    except OSError:
+                        pass
         return merged
 
     def _merge_or_rebuild_indexes(self, tier, merged, row_maps) -> None:

@@ -45,6 +45,13 @@ PAD_CENTROID = np.float32(1e15)
 _book_ids = itertools.count(1)
 
 
+def fresh_book_id() -> int:
+    """Allocate a new shared-codebook identity (recovery re-keys loaded
+    segments' codes with one of these per column, since saved book ids
+    from a dead process mean nothing here)."""
+    return next(_book_ids)
+
+
 @dataclasses.dataclass
 class QuantizedColumn:
     """PQ residence for one segment column, in segment row order."""

@@ -9,16 +9,30 @@ the paper's "(vector, block handle) pairs" posting lists.
 from __future__ import annotations
 
 import dataclasses
+import io
 import itertools
+import os
 import threading
 from collections import OrderedDict
 from typing import Any, Dict, Optional, Sequence
 
 import numpy as np
 
-from repro.core.types import BLOCK_ROWS, Schema
+from repro.core.faults import NO_FAULTS, FaultInjector
+from repro.core.quantize import QuantizedColumn
+from repro.core.types import BLOCK_ROWS, ColumnType, Schema
+from repro.core.wal import pack_object_array, unpack_object_array
 
 _seg_counter = itertools.count()
+
+
+def bump_seg_counter(n: int) -> None:
+    """Advance the module seg-id counter to at least ``n``: freshly
+    flushed segments must never collide with loaded ones, because the
+    pack caches and the global index key on ``seg_id``."""
+    global _seg_counter
+    cur = next(_seg_counter)
+    _seg_counter = itertools.count(max(cur + 1, int(n)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -236,3 +250,110 @@ def merge_segments(schema: Schema, segments: Sequence[Segment],
         maps.append(concat_to_new[lo:lo + s.n_rows])
         lo += s.n_rows
     return merged, maps
+
+
+# ---------------------------------------------------------------------------
+# persistence: one npz-style file per segment (core/manifest.py publishes
+# the file names; a segment file is durable only once a manifest names it)
+# ---------------------------------------------------------------------------
+
+# loaded segments reuse their saved seg_id (the manifest references files
+# by it) but must not collide in the pack caches with any same-id segment
+# object from before a crash/restore in this process, so each load stamps
+# a content_gen from a range live stores never use (they count from 0)
+_load_gens = itertools.count(1_000_000)
+
+
+def _segment_arrays(seg: Segment) -> Dict[str, np.ndarray]:
+    """Flatten a segment to named arrays — no pickle anywhere: object
+    columns (TEXT/BLOB) become offsets + byte blobs, indexes serialize
+    through the ``to_arrays`` contract, PQ codes/codebooks go as-is."""
+    arrays: Dict[str, np.ndarray] = {
+        "pk": np.asarray(seg.pk, np.int64),
+        "seqno": np.asarray(seg.seqno, np.int64),
+        "tombstone": np.asarray(seg.tombstone, bool),
+        "meta": np.asarray([seg.level, seg.seg_id], np.int64)}
+    for c in seg.schema.columns:
+        arr = seg.columns[c.name]
+        if arr.dtype == object:
+            offsets, blob = pack_object_array(arr)
+            arrays[f"col.{c.name}.offsets"] = offsets
+            arrays[f"col.{c.name}.blob"] = blob
+        else:
+            arrays[f"col.{c.name}"] = arr
+    for name, qc in seg.quantized.items():
+        arrays[f"pq.{name}.codes"] = qc.codes
+        arrays[f"pq.{name}.codebooks"] = qc.codebooks
+    for name, idx in seg.indexes.items():
+        for key, val in idx.to_arrays().items():
+            arrays[f"idx.{name}.{key}"] = val
+    return arrays
+
+
+def save_segment(seg: Segment, path: str,
+                 faults: FaultInjector = NO_FAULTS) -> None:
+    """Write a segment durably: serialize in memory, write temp, fsync,
+    atomic rename. The file is invisible to recovery until a manifest
+    publish references it, so a crash here leaves only an orphan."""
+    buf = io.BytesIO()
+    np.savez(buf, **_segment_arrays(seg))
+    data = buf.getvalue()
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        if faults.should_crash("flush.segment-file"):
+            # simulate dying mid-write: a torn temp file lands on disk
+            f.write(data[:max(1, len(data) // 2)])
+            f.flush()
+            faults.crash("flush.segment-file")
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    dfd = os.open(os.path.dirname(path) or ".", os.O_RDONLY)
+    try:
+        os.fsync(dfd)
+    finally:
+        os.close(dfd)
+
+
+def load_segment(schema: Schema, path: str,
+                 index_factory=None) -> Segment:
+    """Rebuild a segment (columns, PQ codes, all index kinds) from its
+    file. Loaded PQ columns carry ``book_id=0``; the owning store remaps
+    them to a fresh shared id per column so ``pack_quantized``'s
+    same-book gate keeps working across loaded + new segments."""
+    with np.load(path, allow_pickle=False) as z:
+        arrays = {k: z[k] for k in z.files}
+    level, seg_id = (int(v) for v in arrays["meta"])
+    cols: Dict[str, np.ndarray] = {}
+    for c in schema.columns:
+        key = f"col.{c.name}"
+        if key in arrays:
+            cols[c.name] = arrays[key]
+        else:
+            cols[c.name] = unpack_object_array(
+                arrays[f"{key}.offsets"], arrays[f"{key}.blob"],
+                as_str=(c.ctype == ColumnType.TEXT))
+    seg = Segment(schema, arrays["pk"], arrays["seqno"],
+                  arrays["tombstone"].astype(bool), cols,
+                  level=level, seg_id=seg_id)
+    seg.sort_order = None            # visibility rebuilds from scratch
+    seg.content_gen = next(_load_gens)
+    for c in schema.columns:
+        ck = f"pq.{c.name}.codes"
+        if ck in arrays:
+            seg.quantized[c.name] = QuantizedColumn(
+                arrays[ck], arrays[f"pq.{c.name}.codebooks"], 0)
+    if index_factory is not None:
+        for c in schema.indexed_columns:
+            prefix = f"idx.{c.name}."
+            sub = {k[len(prefix):]: v for k, v in arrays.items()
+                   if k.startswith(prefix)}
+            if not sub:
+                continue
+            idx = index_factory(c)
+            if idx is not None:
+                idx.from_arrays(sub, seg, c)
+                seg.indexes[c.name] = idx
+    bump_seg_counter(seg_id + 1)
+    return seg

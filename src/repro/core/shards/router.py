@@ -16,6 +16,8 @@ fast path survives monotonic ingest).
 """
 from __future__ import annotations
 
+import dataclasses
+import os
 from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -57,9 +59,17 @@ class ShardRouter:
         self.schema = schema
         self.cfg = cfg or LSMConfig()
         self.n_shards = int(n_shards)
+        # durable routers give every shard its own subdirectory — each
+        # shard is a complete single-store durability domain (own WAL,
+        # own manifest), so shard recoveries are independent
+        shard_cfgs = [
+            dataclasses.replace(
+                self.cfg, path=os.path.join(self.cfg.path, f"shard-{i:04d}"))
+            if self.cfg.path else self.cfg
+            for i in range(self.n_shards)]
         self.shards: List[LSMStore] = [
-            LSMStore(schema, self.cfg, index_factory)
-            for _ in range(self.n_shards)]
+            LSMStore(schema, shard_cfgs[i], index_factory)
+            for i in range(self.n_shards)]
         self._cols = {c.name: c for c in schema.columns}
 
     # ------------------------------------------------------------ routing
@@ -137,6 +147,31 @@ class ShardRouter:
         for sh in self.shards:
             out.extend(sh.drain())
         return out
+
+    # --------------------------------------------------------- durability
+    def set_faults(self, faults, shard: int = 0) -> None:
+        """Arm a fault injector on ONE shard (crash-matrix tests kill a
+        single shard; the others keep running, as independent processes
+        would)."""
+        self.shards[int(shard)].set_faults(faults)
+
+    def durable_seqnos(self) -> List[int]:
+        """Per-shard acknowledgement frontiers (seqnos are per-shard
+        counters, so there is no meaningful global aggregate)."""
+        return [sh.durable_seqno for sh in self.shards]
+
+    def close(self) -> None:
+        """Close every shard (idempotent): stop background workers, seal
+        and fsync each WAL."""
+        for sh in self.shards:
+            sh.close()
+
+    def snapshot(self, path: str) -> None:
+        """Flush and copy every shard into ``path/shard-%04d`` — opening
+        a router with ``cfg.path`` pointing at the snapshot root (same
+        ``n_shards``) restores it."""
+        for i, sh in enumerate(self.shards):
+            sh.snapshot(os.path.join(path, f"shard-{i:04d}"))
 
     # --------------------------------------------------------------- read
     def get(self, key: int) -> Optional[Dict[str, Any]]:

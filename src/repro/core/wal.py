@@ -1,0 +1,358 @@
+"""Per-shard write-ahead log with batched group commit (Arc's
+per-worker-WAL + fdatasync design, SNIPPETS.md).
+
+The log records the ingest path's *columnar* ``put_batch`` payloads
+as-is: one record per batch holding the pk array, every column's
+canonical numpy array (or just the pks for tombstone batches), and the
+batch's starting seqno — so replay is a handful of vectorized
+``put_batch`` calls, never a per-row loop.
+
+Record codec (all little-endian)::
+
+    | magic "AWR1" | crc32 u32 | body_len u32 | body ... |
+    body = type u8 | seqno_start i64 | n_rows u32 | arrays ...
+    array = name_len u16 | name utf8 | kind u8 | payload
+      kind 0 (numeric): dtype_len u8 | dtype str | ndim u8 |
+                        dims i64*ndim | raw C-order bytes
+      kind 1 (str) / 2 (bytes): offsets i64*(n+1) | utf8/raw blob
+
+The crc32 covers the body; a short header, short body, or crc mismatch
+is a *torn tail*: ``read_records`` stops cleanly at the last good record
+and reports the good byte offset so recovery can truncate the file.  No
+record is ever half-applied and nothing after a torn record is trusted.
+
+Durability contract: ``append`` buffers through the OS file; a *group
+commit* (``flush`` + ``fdatasync``) runs every ``group_records`` records
+or ``group_bytes`` bytes, and always on ``sync()`` (seal/flush/close).
+``durable_seqno`` is the highest seqno covered by a completed commit —
+the store's acknowledgment frontier for the no-acknowledged-write-lost
+guarantee.
+
+The log is a directory of files ``wal-<start_seqno>.log``; ``rotate``
+opens a fresh file at each memtable seal so ``gc(frontier)`` can drop
+whole files once a manifest publish covers their seqno range.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import struct
+import zlib
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.faults import NO_FAULTS, FaultInjector
+from repro.core.types import ColumnType, Schema
+
+MAGIC = b"AWR1"
+_HEADER = struct.Struct("<4sII")          # magic, crc32, body_len
+_BODY_HEAD = struct.Struct("<BqI")        # type, seqno_start, n_rows
+REC_PUT = 1
+REC_DELETE = 2
+
+_KIND_NUMERIC = 0
+_KIND_STR = 1
+_KIND_BYTES = 2
+
+
+# ---------------------------------------------------------------------------
+# array (de)serialization — shared with the segment save/load format
+# ---------------------------------------------------------------------------
+
+def pack_object_array(arr: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Flatten a TEXT/BLOB object array into (offsets i64 (n+1,),
+    blob uint8) — the pickle-free on-disk form."""
+    parts = [v.encode("utf-8") if isinstance(v, str)
+             else bytes(v) for v in arr]
+    offsets = np.zeros(len(parts) + 1, np.int64)
+    np.cumsum([len(p) for p in parts], out=offsets[1:])
+    blob = np.frombuffer(b"".join(parts), np.uint8).copy() if parts \
+        else np.zeros(0, np.uint8)
+    return offsets, blob
+
+
+def unpack_object_array(offsets: np.ndarray, blob: np.ndarray,
+                        as_str: bool) -> np.ndarray:
+    raw = blob.tobytes()
+    out = np.empty(len(offsets) - 1, object)
+    for i in range(len(out)):
+        piece = raw[int(offsets[i]):int(offsets[i + 1])]
+        out[i] = piece.decode("utf-8") if as_str else piece
+    return out
+
+
+def _pack_array(name: str, arr: np.ndarray) -> bytes:
+    nm = name.encode("utf-8")
+    parts = [struct.pack("<H", len(nm)), nm]
+    if arr.dtype == object:
+        kind = _KIND_STR if (len(arr) and isinstance(arr[0], str)) or \
+            not len(arr) else _KIND_BYTES
+        offsets, blob = pack_object_array(arr)
+        parts.append(struct.pack("<BQ", kind, len(arr)))
+        parts.append(offsets.tobytes())
+        parts.append(blob.tobytes())
+    else:
+        arr = np.ascontiguousarray(arr)
+        dt = arr.dtype.str.encode()
+        parts.append(struct.pack("<BB", _KIND_NUMERIC, len(dt)))
+        parts.append(dt)
+        parts.append(struct.pack("<B", arr.ndim))
+        parts.append(struct.pack(f"<{arr.ndim}q", *arr.shape))
+        parts.append(arr.tobytes())
+    return b"".join(parts)
+
+
+def _unpack_array(buf: memoryview, off: int
+                  ) -> Tuple[str, np.ndarray, int]:
+    (nlen,) = struct.unpack_from("<H", buf, off)
+    off += 2
+    name = bytes(buf[off:off + nlen]).decode("utf-8")
+    off += nlen
+    (kind,) = struct.unpack_from("<B", buf, off)
+    off += 1
+    if kind == _KIND_NUMERIC:
+        (dlen,) = struct.unpack_from("<B", buf, off)
+        off += 1
+        dtype = np.dtype(bytes(buf[off:off + dlen]).decode())
+        off += dlen
+        (ndim,) = struct.unpack_from("<B", buf, off)
+        off += 1
+        shape = struct.unpack_from(f"<{ndim}q", buf, off)
+        off += 8 * ndim
+        nbytes = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+        arr = np.frombuffer(buf[off:off + nbytes], dtype).reshape(shape)
+        return name, arr.copy(), off + nbytes
+    (n,) = struct.unpack_from("<Q", buf, off)
+    off += 8
+    offsets = np.frombuffer(buf[off:off + 8 * (n + 1)], np.int64).copy()
+    off += 8 * (n + 1)
+    blob_len = int(offsets[-1]) if n else 0
+    blob = np.frombuffer(buf[off:off + blob_len], np.uint8)
+    return name, unpack_object_array(offsets, blob, kind == _KIND_STR), \
+        off + blob_len
+
+
+# ---------------------------------------------------------------------------
+# record codec
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class WalRecord:
+    rtype: int                       # REC_PUT / REC_DELETE
+    seqno_start: int
+    pks: np.ndarray                  # (n,) int64
+    batch: Dict[str, np.ndarray]     # empty for deletes
+
+    @property
+    def n_rows(self) -> int:
+        return len(self.pks)
+
+
+def encode_record(rtype: int, seqno_start: int, pks: np.ndarray,
+                  batch: Dict[str, np.ndarray]) -> bytes:
+    pks = np.asarray(pks, np.int64)
+    body = [_BODY_HEAD.pack(rtype, int(seqno_start), len(pks)),
+            _pack_array("_pk", pks)]
+    for name in sorted(batch):
+        body.append(_pack_array(name, np.asarray(batch[name])))
+    blob = b"".join(body)
+    return _HEADER.pack(MAGIC, zlib.crc32(blob), len(blob)) + blob
+
+
+def decode_record(buf: memoryview, off: int
+                  ) -> Optional[Tuple[WalRecord, int]]:
+    """Decode one record at ``off``; None on any torn/corrupt tail."""
+    if off + _HEADER.size > len(buf):
+        return None
+    magic, crc, blen = _HEADER.unpack_from(buf, off)
+    if magic != MAGIC or off + _HEADER.size + blen > len(buf):
+        return None
+    body = buf[off + _HEADER.size:off + _HEADER.size + blen]
+    if zlib.crc32(body) != crc:
+        return None
+    try:
+        rtype, seqno_start, n_rows = _BODY_HEAD.unpack_from(body, 0)
+        pos = _BODY_HEAD.size
+        arrays: Dict[str, np.ndarray] = {}
+        while pos < len(body):
+            name, arr, pos = _unpack_array(body, pos)
+            arrays[name] = arr
+        pks = arrays.pop("_pk")
+        if len(pks) != n_rows:
+            return None
+    except (struct.error, ValueError, KeyError, TypeError):
+        return None
+    rec = WalRecord(rtype, seqno_start, pks, arrays)
+    return rec, off + _HEADER.size + blen
+
+
+def read_records(data: bytes) -> Tuple[List[WalRecord], int]:
+    """Decode a whole log image; returns (records, good_bytes) where
+    ``good_bytes`` is the offset of the first torn/corrupt record (==
+    len(data) when the tail is clean)."""
+    buf = memoryview(data)
+    out: List[WalRecord] = []
+    off = 0
+    while off < len(buf):
+        dec = decode_record(buf, off)
+        if dec is None:
+            break
+        rec, off = dec
+        out.append(rec)
+    return out, off
+
+
+# ---------------------------------------------------------------------------
+# the log itself
+# ---------------------------------------------------------------------------
+
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+class WriteAheadLog:
+    """Group-committed per-store log over a directory of rotated files.
+
+    All mutating calls run under the owning store's lock (put/seal are
+    locked; flush-worker GC happens inside the locked manifest publish
+    window), so the log needs no lock of its own."""
+
+    def __init__(self, root: str, group_records: int = 8,
+                 group_bytes: int = 1 << 20,
+                 faults: FaultInjector = NO_FAULTS):
+        self.root = root
+        self.group_records = max(1, int(group_records))
+        self.group_bytes = max(1, int(group_bytes))
+        self.faults = faults
+        os.makedirs(root, exist_ok=True)
+        self._f = None                    # active file object
+        self._active_start = 0            # first seqno the active file holds
+        self._pending = 0                 # records since last commit
+        self._pending_seqno = -1          # highest seqno written, unsynced
+        self.durable_seqno = -1           # highest seqno covered by a commit
+        self._closed = False
+
+    # ------------------------------------------------------------ files
+    def _path(self, start_seqno: int) -> str:
+        return os.path.join(self.root, f"wal-{start_seqno:012d}.log")
+
+    def _file_starts(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.root):
+            if name.startswith("wal-") and name.endswith(".log"):
+                out.append(int(name[4:-4]))
+        return sorted(out)
+
+    def _open_active(self, start_seqno: int) -> None:
+        self._active_start = start_seqno
+        self._f = open(self._path(start_seqno), "ab")
+
+    # ----------------------------------------------------------- append
+    def append(self, pks: np.ndarray, batch: Dict[str, np.ndarray],
+               seqno_start: int, tombstone: bool = False) -> None:
+        """Log one columnar batch ahead of the memtable apply.  The
+        group-commit policy decides whether this batch's fdatasync runs
+        now or is amortized into a later append/sync."""
+        if self._f is None:
+            self._open_active(seqno_start)
+        rtype = REC_DELETE if tombstone else REC_PUT
+        data = encode_record(rtype, seqno_start, pks,
+                             {} if tombstone else batch)
+        if self.faults.should_crash("wal.append"):
+            # simulate the process dying mid-write: half a record lands
+            self._f.write(data[:max(1, len(data) // 2)])
+            self._f.flush()
+            self.faults.crash("wal.append")
+        self._f.write(data)
+        self._pending += 1
+        self._pending_seqno = int(seqno_start) + len(pks) - 1
+        if (self._pending >= self.group_records
+                or len(data) >= self.group_bytes):
+            self._commit()
+
+    def _commit(self) -> None:
+        """Group commit: push the OS buffer to stable storage and
+        advance the acknowledgment frontier."""
+        if self._f is None or self._pending == 0:
+            return
+        self._f.flush()
+        self.faults.crash("wal.commit")
+        os.fdatasync(self._f.fileno())
+        self.durable_seqno = max(self.durable_seqno, self._pending_seqno)
+        self._pending = 0
+
+    def sync(self) -> None:
+        """Force a commit (seal/flush/close call this: everything
+        appended so far becomes acknowledged)."""
+        self._commit()
+
+    # --------------------------------------------------------- rotation
+    def rotate(self, next_seqno: int) -> None:
+        """Seal the active file (sync) and start a new one whose name
+        records the first seqno it can contain — called at memtable
+        seal so file ranges align with flush units."""
+        self.sync()
+        if self._f is not None:
+            self._f.close()
+        self._open_active(int(next_seqno))
+
+    def gc(self, frontier: int) -> None:
+        """Delete non-active files whose entire seqno range is covered
+        by durable segments (every seqno < the next file's start is <=
+        ``frontier``)."""
+        starts = self._file_starts()
+        for i, start in enumerate(starts):
+            if start == self._active_start:
+                continue
+            nxt = starts[i + 1] if i + 1 < len(starts) else None
+            if nxt is not None and nxt - 1 <= frontier:
+                try:
+                    os.remove(self._path(start))
+                except OSError:
+                    pass
+
+    # --------------------------------------------------------- recovery
+    def replay(self) -> Iterator[WalRecord]:
+        """Yield every intact record across all files in seqno order,
+        truncating the first torn tail in place (later bytes/files are
+        never trusted — a record is only as durable as everything
+        logged before it)."""
+        starts = self._file_starts()
+        for i, start in enumerate(starts):
+            path = self._path(start)
+            with open(path, "rb") as f:
+                data = f.read()
+            recs, good = read_records(data)
+            yield from recs
+            if good < len(data):
+                with open(path, "r+b") as f:
+                    f.truncate(good)
+                # drop anything logged after the torn record
+                for later in starts[i + 1:]:
+                    try:
+                        os.remove(self._path(later))
+                    except OSError:
+                        pass
+                break
+        # reopen for appends at the tail file
+        if starts:
+            self._active_start = starts[-1]
+            self._f = open(self._path(starts[-1]), "ab")
+
+    def close(self) -> None:
+        """Seal the log: final group commit, then release the handle.
+        Idempotent."""
+        if self._closed:
+            return
+        self._closed = True
+        if self._f is not None:
+            self._commit()
+            os.fsync(self._f.fileno())
+            self._f.close()
+            self._f = None
+            _fsync_dir(self.root)

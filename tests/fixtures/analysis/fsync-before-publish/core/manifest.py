@@ -1,0 +1,15 @@
+"""Known-bad manifest publish: writes the temp file and renames it into
+place without ever fsyncing the content — the rename is atomic but the
+bytes it publishes may still be only in the page cache."""
+import json
+import os
+
+
+def publish(root, gen, state):
+    tmp = os.path.join(root, f"manifest-{gen:08d}.json.tmp")
+    final = os.path.join(root, f"manifest-{gen:08d}.json")
+    with open(tmp, "w") as f:
+        json.dump(state, f)
+        f.flush()
+    os.replace(tmp, final)
+    return final

@@ -34,6 +34,7 @@ CORPUS = [
     ("grid-divisibility-guard", "kernel/grid-divisibility-guard"),
     ("kind-dispatch", "plan/kind-dispatch"),
     ("neighbor-pad-guard", "graph/neighbor-pad-guard"),
+    ("fsync-before-publish", "durability/fsync-before-publish"),
     # one known-bad graph kernel, two existing contracts it breaks
     ("graph-bad-kernel", "parity/twin-kernel"),
     ("graph-bad-kernel", "parity/raw-score-sort"),
@@ -44,7 +45,8 @@ def test_registry_has_all_families():
     rules = all_rules()
     assert len(rules) >= 8
     families = {r.family for r in rules.values()}
-    assert {"parity", "locks", "kernel", "plan", "graph"} <= families
+    assert {"parity", "locks", "kernel", "plan", "graph",
+            "durability"} <= families
 
 
 @pytest.mark.parametrize("fixture,rule_id", CORPUS,

@@ -1,0 +1,358 @@
+"""Crash-recovery matrix for the durability subsystem (WAL + manifest +
+persistent segments).
+
+Every cell of the matrix kills a store at one named crash point
+(``core/faults.CRASH_POINTS``) under one flush mode, recovers from disk,
+and asserts three things against an uncrashed in-memory twin fed the
+same row prefix:
+
+  * recovery is a *prefix*: the recovered pk set is exactly
+    ``arange(n_recovered)`` — no holes, no phantoms;
+  * *no acknowledged write is lost*: every seqno the store acknowledged
+    (``durable_seqno`` after a successful put) survives recovery;
+  * *bitwise result parity*: the TRACY templates (exact, fused,
+    quantized and graph dispatches) return identical ``(pk, score)``
+    lists on the recovered store and the twin — the difference-form
+    scoring + (score, pk) tie-break parity contract holds across the
+    divergent segment layouts recovery produces.
+
+Under ``REPRO_USE_PALLAS=1`` (the CI interpret-mode sweep) the matrix is
+reduced at collection time to the inline flush mode and a crash-point
+subset, because interpreted kernels are ~100x slower.
+"""
+import os
+import tempfile
+import time
+
+import numpy as np
+import pytest
+
+from benchmarks import tracy
+from repro.core import query as q
+from repro.core import wal as wal_lib
+from repro.core.api import Database, LSMConfig
+from repro.core.executor import Executor
+from repro.core.faults import CRASH_POINTS, FaultInjector, InjectedCrash
+from repro.core.lsm import LSMStore
+from repro.core.shards import ShardedExecutor, ShardRouter
+from repro.core.types import IndexKind
+
+PALLAS = os.environ.get("REPRO_USE_PALLAS") == "1"
+MODES = ("inline",) if PALLAS else ("inline", "pipelined", "background")
+MATRIX_POINTS = CRASH_POINTS if not PALLAS else (
+    "wal.commit", "flush.before-publish", "manifest.publish",
+    "compact.after-publish")
+
+DIM = 16
+N_ROWS = 700
+BATCH = 70
+STORE_KW = dict(flush_rows=150, fanout=3, pq_m=4)
+TRACY_CFG = tracy.TracyConfig(n_rows=N_ROWS, dim=DIM, **STORE_KW)
+
+# worker-side points only occur once (or need compaction) in this
+# workload; writer-side points get after=1 so the crash lands mid-run
+AFTER = {p: (0 if p.startswith("compact.") else 1) for p in CRASH_POINTS}
+
+
+def _cfg(path=None, mode="inline", quantize=True):
+    kw = dict(STORE_KW, quantize_vectors=quantize, path=path)
+    if mode == "pipelined":
+        kw.update(pipeline=True, max_sealed=2)
+    elif mode == "background":
+        # huge stall threshold: the writer must never block waiting for
+        # a worker the injected crash already killed
+        kw.update(pipeline=True, background=True, max_sealed=1000)
+    return LSMConfig(**kw)
+
+
+def _key(rows):
+    return [(r.pk, float(r.score)) for r in rows]
+
+
+def _ingest_until_crash(store, inj, total=N_ROWS, batch=BATCH):
+    """Drive TRACY writes until the injector fires (writer-side points
+    raise out of ``put``; worker-side points in background mode are
+    polled via ``inj.crashed``).  Returns the batches fed and the last
+    acknowledgment frontier observed after a *successful* put."""
+    data = tracy.TracyData(TRACY_CFG)
+    batches, acked, done = [], -1, 0
+    try:
+        while done < total:
+            pks, cols = data.batch(min(batch, total - done))
+            batches.append((np.asarray(pks, np.int64), dict(cols)))
+            store.put(pks, cols)
+            done += len(pks)
+            acked = store.durable_seqno
+        # pipelined mode defers flush/compaction work: run the queue dry
+        # (no seal — the partial memtable must look like the twin's) so
+        # worker-side crash points are reached deterministically.  The
+        # background worker drains on its own, and waiting on one the
+        # crash already killed would hang.
+        if not store.cfg.background and not inj.crashed:
+            store.drain()
+    except InjectedCrash:
+        return batches, acked
+    deadline = time.time() + 30.0
+    while not inj.crashed and time.time() < deadline:
+        time.sleep(0.01)
+    return batches, acked
+
+
+def _twin(schema, batches, n_rows, quantize=True):
+    """Uncrashed in-memory twin: same rows, same batch boundaries,
+    truncated to the recovered prefix."""
+    twin = LSMStore(schema, _cfg(quantize=quantize))
+    fed = 0
+    for pks, cols in batches:
+        take = min(len(pks), n_rows - fed)
+        if take <= 0:
+            break
+        twin.put(pks[:take], {k: v[:take] for k, v in cols.items()})
+        fed += take
+    assert fed == n_rows
+    return twin
+
+
+def _parity_queries(quantized=True):
+    """Materialized TRACY query objects (template thunks draw from a
+    stateful rng; building them once keeps both sides identical)."""
+    d = tracy.TracyData(TRACY_CFG)
+    search, nn = tracy.make_templates(d)
+    qs = [t() for t in search + nn]
+    if quantized:
+        # opt into the approximate dispatch so the quantized ADC path
+        # (or its exact fallback pricing) runs on both sides
+        qs += [q.HybridQuery(
+            ranks=[q.VectorRank("embedding", d.query_vec(), 1.0)],
+            k=10, recall_target=0.9) for _ in range(3)]
+    return qs
+
+
+def _assert_recovery(schema, path, batches, acked, quantize=True,
+                     queries=None):
+    rec = LSMStore(schema, _cfg(path=path, quantize=quantize))
+    n_rec = rec._seqno
+    # no acknowledged write lost
+    assert n_rec > acked, f"lost acked rows: recovered {n_rec}, " \
+        f"acked through seqno {acked}"
+    # recovery is a prefix: every pk < n_rec exactly once
+    pks = np.concatenate([rec.memtable_arrays()[0]]
+                         + [s.pk for s in rec.segments])
+    assert np.array_equal(np.sort(pks), np.arange(n_rec))
+    twin = _twin(schema, batches, n_rec, quantize=quantize)
+    ex_rec, ex_twin = Executor(rec), Executor(twin)
+    for hq in (queries if queries is not None
+               else _parity_queries(quantized=quantize)):
+        a, _ = ex_rec.execute(hq)
+        b, _ = ex_twin.execute(hq)
+        assert _key(a) == _key(b), f"parity break on {hq}"
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# the matrix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("point", MATRIX_POINTS)
+def test_crash_matrix(point, mode, tmp_path):
+    schema = tracy.tweet_schema(DIM)
+    store = LSMStore(schema, _cfg(path=str(tmp_path), mode=mode))
+    inj = FaultInjector().arm(point, after=AFTER[point])
+    store.set_faults(inj)
+    batches, acked = _ingest_until_crash(store, inj)
+    assert inj.fired == point
+    _assert_recovery(schema, str(tmp_path), batches, acked)
+
+
+@pytest.mark.parametrize("point", (
+    "wal.commit", "flush.before-publish") if PALLAS else (
+    "wal.append", "wal.commit", "flush.segment-file",
+    "flush.before-publish", "manifest.publish", "compact.after-publish"))
+def test_crash_matrix_graph(point, tmp_path):
+    """Graph-index variant: CSR segment graphs must recover to the same
+    beam-search results (quantization off, so the planner prices the
+    graph dispatch)."""
+    schema = tracy.tweet_schema(DIM, IndexKind.GRAPH)
+    store = LSMStore(schema, _cfg(path=str(tmp_path), quantize=False))
+    inj = FaultInjector().arm(point, after=AFTER[point])
+    store.set_faults(inj)
+    batches, acked = _ingest_until_crash(store, inj)
+    assert inj.fired == point
+    d = tracy.TracyData(TRACY_CFG)
+    queries = [t() for _, t in tracy.make_graph_templates(
+        d, recall_target=0.9)]
+    queries += [t() for _, t in tracy.make_graph_templates(
+        d, recall_target=None)]      # exact twins of the same draws
+    _assert_recovery(schema, str(tmp_path), batches, acked,
+                     quantize=False, queries=queries)
+
+
+@pytest.mark.parametrize("point", (
+    "wal.commit", "manifest.publish") if PALLAS else (
+    "wal.append", "wal.commit", "flush.before-publish",
+    "manifest.publish"))
+def test_crash_matrix_sharded(point, tmp_path):
+    """4-shard router with the injector on shard 0 only: the other
+    shards keep acknowledging; recovery loses at most shard 0's
+    unacknowledged tail and the scatter-gather merge stays bitwise."""
+    schema = tracy.tweet_schema(DIM)
+    router = ShardRouter(schema, _cfg(path=str(tmp_path)), n_shards=4)
+    # shard 0 sees only ~1/4 of the rows: one flush, few commits — arm
+    # on the first occurrence (second for appends, so some rows land)
+    inj = FaultInjector().arm(point, after=1 if point == "wal.append" else 0)
+    router.set_faults(inj, shard=0)
+    data = tracy.TracyData(TRACY_CFG)
+    batches, acked0 = [], -1
+    try:
+        for _ in range(N_ROWS // BATCH):
+            pks, cols = data.batch(BATCH)
+            batches.append((np.asarray(pks, np.int64), dict(cols)))
+            router.put(pks, cols)
+            acked0 = router.durable_seqnos()[0]
+    except InjectedCrash:
+        pass
+    assert inj.fired == point
+
+    rec = ShardRouter(schema, _cfg(path=str(tmp_path)), n_shards=4)
+    assert rec.shards[0]._seqno > acked0
+    # global survivor set: shard 0's recovered prefix + everything the
+    # healthy shards hold
+    alive = set()
+    for sh in rec.shards:
+        alive.update(int(p) for p in sh.memtable_arrays()[0])
+        for s in sh.segments:
+            alive.update(int(p) for p in s.pk)
+    # twin: an in-memory router fed only the surviving rows, in order
+    twin = ShardRouter(schema, _cfg(), n_shards=4)
+    for pks, cols in batches:
+        mask = np.isin(pks, np.fromiter(alive, np.int64, len(alive)))
+        if mask.any():
+            twin.put(pks[mask], {k: v[mask] for k, v in cols.items()})
+    ex_rec, ex_twin = ShardedExecutor(rec), ShardedExecutor(twin)
+    for hq in _parity_queries()[:8]:
+        a, _ = ex_rec.execute(hq)
+        b, _ = ex_twin.execute(hq)
+        assert _key(a) == _key(b)
+
+
+# ---------------------------------------------------------------------------
+# WAL codec robustness (deterministic; the hypothesis fuzz lives in
+# test_wal_property.py and skips when hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+def _sample_records():
+    rng = np.random.default_rng(5)
+    recs = []
+    for i in range(4):
+        n = 3 + i
+        recs.append((wal_lib.REC_PUT, 10 * i, np.arange(n, dtype=np.int64),
+                     {"embedding": rng.normal(size=(n, 4)).astype(np.float32),
+                      "time": rng.uniform(0, 9, n),
+                      "content": np.asarray(
+                          [f"tok{j} x" for j in range(n)], object)}))
+    recs.append((wal_lib.REC_DELETE, 40,
+                 np.asarray([1, 3], np.int64), {}))
+    return recs
+
+
+def test_wal_codec_roundtrip():
+    recs = _sample_records()
+    blob = b"".join(wal_lib.encode_record(*r) for r in recs)
+    out, good = wal_lib.read_records(blob)
+    assert good == len(blob) and len(out) == len(recs)
+    for (rt, s, pks, batch), dec in zip(recs, out):
+        assert (dec.rtype, dec.seqno_start) == (rt, s)
+        assert np.array_equal(dec.pks, pks)
+        assert sorted(dec.batch) == sorted(batch)
+        for name in batch:
+            assert np.array_equal(dec.batch[name], batch[name])
+
+
+def test_wal_codec_truncation_always_clean():
+    """Cutting the log at ANY byte yields a clean prefix stop — never an
+    exception, never a half-applied record."""
+    recs = _sample_records()
+    encoded = [wal_lib.encode_record(*r) for r in recs]
+    blob = b"".join(encoded)
+    ends = np.cumsum([len(e) for e in encoded]).tolist()
+    for cut in range(len(blob) + 1):
+        out, good = wal_lib.read_records(blob[:cut])
+        n_complete = sum(1 for e in ends if e <= cut)
+        assert len(out) == n_complete
+        assert good == (ends[n_complete - 1] if n_complete else 0)
+
+
+def test_wal_codec_bitflip_stops_at_corruption():
+    """Flipping any single byte corrupts exactly one record's crc: every
+    record before it still decodes, nothing at or after it does."""
+    recs = _sample_records()
+    encoded = [wal_lib.encode_record(*r) for r in recs]
+    blob = bytearray(b"".join(encoded))
+    starts = np.concatenate([[0], np.cumsum([len(e) for e in encoded])])
+    for pos in range(0, len(blob), 7):   # stride keeps runtime sane
+        corrupt = bytes(blob[:pos]) + bytes([blob[pos] ^ 0xFF]) \
+            + bytes(blob[pos + 1:])
+        out, good = wal_lib.read_records(corrupt)
+        victim = int(np.searchsorted(starts, pos, side="right")) - 1
+        assert len(out) <= victim
+        assert good <= int(starts[victim])
+
+
+# ---------------------------------------------------------------------------
+# lifecycle: close / context manager / snapshot / restore
+# ---------------------------------------------------------------------------
+
+def _small_db(path, shards=1):
+    schema = tracy.tweet_schema(DIM)
+    db = Database(schema, LSMConfig(**STORE_KW), path=path, shards=shards)
+    data = tracy.TracyData(TRACY_CFG)
+    for _ in range(4):
+        pks, cols = data.batch(100)
+        db.table().put(pks, cols)
+    return db
+
+
+def test_close_idempotent_and_context_manager(tmp_path):
+    d = str(tmp_path / "db")
+    with _small_db(d) as db:
+        v = tracy.TracyData(TRACY_CFG).query_vec()
+        hq = q.HybridQuery(
+            ranks=[q.VectorRank("embedding", v, 1.0)], k=10)
+        before = _key(db.table().execute(hq)[0])
+    db.close()   # second close after __exit__: must be a no-op
+    db.close()
+    reopened = Database(path=d)
+    assert _key(reopened.table().execute(hq)[0]) == before
+    assert reopened.table().n_rows == 400
+    reopened.close()
+
+
+def test_database_reopen_rejects_schema(tmp_path):
+    d = str(tmp_path / "db")
+    _small_db(d).close()
+    with pytest.raises(ValueError):
+        Database(tracy.tweet_schema(DIM), path=d)
+    with pytest.raises(FileNotFoundError):
+        Database.restore(str(tmp_path / "nope"))
+
+
+def test_snapshot_restore_parity(tmp_path):
+    d, s = str(tmp_path / "db"), str(tmp_path / "snap")
+    db = _small_db(d, shards=2)
+    v = tracy.TracyData(TRACY_CFG).query_vec()
+    hq = q.HybridQuery(ranks=[q.VectorRank("embedding", v, 1.0)], k=10)
+    before = _key(db.table().execute(hq)[0])
+    db.snapshot(s)
+    db.close()
+    restored = Database.restore(s)
+    t = restored.table()
+    assert t.n_shards == 2 and t.n_rows == 400
+    assert _key(t.execute(hq)[0]) == before
+    # the restored database keeps journaling into the snapshot dir
+    pks, cols = tracy.TracyData(TRACY_CFG).batch(50)
+    t.put(np.asarray(pks, np.int64) + 400, cols)
+    restored.close()
+    again = Database(path=s)
+    assert again.table().n_rows == 450
+    again.close()
