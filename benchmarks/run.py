@@ -9,10 +9,13 @@ Prints ``name,us_per_call,derived`` CSV (assignment contract).
              mixed read/write, index merge-vs-rebuild at compaction
   mq_*     — batched execute_many vs sequential execute throughput
   durability_* — WAL ingest overhead, recovery replay, snapshot/restore
+  obs_*    — observability layer cost: tracing-off/on query overhead
 
 ``--scale`` shrinks/grows the workload (CPU container default 1.0).
 ``--json PATH`` additionally writes structured results for every section
-that exposes a ``bench_json(scale)`` hook (ingestion does).
+that exposes a ``bench_json(scale)`` hook (ingestion does), plus a
+``metrics`` key with the unified registry snapshot (histograms with
+p50/p95/p99, counters) accumulated across every section that ran.
 """
 import argparse
 import json
@@ -25,7 +28,7 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--only", default=None,
                     help="comma list: fig4,tab1,fig5,ingest,mq,sharded,"
-                         "durability")
+                         "durability,obs")
     ap.add_argument("--json", default=None,
                     help="write structured per-section results to PATH")
     args = ap.parse_args()
@@ -33,7 +36,8 @@ def main() -> None:
 
     from benchmarks import (continuous_bench, durability_bench,
                             dynamic_workload, hybrid_latency, ingestion,
-                            multi_query, pq_study, sharded_bench)
+                            multi_query, obs_overhead, pq_study,
+                            sharded_bench)
     sections = [
         ("tab1", hybrid_latency),
         ("fig4", dynamic_workload),
@@ -43,6 +47,7 @@ def main() -> None:
         ("mq", multi_query),
         ("sharded", sharded_bench),
         ("durability", durability_bench),
+        ("obs", obs_overhead),
     ]
     structured = {}
     print("name,us_per_call,derived")
@@ -61,6 +66,19 @@ def main() -> None:
         print(f"# section {name} took {time.time() - t0:.1f}s",
               file=sys.stderr)
     if args.json:
+        # unified telemetry accumulated across every section that ran:
+        # the process-wide registry (latency histograms with
+        # p50/p95/p99, engine counters) + this thread's kernel totals
+        from repro.kernels import ops as kops
+        from repro.obs import REGISTRY
+        kops.flush_registry_counters()
+        launches, byts, misses = kops.stats_snapshot()
+        structured["metrics"] = {
+            "registry": REGISTRY.snapshot(),
+            "kernels_thread": {"launches": launches,
+                               "bytes_to_host": byts,
+                               "shape_misses": misses},
+        }
         with open(args.json, "w") as f:
             json.dump(structured, f, indent=2, sort_keys=True)
             f.write("\n")

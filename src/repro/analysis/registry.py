@@ -44,7 +44,7 @@ def finding(rule_id: str, fm: FileModel, line: int, message: str) -> Finding:
 def _load_rules() -> None:
     # importing the rule modules populates RULES via the decorator
     from repro.analysis.rules import (durability, graph,  # noqa: F401
-                                      kernels, locks, parity, plans)
+                                      kernels, locks, obs, parity, plans)
 
 
 def run_rules(model: RepoModel, ids: Optional[List[str]] = None

@@ -1,0 +1,92 @@
+"""Observability rules (family: obs).
+
+The span tracer's accounting depends on spans closing exactly once:
+``obs_trace.span(...)`` returns a context manager whose ``__exit__``
+stamps the duration and attaches the node to its parent (or the ring
+buffer).  A span created outside a ``with`` never closes — it either
+leaks an open node under the contextvar or silently records nothing —
+so engine code must always open spans via ``with``.
+
+Durations must come from the monotonic ``time.perf_counter()`` clock:
+``time.time()`` is wall time, which NTP slews and steps, so a latency
+histogram fed from it can record negative or wildly wrong intervals.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.asthelpers import dotted_name, enclosing_function
+from repro.analysis.findings import Finding
+from repro.analysis.model import RepoModel
+from repro.analysis.registry import finding, rule
+
+
+@rule("obs/span-closed", "obs",
+      "trace spans in engine code must be opened via `with`")
+def span_closed(model: RepoModel) -> List[Finding]:
+    out: List[Finding] = []
+    for fm in model.scoped("core"):
+        parents = fm.parents()
+        for node in ast.walk(fm.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if name.split(".")[-1] != "span":
+                continue
+            parent = parents.get(node)
+            if isinstance(parent, ast.withitem) and \
+                    parent.context_expr is node:
+                continue
+            out.append(finding(
+                "obs/span-closed", fm, node.lineno,
+                f"`{name}(...)` outside a `with` statement — the span "
+                f"never closes, so its duration is never recorded and "
+                f"the open node can leak under the context variable"))
+    return out
+
+
+def _sub_operand_names(func: ast.AST) -> set:
+    """Names that appear as operands of a subtraction inside ``func`` —
+    the signature of a duration computation (``t1 - t0``)."""
+    names = set()
+    for n in ast.walk(func):
+        if isinstance(n, ast.BinOp) and isinstance(n.op, ast.Sub):
+            for side in (n.left, n.right):
+                if isinstance(side, ast.Name):
+                    names.add(side.id)
+        elif isinstance(n, ast.AugAssign) and isinstance(n.op, ast.Sub) \
+                and isinstance(n.target, ast.Name):
+            names.add(n.target.id)
+    return names
+
+
+@rule("obs/wall-clock-timing", "obs",
+      "durations in engine code must use time.perf_counter()")
+def wall_clock_timing(model: RepoModel) -> List[Finding]:
+    out: List[Finding] = []
+    for fm in model.scoped("core", "kernels"):
+        parents = fm.parents()
+        for node in ast.walk(fm.tree):
+            if not (isinstance(node, ast.Call)
+                    and dotted_name(node.func).endswith("time.time")):
+                continue
+            parent = parents.get(node)
+            in_sub = isinstance(parent, ast.BinOp) and \
+                isinstance(parent.op, ast.Sub)
+            assigned_for_sub = False
+            if isinstance(parent, ast.Assign) and \
+                    len(parent.targets) == 1 and \
+                    isinstance(parent.targets[0], ast.Name):
+                func = enclosing_function(fm, node)
+                if func is not None and parent.targets[0].id in \
+                        _sub_operand_names(func):
+                    assigned_for_sub = True
+            if not (in_sub or assigned_for_sub):
+                continue    # wall timestamps (log entries etc.) are fine
+            out.append(finding(
+                "obs/wall-clock-timing", fm, node.lineno,
+                "time.time() used to compute a duration — wall time "
+                "steps under NTP; use the monotonic "
+                "time.perf_counter() for intervals"))
+    return out

@@ -53,6 +53,8 @@ from repro.core.query import (And, AsyncQuery, GeoWithin,  # noqa: F401
                               VectorRange, VectorRank)
 from repro.core.types import (Column, ColumnType, IndexKind,  # noqa: F401
                               Schema)
+from repro.obs import REGISTRY, SLOW_LOG
+from repro.obs import analyze as obs_analyze
 
 __all__ = [
     "Database", "Table", "QueryBuilder", "Subscription",
@@ -149,10 +151,19 @@ class QueryBuilder:
         tables, a ``ShardedPlan`` (fan-out + merge) on sharded ones."""
         return self._table.executor.plan(self.build())
 
-    def explain(self) -> str:
+    def explain(self, analyze: bool = False
+                ) -> Union[str, obs_analyze.Analyzed]:
         """EXPLAIN text: plan summary + operator tree with cost
         estimates (``BitmapUnion`` with per-conjunct costs for OR;
-        ``ShardFanout(n=N)`` with per-shard subtrees when sharded)."""
+        ``ShardFanout(n=N)`` with per-shard subtrees when sharded).
+
+        ``analyze=True`` is EXPLAIN ANALYZE: the query executes under
+        forced tracing and every operator node is annotated with actual
+        time / rows / bytes plus estimated-vs-actual row drift.  Returns
+        an ``Analyzed`` (prints as the annotated tree; carries the
+        results, stats, and span tree)."""
+        if analyze:
+            return self._table.executor.explain_analyze(self.build())
         return self.plan().describe()
 
     def execute(self) -> Tuple[List[ResultRow], ExecStats]:
@@ -243,8 +254,26 @@ class Table:
                  for qq in queries]
         return self.executor.execute_many(built)
 
-    def explain(self, query: q.HybridQuery) -> str:
+    def explain(self, query: q.HybridQuery, analyze: bool = False
+                ) -> Union[str, obs_analyze.Analyzed]:
+        if analyze:
+            return self.executor.explain_analyze(query)
         return self.executor.plan(query).describe()
+
+    def metrics(self) -> Dict[str, Any]:
+        """This table's engine-level metrics: the store's counter dict
+        (per-shard dicts keyed by shard id when sharded), plus the
+        sharded executor's and continuous engine's counters when they
+        exist."""
+        out: Dict[str, Any] = {"store": dict(self.store.metrics)}
+        if isinstance(self.store, ShardRouter):
+            out["shards"] = {i: dict(sh.metrics)
+                             for i, sh in enumerate(self.store.shards)}
+        if isinstance(self.executor, ShardedExecutor):
+            out["executor"] = dict(self.executor.metrics)
+        if self._engine is not None:
+            out["continuous"] = dict(self._engine.metrics)
+        return out
 
     # --------------------------------------------------------- continuous
     @property
@@ -454,6 +483,28 @@ class Database:
         """Tick every table's continuous engine at virtual time ``now``."""
         return {name: t.advance(now) for name, t in self._tables.items()
                 if t._engine is not None}
+
+    # -------------------------------------------------------- observability
+    def metrics(self) -> Dict[str, Any]:
+        """Merged observability view: the process-wide registry snapshot
+        (counters / gauges / histograms with p50-p99) under
+        ``"registry"`` plus each table's engine-level dicts under
+        ``"tables"`` (per-shard dicts keyed by shard id when
+        sharded)."""
+        return {"registry": REGISTRY.snapshot(),
+                "tables": {name: t.metrics()
+                           for name, t in self._tables.items()}}
+
+    def metrics_text(self) -> str:
+        """The registry in Prometheus text exposition format (histogram
+        ``_bucket``/``_sum``/``_count`` series plus ``_p50``/``_p95``/
+        ``_p99`` gauges) — paste into a scrape endpoint as-is."""
+        return REGISTRY.prometheus_text()
+
+    def slow_queries(self) -> List[Dict[str, Any]]:
+        """Entries captured by the slow-query log (enable with
+        ``obs.SLOW_LOG.configure(threshold_s)``), newest last."""
+        return SLOW_LOG.snapshot()
 
     # ----------------------------------------------------------- durability
     def close(self) -> None:

@@ -23,6 +23,8 @@ from repro.core.executor import Executor
 from repro.core.views import rewrite as rw_lib
 from repro.core.views.maintenance import ViewMaintainer
 from repro.core.views.selection import build_candidates, knapsack_select
+from repro.obs import REGISTRY
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass
@@ -168,6 +170,7 @@ class ContinuousEngine:
         ``execute_many`` batch, amortizing per-segment scans and stacking
         their query vectors into batched kernel calls.
         """
+        adv0 = _time.perf_counter()
         due = []
         for rid, reg in self.registered.items():
             if isinstance(reg.decl, q.SyncQuery):
@@ -179,19 +182,23 @@ class ContinuousEngine:
                     due.append((rid, reg))
                     reg.dirty = False
         out: Dict[int, List] = {}
-        batched = [(rid, reg) for rid, reg in due
-                   if self._can_batch(rid, reg)]
-        for rid, reg in due:
-            if not self._can_batch(rid, reg):
-                out[rid] = self._run_one(rid, reg)
-        if batched:
-            t0 = _time.perf_counter()
-            many = self.executor.execute_many(
-                [reg.decl.query for _, reg in batched])
-            for (rid, reg), (res, _) in zip(batched, many):
-                out[rid] = res
-                self._finish_run(rid, reg, res, t0)
+        with obs_trace.span("advance", due=len(due)):
+            batched = [(rid, reg) for rid, reg in due
+                       if self._can_batch(rid, reg)]
+            for rid, reg in due:
+                if not self._can_batch(rid, reg):
+                    out[rid] = self._run_one(rid, reg)
+            if batched:
                 t0 = _time.perf_counter()
+                many = self.executor.execute_many(
+                    [reg.decl.query for _, reg in batched])
+                for (rid, reg), (res, _) in zip(batched, many):
+                    out[rid] = res
+                    self._finish_run(rid, reg, res, t0)
+                    t0 = _time.perf_counter()
+        REGISTRY.observe("continuous.advance_s",
+                         _time.perf_counter() - adv0)
+        REGISTRY.inc("continuous.advances")
         return out
 
     def snapshot_query(self, query: q.HybridQuery) -> Tuple[List, bool]:

@@ -14,6 +14,7 @@ model in benchmarks.
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -28,6 +29,9 @@ from repro.core.operators import (Candidates, ExecStats,  # noqa: F401
 from repro.core.optimizer import planner as planner_lib
 from repro.core.optimizer.stats import Catalog
 from repro.kernels import ops as kops
+from repro.obs import REGISTRY, SLOW_LOG
+from repro.obs import analyze as obs_analyze
+from repro.obs import trace as obs_trace
 
 
 def _charge_kernel_stats(stats_list, before) -> None:
@@ -64,9 +68,58 @@ class Executor:
                 ) -> Tuple[List[ResultRow], ExecStats]:
         return self.execute_many([query], plans=[plan])[0]
 
+    def explain_analyze(self, query: q.HybridQuery,
+                        plan: Optional[planner_lib.Plan] = None
+                        ) -> obs_analyze.Analyzed:
+        """EXPLAIN ANALYZE: execute the query under forced tracing and
+        annotate the plan's operator tree with actual rows / bytes /
+        time per node plus estimated-vs-actual row drift.  Results are
+        bitwise-identical to a plain ``execute`` — tracing observes the
+        pipeline, it never changes dispatch or arithmetic."""
+        plan = plan if plan is not None else self.plan(query)
+        with obs_trace.force_tracing():
+            with obs_trace.span("analyze") as root:
+                ((results, stats),) = self.execute_many([query],
+                                                        plans=[plan])
+        actuals = obs_analyze.actuals_from(root)
+        head = plan.describe().splitlines()[0]
+        # fresh tree against the live catalog (never the plan's cached
+        # root, which may have been built without cost estimates)
+        tree = ops.build_tree(plan, self.catalog)
+        text = head + " (analyzed)\n" + tree.explain(
+            1, annotate=obs_analyze.make_annotator(actuals))
+        return obs_analyze.Analyzed(text=text, results=results,
+                                    stats=stats, span=root,
+                                    actuals=actuals)
+
+    def _observe_query(self, n_queries: int, elapsed_s: float,
+                       out, sp) -> None:
+        """Facade-level telemetry for one ``execute_many`` call: the
+        query-latency histogram, throughput counters, and the slow-query
+        log (plan + span tree when tracing was on)."""
+        REGISTRY.observe("query.latency_s", elapsed_s)
+        REGISTRY.inc("query.count", n_queries)
+        kops.flush_registry_counters()
+        if SLOW_LOG.threshold_s is not None and out:
+            SLOW_LOG.maybe_record(
+                elapsed_s, out[0][1].plan,
+                span=sp if getattr(sp, "live", False) else None,
+                n_queries=n_queries)
+
     def execute_many(self, queries: List[q.HybridQuery],
                      plans: Optional[List[Optional[planner_lib.Plan]]] = None
                      ) -> List[Tuple[List[ResultRow], ExecStats]]:
+        t0 = time.perf_counter()
+        with obs_trace.span("query", n=len(queries)) as sp:
+            out = self._execute_many(queries, plans)
+        self._observe_query(len(queries), time.perf_counter() - t0,
+                            out, sp)
+        return out
+
+    def _execute_many(self, queries: List[q.HybridQuery],
+                      plans: Optional[
+                          List[Optional[planner_lib.Plan]]] = None
+                      ) -> List[Tuple[List[ResultRow], ExecStats]]:
         """Execute a batch of queries with shared per-segment scans.
 
         Queries whose plans are scan-based (full_scan, index_intersect,
@@ -178,7 +231,8 @@ class Executor:
             return self._exec_filter(query, plan, stats, pred_cache)
         if plan.kind == "nra":
             from repro.core.nra import nra_topk
-            return nra_topk(self.store, self.catalog, query, stats)
+            with obs_trace.span("operator:NRAMerge"):
+                return nra_topk(self.store, self.catalog, query, stats)
         if plan.kind == "postfilter_nn":
             return self._postfilter_nn(query, plan, stats, pred_cache)
         # prefilter / full-scan: filter then exact-rank survivors
@@ -197,30 +251,37 @@ class Executor:
         k = query.k
         inflate = 4
         cand = Candidates.empty()
-        while True:
-            parts: List[Candidates] = []
-            n_survivors = 0
-            for seg in self.store.segments:
-                idx = seg.indexes.get(rank.col)
-                if idx is None:
-                    continue
-                d, rows, br = idx.search(
-                    np.asarray(rank.q, np.float32), k * inflate)
-                stats.blocks_read += br
-                if not len(rows):
-                    continue
-                vals = {c: seg.columns[c][rows] for c in seg.columns}
-                keep = eval_expr_rows(vals, query.where)
-                stats.rows_scanned += len(rows)
-                n_survivors += int(keep.sum())
-                parts.append(Candidates(
-                    np.full(int(keep.sum()), seg.seg_id, np.int64),
-                    rows[keep].astype(np.int64),
-                    (d[keep] * rank.weight).astype(np.float32)))
-            cand = Candidates.concat(parts)
-            if n_survivors >= k or inflate >= 64:
-                break
-            inflate *= 4
+        with obs_trace.span("operator:IndexProbe", probe=rank.col) as sp:
+            while True:
+                parts: List[Candidates] = []
+                n_survivors = 0
+                for seg in self.store.segments:
+                    idx = seg.indexes.get(rank.col)
+                    if idx is None:
+                        continue
+                    d, rows, br = idx.search(
+                        np.asarray(rank.q, np.float32), k * inflate)
+                    stats.blocks_read += br
+                    if sp.live:
+                        sp.add("blocks", br)
+                    if not len(rows):
+                        continue
+                    vals = {c: seg.columns[c][rows] for c in seg.columns}
+                    keep = eval_expr_rows(vals, query.where)
+                    stats.rows_scanned += len(rows)
+                    if sp.live:
+                        sp.add("rows", len(rows))
+                    n_survivors += int(keep.sum())
+                    parts.append(Candidates(
+                        np.full(int(keep.sum()), seg.seg_id, np.int64),
+                        rows[keep].astype(np.int64),
+                        (d[keep] * rank.weight).astype(np.float32)))
+                cand = Candidates.concat(parts)
+                if n_survivors >= k or inflate >= 64:
+                    break
+                inflate *= 4
+            if sp.live:
+                sp.set(out_rows=len(cand.scores))
         ctx = PipelineContext(self.store, self.catalog, [query], [plan],
                               [stats], pred_cache)
         return ops.finish_candidates(ctx, [cand])[0]

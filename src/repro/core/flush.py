@@ -30,6 +30,7 @@ import threading
 from typing import List, Optional
 
 from repro.core.faults import InjectedCrash
+from repro.obs import REGISTRY
 
 
 class FlushScheduler:
@@ -68,12 +69,14 @@ class FlushScheduler:
                 self._cv.notify_all()
                 while len(store.sealed) > self.max_sealed:
                     store.metrics["stalls"] += 1
+                    REGISTRY.inc("lsm.stalls")
                     self._cv.wait(timeout=0.05)
         else:
             # deterministic backpressure: the writer pays one unit of
             # background work per put while compaction debt is high
             while len(store.sealed) > self.max_sealed:
                 store.metrics["stalls"] += 1
+                REGISTRY.inc("lsm.stalls")
                 if not self.step():
                     break
 

@@ -31,6 +31,8 @@ from repro.core import wal as wal_lib
 from repro.core.faults import NO_FAULTS, FaultInjector
 from repro.core.flush import FlushScheduler
 from repro.core.types import Column, ColumnType, Schema, validate_batch
+from repro.obs import REGISTRY
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass
@@ -291,6 +293,7 @@ class LSMStore:
             self._mt_epoch += 1
             self._mt_cache = None
             self.metrics["puts"] += len(pks)
+            REGISTRY.inc("lsm.puts", len(pks))
             if self._on_delta and isinstance(self.memtable, mt.MemTable):
                 # hand hooks the memtable's canonical numpy chunk
                 # (zero-copy, already validated) — never per-row dicts
@@ -324,6 +327,7 @@ class LSMStore:
             self._mt_cache = None
             self.metrics["deletes"] += len(live)
             self.metrics["noop_deletes"] += int(len(pks) - len(live))
+            REGISTRY.inc("lsm.deletes", len(live))
         self._notify_delta(live, None, deleted=True)
         self.scheduler.on_write()
 
@@ -387,6 +391,7 @@ class LSMStore:
             self._mt_epoch += 1
             self._mt_cache = None
             self.metrics["seals"] += 1
+            REGISTRY.inc("lsm.seals")
             if self.wal is not None:
                 # group-commit everything the sealed memtable holds and
                 # start a fresh file: WAL files align with flush units,
@@ -414,35 +419,46 @@ class LSMStore:
         with self._lock:
             mtab = self.sealed[0]
         t0 = time.perf_counter()
-        # build outside the lock: the sealed memtable is immutable (only
-        # the active one takes writes) and the segment is private until
-        # published, so index construction never blocks writers/readers
-        pk, seqno, tomb, cols = mtab.scan_arrays()
-        seg = seg_lib.Segment(self.schema, pk, seqno, tomb, cols, level=0)
-        self._build_indexes(seg)
-        self._quantize_segment(seg)
-        if self.storage is not None:
-            # the file must be durable BEFORE the manifest names it
-            # (durability/fsync-before-publish): save fsyncs + renames
-            seg_lib.save_segment(
-                seg, self.storage.segment_path(seg.seg_id), self.faults)
-            self.faults.crash("flush.before-publish")
-        with self._lock:
-            # atomic publish: readers see (old segments + sealed) or
-            # (new segment, sealed popped) — never the torn middle
-            pre_key = (self._seqno, tuple(s.seg_id for s in self.segments))
-            self.segments.append(seg)
-            self.sealed.pop(0)
-            self._mt_epoch += 1
-            self._mt_cache = None
-            self.global_index.on_new_segment(seg)
-            if vis_lib.extend_cache_on_flush(self, pre_key, seg, len(pk)):
-                self.metrics["vis_extends"] += 1
-            seg.sort_order = None      # one-shot; don't retain 8B/row
-            self.metrics["flushes"] += 1
-            self.metrics["flush_s"] += time.perf_counter() - t0
+        with obs_trace.span("flush") as fsp:
+            # build outside the lock: the sealed memtable is immutable
+            # (only the active one takes writes) and the segment is
+            # private until published, so index construction never
+            # blocks writers/readers
+            pk, seqno, tomb, cols = mtab.scan_arrays()
+            seg = seg_lib.Segment(self.schema, pk, seqno, tomb, cols,
+                                  level=0)
+            self._build_indexes(seg)
+            self._quantize_segment(seg)
             if self.storage is not None:
-                self._publish_manifest()
+                # the file must be durable BEFORE the manifest names it
+                # (durability/fsync-before-publish): save fsyncs + renames
+                seg_lib.save_segment(
+                    seg, self.storage.segment_path(seg.seg_id),
+                    self.faults)
+                self.faults.crash("flush.before-publish")
+            with self._lock:
+                # atomic publish: readers see (old segments + sealed) or
+                # (new segment, sealed popped) — never the torn middle
+                pre_key = (self._seqno,
+                           tuple(s.seg_id for s in self.segments))
+                self.segments.append(seg)
+                self.sealed.pop(0)
+                self._mt_epoch += 1
+                self._mt_cache = None
+                self.global_index.on_new_segment(seg)
+                if vis_lib.extend_cache_on_flush(self, pre_key, seg,
+                                                 len(pk)):
+                    self.metrics["vis_extends"] += 1
+                seg.sort_order = None  # one-shot; don't retain 8B/row
+                self.metrics["flushes"] += 1
+                dt = time.perf_counter() - t0
+                self.metrics["flush_s"] += dt
+                if self.storage is not None:
+                    self._publish_manifest()
+            REGISTRY.observe("lsm.flush_s", dt)
+            REGISTRY.inc("lsm.flushes")
+            if fsp.live:
+                fsp.set(rows=len(pk), seg_id=seg.seg_id)
         return seg
 
     def _build_indexes(self, seg: seg_lib.Segment) -> None:
@@ -535,41 +551,49 @@ class LSMStore:
             bottom = level + 1 >= self.cfg.max_levels or not any(
                 s.level > level for s in self.segments)
         t0 = time.perf_counter()
-        # merge + index maintenance outside the lock: inputs are immutable
-        # segments, the output is private until published below
-        merged, row_maps = seg_lib.merge_segments(
-            self.schema, tier, level + 1, drop_tombstones=bottom,
-            return_maps=True)
-        merged.sort_order = None       # identity by construction; drop it
-        if self.cfg.build_indexes:
-            self._merge_or_rebuild_indexes(tier, merged, row_maps)
-        if self.cfg.quantize_vectors:
-            self._merge_quantized(tier, merged, row_maps)
-        if self.storage is not None:
-            seg_lib.save_segment(
-                merged, self.storage.segment_path(merged.seg_id),
-                self.faults)
-            self.faults.crash("compact.before-publish")
-        with self._lock:
-            # single-assignment swap so concurrent readers iterating
-            # self.segments never observe a half-replaced tier
-            keep = [s for s in self.segments if s not in tier]
-            keep.append(merged)
-            self.segments = keep
-            for s in tier:
-                self.global_index.on_drop_segment(s.seg_id)
-            self.global_index.on_new_segment(merged)
-            self.metrics["compactions"] += 1
-            self.metrics["compact_s"] += time.perf_counter() - t0
+        with obs_trace.span("compact", level=level,
+                            n_inputs=len(tier)) as csp:
+            # merge + index maintenance outside the lock: inputs are
+            # immutable segments, the output is private until published
+            merged, row_maps = seg_lib.merge_segments(
+                self.schema, tier, level + 1, drop_tombstones=bottom,
+                return_maps=True)
+            merged.sort_order = None   # identity by construction; drop it
+            if self.cfg.build_indexes:
+                self._merge_or_rebuild_indexes(tier, merged, row_maps)
+            if self.cfg.quantize_vectors:
+                self._merge_quantized(tier, merged, row_maps)
             if self.storage is not None:
-                self._publish_manifest()
-                self.faults.crash("compact.after-publish")
-                # the swap is durable: the inputs are garbage now
+                seg_lib.save_segment(
+                    merged, self.storage.segment_path(merged.seg_id),
+                    self.faults)
+                self.faults.crash("compact.before-publish")
+            with self._lock:
+                # single-assignment swap so concurrent readers iterating
+                # self.segments never observe a half-replaced tier
+                keep = [s for s in self.segments if s not in tier]
+                keep.append(merged)
+                self.segments = keep
                 for s in tier:
-                    try:
-                        os.remove(self.storage.segment_path(s.seg_id))
-                    except OSError:
-                        pass
+                    self.global_index.on_drop_segment(s.seg_id)
+                self.global_index.on_new_segment(merged)
+                self.metrics["compactions"] += 1
+                dt = time.perf_counter() - t0
+                self.metrics["compact_s"] += dt
+                if self.storage is not None:
+                    self._publish_manifest()
+                    self.faults.crash("compact.after-publish")
+                    # the swap is durable: the inputs are garbage now
+                    for s in tier:
+                        try:
+                            os.remove(
+                                self.storage.segment_path(s.seg_id))
+                        except OSError:
+                            pass
+            REGISTRY.observe("lsm.compact_s", dt)
+            REGISTRY.inc("lsm.compactions")
+            if csp.live:
+                csp.set(out_rows=merged.n_rows)
         return merged
 
     def _merge_or_rebuild_indexes(self, tier, merged, row_maps) -> None:

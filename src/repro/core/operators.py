@@ -22,11 +22,13 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import time
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import query as q
+from repro.obs import trace as obs_trace
 from repro.core import visibility as vis_lib
 from repro.core.index.text import tokenize
 from repro.core.optimizer.cost import (C_FILTER_BLOCK, C_MERGE,
@@ -423,34 +425,99 @@ class PhysicalOp:
     name = "Op"
 
     def __init__(self, children: Sequence["PhysicalOp"] = (),
-                 detail: str = "", est_cost: float = 0.0):
+                 detail: str = "", est_cost: float = 0.0,
+                 est_rows: float = 0.0):
         self.children = list(children)
         self.detail = detail
         self.est_cost = est_cost
+        self.est_rows = est_rows
 
-    def explain(self, indent: int = 0) -> str:
+    def explain(self, indent: int = 0, annotate=None) -> str:
+        """EXPLAIN rendering; ``annotate`` is an optional callback
+        ``node -> suffix`` used by EXPLAIN ANALYZE to append actuals —
+        the cached plain rendering never passes one."""
         pad = "  " * indent
         head = f"{pad}-> {self.name}"
         if self.detail:
             head += f" [{self.detail}]"
         head += f" cost={self.est_cost:.1f}"
+        if annotate is not None:
+            head += annotate(self)
         lines = [head]
         for c in self.children:
-            lines.append(c.explain(indent + 1))
+            lines.append(c.explain(indent + 1, annotate))
         return "\n".join(lines)
 
     # -- execution interface (leaf sources / transforms override) --------
     def batches(self, ctx: PipelineContext
                 ) -> Iterator[Tuple[Any, np.ndarray]]:
-        """Yield (segment, mask (nq, n_rows) bool) columnar batches."""
+        """Yield (segment, mask (nq, n_rows) bool) columnar batches.
+        When tracing is on the drain is wrapped so each source records
+        one ``operator:<Name>`` span; the disabled path returns the raw
+        generator (zero per-batch overhead)."""
+        if not obs_trace.enabled():
+            return self._batches(ctx)
+        return _traced_batches(self, ctx)
+
+    def _batches(self, ctx: PipelineContext
+                 ) -> Iterator[Tuple[Any, np.ndarray]]:
         raise NotImplementedError(self.name)
+
+
+def _stat_sums(stats: List[ExecStats]) -> Tuple[float, int, int]:
+    blocks = 0.0
+    rows = nbytes = 0
+    for s in stats:
+        blocks += s.blocks_read
+        rows += s.rows_scanned
+        nbytes += s.bytes_scanned
+    return blocks, rows, nbytes
+
+
+def _traced_batches(op: PhysicalOp, ctx: PipelineContext
+                    ) -> Iterator[Tuple[Any, np.ndarray]]:
+    """Timed drain of a source generator: each ``next()`` window runs
+    only the source's own code (consumers work between yields), so the
+    ``ExecStats`` delta across the windows is exactly what this operator
+    charged.  Nested sources (FilterBitmap over IndexProbe) attribute
+    exclusively via a ctx-level accumulator of inner-drain charges; one
+    completed span is recorded at exhaustion."""
+    acc = getattr(ctx, "_drain_acc", None)
+    if acc is None:
+        acc = ctx._drain_acc = [0.0, 0, 0]
+    gen = op._batches(ctx)
+    total = 0.0
+    blocks = 0.0
+    rows = nbytes = out_rows = 0
+    while True:
+        pre = _stat_sums(ctx.stats)
+        in0 = (acc[0], acc[1], acc[2])
+        t0 = time.perf_counter()
+        try:
+            item = next(gen)
+        except StopIteration:
+            item = None
+        total += time.perf_counter() - t0
+        post = _stat_sums(ctx.stats)
+        blocks += (post[0] - pre[0]) - (acc[0] - in0[0])
+        rows += (post[1] - pre[1]) - (acc[1] - in0[1])
+        nbytes += (post[2] - pre[2]) - (acc[2] - in0[2])
+        if item is None:
+            break
+        out_rows += int(item[1].sum())
+        yield item
+    acc[0] += blocks
+    acc[1] += rows
+    acc[2] += nbytes
+    obs_trace.record_span("operator:" + op.name, total, rows=rows,
+                          bytes=nbytes, blocks=blocks, out_rows=out_rows)
 
 
 class SegmentScan(PhysicalOp):
     """Leaf: every row of every (unpruned) segment."""
     name = "SegmentScan"
 
-    def batches(self, ctx):
+    def _batches(self, ctx):
         for seg in ctx.segments:
             if seg.n_rows == 0:
                 continue
@@ -468,7 +535,7 @@ class IndexProbe(PhysicalOp):
     the index."""
     name = "IndexProbe"
 
-    def batches(self, ctx):
+    def _batches(self, ctx):
         for seg in ctx.segments:
             if seg.n_rows == 0:
                 continue
@@ -496,7 +563,7 @@ class FilterBitmap(PhysicalOp):
     keeps residual work O(survivors), never O(segment)."""
     name = "FilterBitmap"
 
-    def batches(self, ctx):
+    def _batches(self, ctx):
         for seg, mask in self.children[0].batches(ctx):
             rows = np.nonzero(mask.any(axis=0))[0]
             evaluated: Dict[Tuple, np.ndarray] = {}
@@ -553,7 +620,7 @@ class BitmapUnion(PhysicalOp):
             m &= residual_mask(pred, rows)
         return m
 
-    def batches(self, ctx):
+    def _batches(self, ctx):
         for seg in ctx.segments:
             if seg.n_rows == 0:
                 continue
@@ -601,6 +668,10 @@ class RankScore(PhysicalOp):
     name = "RankScore"
 
     def collect(self, ctx: PipelineContext) -> List[List[Candidates]]:
+        with obs_trace.span("operator:" + self.name) as sp:
+            return self._collect(ctx, sp)
+
+    def _collect(self, ctx: PipelineContext, sp) -> List[List[Candidates]]:
         out: List[List[Candidates]] = [[] for _ in range(ctx.nq)]
         rank_lists = [qq.ranks for qq in ctx.queries]
         rank_cols = {r.col for r in rank_lists[0]}
@@ -621,11 +692,16 @@ class RankScore(PhysicalOp):
                     continue
                 if not plan.indexed and not plan.residual \
                         and not plan.subplans:
-                    ctx.stats[qi].blocks_read += \
-                        seg.n_blocks * len(rank_lists[qi])
+                    blocks = seg.n_blocks * len(rank_lists[qi])
+                    ctx.stats[qi].blocks_read += blocks
+                    if sp.live:
+                        sp.add("blocks", blocks)
                 qrows = rows[sel]
                 ctx.stats[qi].rows_scanned += len(qrows)
                 ctx.stats[qi].bytes_scanned += len(qrows) * row_bytes
+                if sp.live:
+                    sp.add("rows", len(qrows))
+                    sp.add("bytes", len(qrows) * row_bytes)
                 out[qi].append(Candidates(
                     np.full(len(qrows), seg.seg_id, np.int64),
                     qrows.astype(np.int64), scores[qi][sel]))
@@ -679,17 +755,23 @@ class FusedScanTopK(PhysicalOp):
         separately as ``rerank_rows`` (x 4*d bytes, derivable)."""
         out: List[List[Candidates]] = [[] for _ in range(ctx.nq)]
         unfiltered_blocks = sum(s.n_blocks for s in segs)
+        sp = obs_trace.current_span()
         for qi, (qq, plan) in enumerate(zip(ctx.queries, ctx.plans)):
             # stats parity with the staged RankScore operator: candidate
             # rows ranked, and full scan blocks charged to filterless plans
             n_cand = int(mask_all[qi].sum())
             ctx.stats[qi].rows_scanned += n_cand
             ctx.stats[qi].bytes_scanned += n_cand * scan_row_bytes
+            if sp is not None:
+                sp.add("rows", n_cand)
+                sp.add("bytes", n_cand * scan_row_bytes)
             if rerank_rows is not None:
                 ctx.stats[qi].rerank_rows += rerank_rows[qi]
             if not plan.indexed and not plan.residual and not plan.subplans:
-                ctx.stats[qi].blocks_read += \
-                    unfiltered_blocks * len(qq.ranks)
+                blocks = unfiltered_blocks * len(qq.ranks)
+                ctx.stats[qi].blocks_read += blocks
+                if sp is not None:
+                    sp.add("blocks", blocks)
             keep = rows[qi] >= 0
             rr = rows[qi][keep]
             if not len(rr):
@@ -702,6 +784,10 @@ class FusedScanTopK(PhysicalOp):
         return out
 
     def collect(self, ctx: PipelineContext) -> List[List[Candidates]]:
+        with obs_trace.span("operator:" + self.name):
+            return self._collect(ctx)
+
+    def _collect(self, ctx: PipelineContext) -> List[List[Candidates]]:
         g = self._gather(ctx)
         if g is None:
             return [[] for _ in range(ctx.nq)]
@@ -728,7 +814,7 @@ class QuantizedScanTopK(FusedScanTopK):
     codebook mismatch falls back to the exact fused scan."""
     name = "QuantizedScanTopK"
 
-    def collect(self, ctx: PipelineContext) -> List[List[Candidates]]:
+    def _collect(self, ctx: PipelineContext) -> List[List[Candidates]]:
         from repro.core import segment as seg_lib
         g = self._gather(ctx)
         if g is None:
@@ -783,7 +869,7 @@ class GraphSearchTopK(FusedScanTopK):
     streaming dispatches charge."""
     name = "GraphSearchTopK"
 
-    def collect(self, ctx: PipelineContext) -> List[List[Candidates]]:
+    def _collect(self, ctx: PipelineContext) -> List[List[Candidates]]:
         from repro.core.index import graph as graph_lib
         g = self._gather(ctx)
         if g is None:
@@ -816,14 +902,20 @@ class GraphSearchTopK(FusedScanTopK):
             rerank_rows.append(len(rr))
         d2, rows = kops.fused_scan_topk(Q, packed.x, rmask, packed.pks, k)
         out: List[List[Candidates]] = [[] for _ in range(ctx.nq)]
+        sp = obs_trace.current_span()
         for qi, (qq, plan) in enumerate(zip(ctx.queries, ctx.plans)):
             n_gath = int(gathered[qi])
             ctx.stats[qi].rows_scanned += n_gath
             ctx.stats[qi].bytes_scanned += n_gath * fp_bytes
             ctx.stats[qi].rerank_rows += rerank_rows[qi]
+            if sp is not None:
+                sp.add("rows", n_gath)
+                sp.add("bytes", n_gath * fp_bytes)
             if not plan.indexed and not plan.residual and not plan.subplans:
-                ctx.stats[qi].blocks_read += \
-                    -(-n_gath // BLOCK_ROWS) * len(qq.ranks)
+                blocks = -(-n_gath // BLOCK_ROWS) * len(qq.ranks)
+                ctx.stats[qi].blocks_read += blocks
+                if sp is not None:
+                    sp.add("blocks", blocks)
             keep = rows[qi] >= 0
             rr = rows[qi][keep]
             if not len(rr):
@@ -843,15 +935,19 @@ class VisibilityResolve(PhysicalOp):
 
     def apply(self, ctx: PipelineContext,
               cands: List[Candidates]) -> List[Candidates]:
-        vis = ctx.visibility
-        if vis is None:                       # unique-pk fast path
-            return cands
-        out = []
-        for c in cands:
-            keep = vis.visible_mask(c.sids, c.rows)
-            out.append(Candidates(c.sids[keep], c.rows[keep],
-                                  c.scores[keep]))
-        return out
+        with obs_trace.span("operator:" + self.name) as sp:
+            vis = ctx.visibility
+            if vis is None:                   # unique-pk fast path
+                out = cands
+            else:
+                out = []
+                for c in cands:
+                    keep = vis.visible_mask(c.sids, c.rows)
+                    out.append(Candidates(c.sids[keep], c.rows[keep],
+                                          c.scores[keep]))
+            if sp.live:
+                sp.set(out_rows=sum(len(c.scores) for c in out))
+            return out
 
 
 class MemtableOverlay(PhysicalOp):
@@ -861,6 +957,14 @@ class MemtableOverlay(PhysicalOp):
 
     def apply(self, ctx: PipelineContext,
               cands: List[Candidates]) -> List[Candidates]:
+        with obs_trace.span("operator:" + self.name) as sp:
+            out = self._apply(ctx, cands)
+            if sp.live:
+                sp.set(out_rows=sum(len(c.scores) for c in out))
+            return out
+
+    def _apply(self, ctx: PipelineContext,
+               cands: List[Candidates]) -> List[Candidates]:
         pk, _, tomb, cols = ctx.memtable_arrays()
         if not len(pk):
             return cands
@@ -891,8 +995,12 @@ class TopKMerge(PhysicalOp):
 
     def finish(self, ctx: PipelineContext,
                cands: List[Candidates]) -> List[List[ResultRow]]:
-        return [materialize(ctx, qq, c, k=qq.k)
-                for qq, c in zip(ctx.queries, cands)]
+        with obs_trace.span("operator:" + self.name) as sp:
+            out = [materialize(ctx, qq, c, k=qq.k)
+                   for qq, c in zip(ctx.queries, cands)]
+            if sp.live:
+                sp.set(out_rows=sum(len(r) for r in out))
+            return out
 
 
 class NRAMerge(PhysicalOp):
@@ -1081,17 +1189,21 @@ def build_tree(plan, catalog=None) -> PhysicalOp:
         if pl_.indexed:
             est = sum(catalog.index_probe_blocks(p) for p in pl_.indexed) \
                 if have else 0.0
+            probe_rows = conjunct_passing(catalog, list(pl_.indexed)) \
+                if have else 0.0
             return IndexProbe(detail=_pred_detail(pl_.indexed),
-                              est_cost=est)
+                              est_cost=est, est_rows=probe_rows)
         return SegmentScan(detail=f"{n_segs} segments",
-                           est_cost=total_blocks * C_FILTER_BLOCK)
+                           est_cost=total_blocks * C_FILTER_BLOCK,
+                           est_rows=float(catalog.total_rows)
+                           if have else 0.0)
 
     def with_residual(node: PhysicalOp, pl_=plan) -> PhysicalOp:
         if not pl_.residual:
             return node
         est = conj_passing(pl_) * C_ROW_RESIDUAL * len(pl_.residual)
         return FilterBitmap([node], detail=_pred_detail(pl_.residual),
-                            est_cost=est)
+                            est_cost=est, est_rows=conj_passing(pl_))
 
     def finishers(node: PhysicalOp, with_topk: bool) -> PhysicalOp:
         node = VisibilityResolve([node], detail="lexsort winners")
@@ -1099,7 +1211,8 @@ def build_tree(plan, catalog=None) -> PhysicalOp:
                                est_cost=mt_rows / BLOCK_ROWS)
         if with_topk:
             node = TopKMerge([node], detail=f"k={plan.k}",
-                             est_cost=C_MERGE * n_segs)
+                             est_cost=C_MERGE * n_segs,
+                             est_rows=float(plan.k))
         return node
 
     def ranker(node: PhysicalOp) -> PhysicalOp:
@@ -1119,7 +1232,8 @@ def build_tree(plan, catalog=None) -> PhysicalOp:
                         f"-> exact re-rank k={plan.k}"),
                 est_cost=(plan.graph_hops * C_HOP
                           + gathered * C_GATHER_ROW
-                          + plan.graph_beam * C_RERANK_ROW))
+                          + plan.graph_beam * C_RERANK_ROW),
+                est_rows=gathered)
         if getattr(plan, "quantized", False):
             d = plan.ranks[0].q.shape[0] if plan.ranks else 1
             ratio = plan.pq_m / max(1.0, 4.0 * d)
@@ -1127,17 +1241,18 @@ def build_tree(plan, catalog=None) -> PhysicalOp:
                 [node],
                 detail=(f"adc pq m={plan.pq_m} refine={plan.refine} "
                         f"-> exact re-rank k={plan.k}"),
-                est_cost=est * ratio + plan.refine * plan.k * C_RERANK_ROW)
+                est_cost=est * ratio + plan.refine * plan.k * C_RERANK_ROW,
+                est_rows=passing)
         if plan.fused:
             return FusedScanTopK(
                 [node],
                 detail=(f"packed {n_segs} segments, k={plan.k}, "
                         f"1 launch (est_launches=1 vs {max(1, n_segs)} "
                         "staged)"),
-                est_cost=est)
+                est_cost=est, est_rows=passing)
         return RankScore(
             [node], detail=f"{len(plan.ranks)} modalities (batched)",
-            est_cost=est)
+            est_cost=est, est_rows=passing)
 
     kind = plan.kind
     if kind == "empty":
@@ -1147,7 +1262,8 @@ def build_tree(plan, catalog=None) -> PhysicalOp:
         kids = [with_residual(source(sp), sp) for sp in plan.subplans]
         node = BitmapUnion(kids,
                            detail=f"{len(kids)} conjuncts (OR-merge)",
-                           est_cost=C_MERGE * n_segs * max(1, len(kids)))
+                           est_cost=C_MERGE * n_segs * max(1, len(kids)),
+                           est_rows=passing)
         if kind == "union_nn":
             node = ranker(node)
         return finishers(node, with_topk=(kind == "union_nn"))

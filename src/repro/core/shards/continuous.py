@@ -20,6 +20,8 @@ from typing import Dict, List, Tuple
 
 from repro.core import query as q
 from repro.core.continuous import Registered
+from repro.obs import REGISTRY
+from repro.obs import trace as obs_trace
 
 
 class ShardedContinuousEngine:
@@ -73,16 +75,21 @@ class ShardedContinuousEngine:
         out: Dict[int, List] = {}
         if not due:
             return out
-        t0 = _time.perf_counter()
-        many = self.executor.execute_many(
-            [reg.decl.query for _, reg in due])
-        for (rid, reg), (res, _) in zip(due, many):
-            out[rid] = res
-            reg.runs += 1
-            reg.last_result = res
-            self.metrics["executions"] += 1
-            self.metrics["exec_time_s"] += _time.perf_counter() - t0
+        adv0 = _time.perf_counter()
+        with obs_trace.span("advance", due=len(due)):
             t0 = _time.perf_counter()
+            many = self.executor.execute_many(
+                [reg.decl.query for _, reg in due])
+            for (rid, reg), (res, _) in zip(due, many):
+                out[rid] = res
+                reg.runs += 1
+                reg.last_result = res
+                self.metrics["executions"] += 1
+                self.metrics["exec_time_s"] += _time.perf_counter() - t0
+                t0 = _time.perf_counter()
+        REGISTRY.observe("continuous.advance_s",
+                         _time.perf_counter() - adv0)
+        REGISTRY.inc("continuous.advances")
         return out
 
     def snapshot_query(self, query: q.HybridQuery) -> Tuple[List, bool]:

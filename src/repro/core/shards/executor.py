@@ -26,6 +26,7 @@ subtrees costed against each shard's own catalog.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -37,6 +38,9 @@ from repro.core.operators import ExecStats, ResultRow
 from repro.core.optimizer import planner as planner_lib
 from repro.core.optimizer.stats import Catalog
 from repro.kernels import ops as kops
+from repro.obs import REGISTRY, SLOW_LOG
+from repro.obs import analyze as obs_analyze
+from repro.obs import trace as obs_trace
 
 
 class _MergedGlobalIndex:
@@ -166,6 +170,9 @@ class ShardedExecutor:
         self.store = store                       # ShardRouter
         self.executors = [Executor(sh) for sh in store.shards]
         self.catalog = Catalog(_MergedStoreView(store))
+        # facade-visible read-path counters (Database.metrics())
+        self.metrics = {"queries": 0, "batches": 0, "merges": 0,
+                        "merge_rows": 0, "exec_time_s": 0.0}
 
     @property
     def n_shards(self) -> int:
@@ -188,16 +195,12 @@ class ShardedExecutor:
             plan.operator_tree(self.catalog)
         return plan
 
-    def describe(self, plan: planner_lib.Plan) -> str:
-        """EXPLAIN with the sharded dataflow: summary line, the combine
-        operator (device top-k merge / pk-disjoint concat), and a
-        ``ShardFanout(n=N)`` node holding the per-shard operator subtrees
-        costed against each shard's own catalog.  Rendered once per plan
-        object (plans are immutable after planning), so executing a
-        query doesn't rebuild N subtrees on every call."""
-        cached = getattr(plan, "_sharded_describe", None)
-        if cached is not None:
-            return cached
+    def _fanout_tree(self, plan: planner_lib.Plan) -> ops.PhysicalOp:
+        """The sharded EXPLAIN structure: the combine operator (device
+        top-k merge / pk-disjoint concat) over a ``ShardFanout(n=N)``
+        node holding per-shard operator subtrees costed against each
+        shard's own catalog.  Shared by ``describe`` and EXPLAIN
+        ANALYZE's annotated rendering."""
         kids = []
         for i, (sh, ex) in enumerate(zip(self.store.shards,
                                          self.executors)):
@@ -218,9 +221,22 @@ class ShardedExecutor:
             root = ops.CrossShardTopKMerge(
                 [fan], detail=(f"k={plan.k} device merge, "
                                f"<={n}*{plan.k} rows to host"),
-                est_cost=float(n * max(1, plan.k)))
+                est_cost=float(n * max(1, plan.k)),
+                est_rows=float(n * max(1, plan.k)))
         else:
             root = ops.ShardConcat([fan], detail="pk-disjoint concat")
+        return root
+
+    def describe(self, plan: planner_lib.Plan) -> str:
+        """EXPLAIN with the sharded dataflow (see ``_fanout_tree``).
+        Rendered once per plan object (plans are immutable after
+        planning), so executing a query doesn't rebuild N subtrees on
+        every call."""
+        cached = getattr(plan, "_sharded_describe", None)
+        if cached is not None:
+            return cached
+        n = self.n_shards
+        root = self._fanout_tree(plan)
         if plan.graph:
             disp = (f" dispatch=graph(R={plan.graph_r}, "
                     f"beam={plan.graph_beam}, hops={plan.graph_hops})")
@@ -241,9 +257,55 @@ class ShardedExecutor:
                 ) -> Tuple[List[ResultRow], ExecStats]:
         return self.execute_many([query], plans=[plan])[0]
 
+    def explain_analyze(self, query: q.HybridQuery, plan=None
+                        ) -> obs_analyze.Analyzed:
+        """EXPLAIN ANALYZE across the fan-out: executes under forced
+        tracing, then annotates the combine/fanout tree — each ``Shard``
+        subtree reads the actuals captured under that shard's ``shard``
+        span, so per-shard drift is visible node by node."""
+        if isinstance(plan, ShardedPlan):
+            logical = plan.logical
+        elif plan is not None:
+            logical = plan
+        else:
+            logical = self._plan_logical(query)
+        with obs_trace.force_tracing():
+            with obs_trace.span("analyze") as root:
+                ((results, stats),) = self.execute_many([query],
+                                                        plans=[logical])
+        actuals = obs_analyze.actuals_from(root)
+        per_shard = obs_analyze.shard_actuals(root)
+        head = self.describe(logical).splitlines()[0]
+        tree = self._fanout_tree(logical)
+        text = head + " (analyzed)\n" + tree.explain(
+            1, annotate=obs_analyze.make_annotator(actuals, per_shard))
+        return obs_analyze.Analyzed(text=text, results=results,
+                                    stats=stats, span=root,
+                                    actuals=actuals, per_shard=per_shard)
+
     def execute_many(self, queries: Sequence[q.HybridQuery],
                      plans: Optional[Sequence] = None
                      ) -> List[Tuple[List[ResultRow], ExecStats]]:
+        t0 = time.perf_counter()
+        with obs_trace.span("query", n=len(queries),
+                            shards=self.n_shards) as sp:
+            out = self._execute_many(queries, plans)
+        elapsed = time.perf_counter() - t0
+        self.metrics["queries"] += len(queries)
+        self.metrics["batches"] += 1
+        self.metrics["exec_time_s"] += elapsed
+        REGISTRY.observe("query.latency_s", elapsed)
+        REGISTRY.inc("query.count", len(queries))
+        if SLOW_LOG.threshold_s is not None and out:
+            SLOW_LOG.maybe_record(
+                elapsed, out[0][1].plan,
+                span=sp if getattr(sp, "live", False) else None,
+                n_queries=len(queries), shards=self.n_shards)
+        return out
+
+    def _execute_many(self, queries: Sequence[q.HybridQuery],
+                      plans: Optional[Sequence] = None
+                      ) -> List[Tuple[List[ResultRow], ExecStats]]:
         queries = list(queries)
         given = list(plans) if plans is not None else [None] * len(queries)
         logical: List[planner_lib.Plan] = []
@@ -270,9 +332,17 @@ class ShardedExecutor:
 
         # scatter: every shard executes the whole batch under the SAME
         # logical plans (per-shard executors share this thread, so each
-        # shard's kernel-dispatch delta lands in its own ExecStats)
-        per_shard = [ex.execute_many(queries, plans=list(logical))
-                     for ex in self.executors]
+        # shard's kernel-dispatch delta lands in its own ExecStats).
+        # Calling the shard executors' inner entry point keeps shard
+        # sub-batches out of the facade's query-latency histogram; the
+        # per-shard spans scope EXPLAIN ANALYZE's per-shard actuals.
+        with obs_trace.span("operator:ShardFanout",
+                            n=len(self.executors)):
+            per_shard = []
+            for i, ex in enumerate(self.executors):
+                with obs_trace.span("shard", shard=i):
+                    per_shard.append(
+                        ex._execute_many(queries, plans=list(logical)))
 
         # gather: aggregate per-shard ExecStats into one per query
         n = self.n_shards
@@ -304,13 +374,22 @@ class ShardedExecutor:
             if qq.is_nn and plan.kind != "empty":
                 nn_groups.setdefault(qq.k, []).append(i)
             else:
-                results[i] = self._concat_filter(
-                    [per_shard[s][i][0] for s in range(n)])
+                with obs_trace.span("operator:ShardConcat") as csp:
+                    results[i] = self._concat_filter(
+                        [per_shard[s][i][0] for s in range(n)])
+                    if csp.live:
+                        csp.set(out_rows=len(results[i]))
         for k, idxs in nn_groups.items():
             before = kops.stats_snapshot()
-            merged = self._merge_topk(
-                [[per_shard[s][i][0] for s in range(n)] for i in idxs], k)
+            with obs_trace.span("operator:CrossShardTopKMerge",
+                                k=k) as msp:
+                merged = self._merge_topk(
+                    [[per_shard[s][i][0] for s in range(n)]
+                     for i in idxs], k)
+                if msp.live:
+                    msp.set(out_rows=sum(len(m) for m in merged))
             launches, byts, misses = kops.stats_snapshot()
+            self.metrics["merges"] += 1
             for i, rows in zip(idxs, merged):
                 results[i] = rows
                 st = stats_all[i]
@@ -319,6 +398,7 @@ class ShardedExecutor:
                 st.jit_shape_misses += misses - before[2]
                 st.merge_rows = sum(len(per_shard[s][i][0])
                                     for s in range(n))
+                self.metrics["merge_rows"] += st.merge_rows
         return list(zip(results, stats_all))
 
     # ------------------------------------------------------------ combine

@@ -37,6 +37,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import struct
+import time
 import zlib
 from typing import Dict, Iterator, List, Optional, Tuple
 
@@ -44,6 +45,7 @@ import numpy as np
 
 from repro.core.faults import NO_FAULTS, FaultInjector
 from repro.core.types import ColumnType, Schema
+from repro.obs import REGISTRY
 
 MAGIC = b"AWR1"
 _HEADER = struct.Struct("<4sII")          # magic, crc32, body_len
@@ -280,11 +282,14 @@ class WriteAheadLog:
         advance the acknowledgment frontier."""
         if self._f is None or self._pending == 0:
             return
+        t0 = time.perf_counter()
         self._f.flush()
         self.faults.crash("wal.commit")
         os.fdatasync(self._f.fileno())
         self.durable_seqno = max(self.durable_seqno, self._pending_seqno)
         self._pending = 0
+        REGISTRY.observe("wal.fsync_s", time.perf_counter() - t0)
+        REGISTRY.inc("wal.commits")
 
     def sync(self) -> None:
         """Force a commit (seal/flush/close call this: everything

@@ -28,6 +28,7 @@ from repro.kernels import pq_adc as pq_kernel
 from repro.kernels import quantized_scan as qs_kernel
 from repro.kernels import ref
 from repro.kernels import topk_merge as tk_kernel
+from repro.obs import REGISTRY
 
 # global backend switch (tests flip it); env override for benchmarks
 USE_PALLAS = os.environ.get("REPRO_USE_PALLAS", "0") == "1"
@@ -59,6 +60,12 @@ class KernelStats:
     launches: int = 0
     bytes_to_host: int = 0
     shape_misses: int = 0
+    # high-water marks already published to the metrics registry; the
+    # per-dispatch mirror batches (see flush_registry_counters) so the
+    # hot path pays an int compare instead of a Counter lock
+    reg_launches: int = 0
+    reg_bytes: int = 0
+    reg_misses: int = 0
 
 
 _tls = threading.local()
@@ -82,12 +89,53 @@ def stats_snapshot() -> Tuple[int, int, int]:
     return (s.launches, s.bytes_to_host, s.shape_misses)
 
 
+_reg_counters = None
+_reg_generation = -1
+
+
+def _registry_counters():
+    """Process-wide mirrors of the per-thread counters in the metrics
+    registry.  Object refs are cached (re-fetched only when
+    ``REGISTRY.reset()`` bumps its generation), so the per-dispatch
+    cost is an int compare plus three ``Counter.inc`` calls."""
+    global _reg_counters, _reg_generation
+    if _reg_counters is None or _reg_generation != REGISTRY.generation:
+        _reg_generation = REGISTRY.generation
+        _reg_counters = (REGISTRY.counter("kernels.launches"),
+                         REGISTRY.counter("kernels.bytes_to_host"),
+                         REGISTRY.counter("kernels.jit_shape_misses"))
+    return _reg_counters
+
+
+REG_FLUSH_EVERY = 64    # dispatches between registry-mirror flushes
+
+
+def flush_registry_counters() -> None:
+    """Publish the calling thread's pending dispatch deltas to the
+    metrics registry.  Runs every ``REG_FLUSH_EVERY`` dispatches and at
+    query-batch boundaries (``Executor._observe_query``), keeping the
+    registry's Counter lock off the per-dispatch path."""
+    s = thread_stats()
+    launches, byts, misses = _registry_counters()
+    if s.launches != s.reg_launches:
+        launches.inc(s.launches - s.reg_launches)
+        s.reg_launches = s.launches
+    if s.bytes_to_host != s.reg_bytes:
+        byts.inc(s.bytes_to_host - s.reg_bytes)
+        s.reg_bytes = s.bytes_to_host
+    if s.shape_misses != s.reg_misses:
+        misses.inc(s.shape_misses - s.reg_misses)
+        s.reg_misses = s.shape_misses
+
+
 def _dispatched(out_bytes: int, tag: str = None, shape: Tuple = ()) -> None:
     """Record one op dispatch; with a ``tag`` also track the jit shape
     cache (host-path calls pass no tag — numpy has no shape cache)."""
     s = thread_stats()
     s.launches += 1
     s.bytes_to_host += int(out_bytes)
+    if s.launches - s.reg_launches >= REG_FLUSH_EVERY:
+        flush_registry_counters()
     if tag is not None:
         key = (tag,) + tuple(shape)
         with _seen_lock:

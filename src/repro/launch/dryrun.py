@@ -224,7 +224,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              verbose: bool = True) -> CellResult:
     mesh_name = "2x16x16" if multi_pod else "16x16"
-    t0 = time.time()
+    t0 = time.perf_counter()
     try:
         compiled, mesh, (cfg, shape) = lower_cell(arch, shape_name, multi_pod)
     except ValueError as e:
@@ -236,7 +236,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     except Exception:
         return CellResult(arch, shape_name, mesh_name, "error",
                           error=traceback.format_exc()[-2000:])
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
 
     ma = compiled.memory_analysis()
     per_dev = 0.0

@@ -1,0 +1,19 @@
+"""Known-bad span usage: the flush span is created but never entered —
+``span()`` returns a context manager, so without ``with`` the span's
+``__exit__`` never runs, its duration is never recorded, and the node
+leaks.  The good path below shows the required form."""
+from repro.obs import trace as obs_trace
+
+
+def flush_bad(store):
+    sp = obs_trace.span("flush", rows=len(store.sealed))
+    seg = store.build_segment()
+    sp.set(seg_id=seg.seg_id)
+    return seg
+
+
+def flush_good(store):
+    with obs_trace.span("flush", rows=len(store.sealed)) as sp:
+        seg = store.build_segment()
+        sp.set(seg_id=seg.seg_id)
+    return seg

@@ -1,0 +1,24 @@
+"""Known-bad duration measurement: ``time.time()`` is wall-clock (NTP
+can step it mid-interval), so the flush duration below can come out
+negative or wildly wrong.  Timestamps that are never subtracted (the
+log entry) and monotonic ``perf_counter`` intervals are fine."""
+import time
+
+
+def flush_timed(store):
+    t0 = store.last_flush_ts
+    seg = store.flush()
+    store.metrics["flush_s"] += time.time() - t0
+    return seg
+
+
+def log_entry(event):
+    # a wall timestamp, never subtracted: legitimate time.time() use
+    return {"ts": time.time(), "event": event}
+
+
+def flush_timed_good(store):
+    t0 = time.perf_counter()
+    seg = store.flush()
+    store.metrics["flush_s"] += time.perf_counter() - t0
+    return seg

@@ -35,6 +35,8 @@ CORPUS = [
     ("kind-dispatch", "plan/kind-dispatch"),
     ("neighbor-pad-guard", "graph/neighbor-pad-guard"),
     ("fsync-before-publish", "durability/fsync-before-publish"),
+    ("obs-span-closed", "obs/span-closed"),
+    ("obs-wall-clock-timing", "obs/wall-clock-timing"),
     # one known-bad graph kernel, two existing contracts it breaks
     ("graph-bad-kernel", "parity/twin-kernel"),
     ("graph-bad-kernel", "parity/raw-score-sort"),
@@ -43,10 +45,10 @@ CORPUS = [
 
 def test_registry_has_all_families():
     rules = all_rules()
-    assert len(rules) >= 8
+    assert len(rules) >= 10
     families = {r.family for r in rules.values()}
     assert {"parity", "locks", "kernel", "plan", "graph",
-            "durability"} <= families
+            "durability", "obs"} <= families
 
 
 @pytest.mark.parametrize("fixture,rule_id", CORPUS,
